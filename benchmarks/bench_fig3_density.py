@@ -1,0 +1,32 @@
+"""Paper Fig. 3: SRAM density grows with D_m as multiplier/peripheral area is
+amortized — for both the digital and the analog macro."""
+
+from repro.core import a_imc_macro, d_imc_macro
+
+
+def run() -> list[dict]:
+    rows = []
+    for macro in (d_imc_macro(), a_imc_macro()):
+        for d_m in (1, 2, 4, 8, 16, 32, 64, 128):
+            area = macro.macro_area_mm2(d_m)
+            kbytes = macro.plane * d_m * macro.weight_bits / 8 / 1024
+            rows.append({
+                "name": f"fig3/{macro.name}/Dm{d_m}",
+                "D_m": d_m,
+                "area_mm2": round(area, 4),
+                "density_kB_per_mm2": round(kbytes / area, 1),
+            })
+    return rows
+
+
+def check(rows: list[dict]) -> None:
+    """Density must increase monotonically with D_m (the paper's claim)."""
+    for name in ("D-IMC-22nm", "A-IMC-28nm"):
+        dens = [r["density_kB_per_mm2"] for r in rows if name in r["name"]]
+        assert all(a < b for a, b in zip(dens, dens[1:])), \
+            f"{name}: density not monotone: {dens}"
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,63 @@
+"""Paper Fig. 8 + §4.1: stacked / flattened / packed mapping comparison on
+MLPerf Tiny, on the D-IMC baseline (D_o x D_i = 256 x 16, D_h = 1).
+
+Reports, per workload:
+  * minimum required D_m per mapping (the §4.1 memory-utilization metric),
+  * EDP at the packed method's D_m budget (baselines spill to DRAM there),
+  * the EDP improvement ratio (paper claims 10-100x for weight-dominant nets).
+"""
+
+from repro.core import (d_imc, flattened_plan, mlperf_tiny_suite, pack,
+                        plan_cost, stacked_plan)
+
+
+def run() -> list[dict]:
+    rows = []
+    for wl in mlperf_tiny_suite():
+        budget = pack(wl, d_imc(1, 1), bounded=False).min_D_m
+        arch = d_imc(1, budget)
+        plans = {
+            "packed": pack(wl, arch, bounded=True),
+            "stacked": stacked_plan(wl, arch, bounded=True),
+            "flattened": flattened_plan(wl, arch, bounded=True),
+        }
+        min_dm = {
+            "packed": budget,
+            "stacked": stacked_plan(wl, d_imc(1, 1), bounded=False).min_D_m,
+            "flattened": flattened_plan(wl, d_imc(1, 1), bounded=False).min_D_m,
+        }
+        edp = {m: plan_cost(p).edp_pj_s for m, p in plans.items()}
+        for m in ("packed", "stacked", "flattened"):
+            rep = plan_cost(plans[m])
+            rows.append({
+                "name": f"fig8/{wl.name}/{m}",
+                "min_D_m": min_dm[m],
+                "EDP_pJs": round(edp[m], 6),
+                "EDP_vs_packed": round(edp[m] / edp["packed"], 2),
+                "E_wload_uJ": round(rep.e_weight_pj * 1e-6, 4),
+                "lat_us": round(rep.latency_ns * 1e-3, 2),
+                "streamed": len(plans[m].streamed_layers),
+                "folds": sum(t.folds for t in plans[m].tiles.values()),
+            })
+    return rows
+
+
+def check(rows: list[dict]) -> None:
+    by_wl: dict[str, dict[str, dict]] = {}
+    for r in rows:
+        _, wl, m = r["name"].split("/")
+        by_wl.setdefault(wl, {})[m] = r
+    best_ratio = 0.0
+    for wl, ms in by_wl.items():
+        # packed needs the least memory ...
+        assert ms["packed"]["min_D_m"] <= ms["stacked"]["min_D_m"], wl
+        assert ms["packed"]["min_D_m"] <= ms["flattened"]["min_D_m"], wl
+        # ... and wins EDP at its own budget.
+        assert ms["packed"]["EDP_pJs"] <= ms["stacked"]["EDP_pJs"], wl
+        best_ratio = max(best_ratio, ms["stacked"]["EDP_vs_packed"])
+    assert best_ratio >= 10.0, f"paper claims 10-100x, best was {best_ratio}"
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,82 @@
+"""Paper Fig. 9: EDP vs area trade-off, sweeping (D_h, D_m) on both silicon
+baselines (D-IMC, A-IMC) across the MLPerf Tiny workloads.
+
+Three regimes, matching the paper's traces:
+  * blue   — D_h in {1,2,4}, D_m=1: weight reloading from DRAM dominates; the
+             extra macros barely move EDP.
+  * yellow — D_m grown (packed mapping) until the network fits: reload cost
+             erased for a fraction of a mm^2.
+  * purple — D_m=1 but D_h grown until everything fits spatially: no folding,
+             marginal EDP gain over packed, at >1-2x the area.
+"""
+
+import math
+
+from repro.core import a_imc, d_imc, mlperf_tiny_suite, pack, plan_cost
+
+
+def _fit_dm(wl, mk, d_h: int) -> int:
+    """Smallest power-of-two D_m (packed mapping) with nothing streamed."""
+    for dm in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):
+        if not pack(wl, mk(d_h, dm), bounded=True).streamed_layers:
+            return dm
+    return 1024
+
+
+def _fit_dh(wl, mk) -> int:
+    """Smallest power-of-two D_h at D_m=1 with nothing streamed."""
+    for dh in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):
+        if not pack(wl, mk(dh, 1), bounded=True).streamed_layers:
+            return dh
+    return 1024
+
+
+def run() -> list[dict]:
+    rows = []
+    for wl in mlperf_tiny_suite():
+        for mk, mkname in ((d_imc, "D-IMC"), (a_imc, "A-IMC")):
+            # blue trace: D_h sweep at D_m=1
+            for dh in (1, 2, 4):
+                rows.append(_row(wl, mk(dh, 1), mkname, "dm1"))
+            # yellow trace: packed, D_m grown to fit, same D_h sweep
+            for dh in (1, 2, 4):
+                dm = _fit_dm(wl, mk, dh)
+                rows.append(_row(wl, mk(dh, dm), mkname, "packed_fit"))
+            # purple trace: D_m=1, D_h grown to fit everything spatially
+            dh = _fit_dh(wl, mk)
+            rows.append(_row(wl, mk(dh, 1), mkname, "dh_fit"))
+    return rows
+
+
+def _row(wl, arch, mkname: str, trace: str) -> dict:
+    rep = plan_cost(pack(wl, arch, bounded=True))
+    return {
+        "name": f"fig9/{wl.name}/{mkname}/{trace}/Dh{arch.D_h}Dm{arch.D_m}",
+        "E_mac_uJ": round(rep.e_mac_pj * 1e-6, 5),
+        "E_act_uJ": round(rep.e_act_pj * 1e-6, 5),
+        "E_wload_uJ": round(rep.e_weight_pj * 1e-6, 5),
+        "lat_us": round(rep.latency_ns * 1e-3, 3),
+        "EDP_pJs": round(rep.edp_pj_s, 6),
+        "area_mm2": round(rep.area_mm2, 4),
+    }
+
+
+def check(rows: list[dict]) -> None:
+    for wl in ("resnet8", "ds_cnn", "mobilenet_v1_025", "autoencoder"):
+        sel = [r for r in rows if f"/{wl}/" in r["name"] and "D-IMC" in r["name"]]
+        blue1 = next(r for r in sel if r["name"].endswith("dm1/Dh1Dm1"))
+        yellow = [r for r in sel if "/packed_fit/" in r["name"]]
+        purple = next(r for r in sel if "/dh_fit/" in r["name"])
+        # packed-fit erases the DRAM weight-loading term entirely ...
+        assert all(r["E_wload_uJ"] == 0 for r in yellow), wl
+        # ... and beats the D_m=1 starting point on EDP.
+        y1 = next(r for r in yellow if "Dh1" in r["name"])
+        if blue1["E_wload_uJ"] > 0:
+            assert y1["EDP_pJs"] < blue1["EDP_pJs"], wl
+        # the all-spatial (purple) point costs more area than packed-fit.
+        assert purple["area_mm2"] >= y1["area_mm2"], wl
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,60 @@
+"""The paper's packer applied to the assigned LM architectures.
+
+Flattens each arch's transformer block into IMC LayerSpecs (decode-shape
+MVMs) and packs them into a multi-macro D-IMC fabric: minimum D_m,
+memory density, spatial utilization, and EDP vs the stacked baseline.
+This is the §4.1 study re-run on the 10-arch pool — showing where the
+packing wins (small/unaligned tensors: whisper, rwkv mixers) and where
+it coincides with the baseline (large aligned dense layers).
+"""
+
+from __future__ import annotations
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import d_imc, lm_workload, pack, plan_cost, stacked_plan
+
+
+def _case(arch: str, fine: bool) -> dict:
+    cfg = get_config(arch)
+    wl = lm_workload(cfg, seq_len=1, fine=fine)     # decode-shape MVMs
+    fabric = d_imc(16, 1)                           # 16 macros, sweep D_m
+    need_packed = pack(wl, fabric, bounded=False).min_D_m
+    need_stacked = stacked_plan(wl, fabric, bounded=False).min_D_m
+    arch_b = d_imc(16, need_packed)
+    packed = pack(wl, arch_b, bounded=True)
+    stacked = stacked_plan(wl, arch_b, bounded=True)
+    rp, rs = plan_cost(packed), plan_cost(stacked)
+    u = packed.utilization_summary()
+    return {
+        "name": f"lm_packing/{arch}/{'fine' if fine else 'block'}",
+        "layers": len(wl.layers),
+        "min_D_m_packed": need_packed,
+        "min_D_m_stacked": need_stacked,
+        "dm_saving": round(need_stacked / max(need_packed, 1), 2),
+        "memory_density": round(u["memory_density"], 3),
+        "edp_packed_pJs": round(rp.edp_pj_s, 4),
+        "edp_stacked_pJs": round(rs.edp_pj_s, 4),
+        "edp_ratio": round(rs.edp_pj_s / max(rp.edp_pj_s, 1e-12), 2),
+    }
+
+
+def run() -> list[dict]:
+    rows = []
+    for arch in sorted(ARCH_IDS):
+        rows.append(_case(arch, fine=False))
+        rows.append(_case(arch, fine=True))
+    return rows
+
+
+def check(rows):
+    for r in rows:
+        assert r["min_D_m_packed"] <= r["min_D_m_stacked"], r["name"]
+        assert r["edp_ratio"] >= 0.99, r["name"]
+    # DESIGN.md §4's prediction, validated quantitatively: block-granular
+    # dense LM layers fill the D_i x D_o plane, so packing coincides with
+    # stacking there; the wins appear at fine (per-head / mixer / MLA)
+    # granularity on the ragged-shape families.
+    wins = [r["name"] for r in rows if r["name"].endswith("/fine")
+            and r["min_D_m_packed"] < r["min_D_m_stacked"]]
+    assert any("rwkv" in w or "whisper" in w or "deepseek" in w
+               for w in wins), f"expected ragged-family wins, got {wins}"

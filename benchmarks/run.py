@@ -1,0 +1,66 @@
+"""Benchmark harness: one module per paper table/figure (+ TPU-side benches).
+
+Prints ``name,us_per_call,derived`` CSV per the repo convention: ``name`` is
+the benchmark row id, ``us_per_call`` the harness wall time spent producing
+that row, ``derived`` the row's headline metric. Each bench module exposes
+``run() -> list[dict]`` and optionally ``check(rows)`` asserting the paper's
+qualitative claims hold.
+"""
+
+from __future__ import annotations
+
+import importlib
+import json
+import pathlib
+import sys
+import time
+
+BENCHES = [
+    "benchmarks.bench_fig3_density",
+    "benchmarks.bench_fig8_mapping",
+    "benchmarks.bench_fig9_sweep",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_lm_packing",
+    "benchmarks.bench_dryrun",
+    "benchmarks.bench_roofline",
+]
+
+ART_DIR = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    ART_DIR.mkdir(exist_ok=True)
+    print("name,us_per_call,derived")
+    failures = []
+    for modname in BENCHES:
+        short = modname.split(".")[-1]
+        if only and only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+        except ModuleNotFoundError as e:
+            failures.append((short, f"import: {e}"))
+            continue
+        t0 = time.perf_counter()
+        rows = mod.run()
+        dt_us = (time.perf_counter() - t0) * 1e6
+        per_row = dt_us / max(len(rows), 1)
+        for row in rows:
+            derived = {k: v for k, v in row.items() if k != "name"}
+            print(f"{row['name']},{per_row:.1f},\"{json.dumps(derived)}\"")
+        (ART_DIR / f"{short}.json").write_text(json.dumps(rows, indent=1))
+        if hasattr(mod, "check"):
+            try:
+                mod.check(rows)
+                print(f"{short}/check,0.0,PASS")
+            except AssertionError as e:
+                failures.append((short, str(e)))
+                print(f"{short}/check,0.0,FAIL: {e}")
+    if failures:
+        print(f"# {len(failures)} bench check(s) failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: pack a network's weights into an IMC fabric and read the EDP.
+
+The paper in one page: take MLPerf-Tiny DS-CNN, pack its weight tiles into
+a D-IMC macro (256x16 plane), compare against the stacked baseline, print
+the EDP split (MAC / activation / weight-loading) — weight reloads vanish
+once everything fits on-chip.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import d_imc, ds_cnn, pack, plan_cost, stacked_plan
+
+
+def main():
+    wl = ds_cnn()
+    print(f"workload: {wl.name} — {len(wl.layers)} layers, "
+          f"{wl.total_weight_volume:,} weights, {wl.total_macs:,} MACs\n")
+
+    # how much cell depth (D_m) does each mapping need to stay on-chip?
+    need_packed = pack(wl, d_imc(1, 1), bounded=False).min_D_m
+    need_stacked = stacked_plan(wl, d_imc(1, 1), bounded=False).min_D_m
+    print(f"min D_m to hold all weights:  packed={need_packed}  "
+          f"stacked={need_stacked}")
+
+    # give the chip only the packed budget: the baseline must spill to DRAM
+    arch = d_imc(1, need_packed)
+    for name, plan in (("packed", pack(wl, arch, bounded=True)),
+                       ("stacked", stacked_plan(wl, arch, bounded=True))):
+        rep = plan_cost(plan)
+        print(f"\n{name} @ D_m={need_packed}:")
+        print(f"  EDP            {rep.edp_pj_s:10.4f} pJ*s")
+        print(f"  E mac          {rep.e_mac_pj / 1e6:10.3f} uJ")
+        print(f"  E activations  {rep.e_act_pj / 1e6:10.3f} uJ")
+        print(f"  E weight-load  {rep.e_weight_pj / 1e6:10.3f} uJ"
+              f"   ({len(plan.streamed_layers)} layers DRAM-streamed)")
+        print(f"  latency        {rep.latency_ns / 1e3:10.1f} us")
+
+    packed = plan_cost(pack(wl, arch, bounded=True))
+    stacked = plan_cost(stacked_plan(wl, arch, bounded=True))
+    print(f"\nEDP improvement packed vs stacked: "
+          f"{stacked.edp_pj_s / packed.edp_pj_s:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

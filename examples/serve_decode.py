@@ -1,0 +1,29 @@
+"""Batched serving example: prefill + decode across four model families.
+
+Exercises the KV-cache / recurrent-state serving path (the decode_* dry-run
+cells) end-to-end on CPU reduced configs: dense GQA, MoE + MLA latent
+cache, RWKV constant-state, and the RG-LRU + windowed-attention hybrid.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+ARCHS = ["codeqwen1.5-7b", "deepseek-v2-lite-16b", "rwkv6-7b",
+         "recurrentgemma-9b"]
+
+
+def main():
+    for arch in ARCHS:
+        print("\n" + "=" * 60)
+        serve.main(["--arch", arch, "--batch", "2", "--prompt-len", "16",
+                    "--gen", "8"])
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,12 @@
+"""The paper's own workloads (MLPerf Tiny) exposed through the config
+registry, so `--arch mlperf-tiny/<net>` routes to the IMC packing study."""
+
+from repro.core.workloads import (autoencoder, ds_cnn, mobilenet_v1_025,
+                                  resnet8)
+
+WORKLOADS = {
+    "resnet8": resnet8,
+    "ds_cnn": ds_cnn,
+    "mobilenet_v1_025": mobilenet_v1_025,
+    "autoencoder": autoencoder,
+}

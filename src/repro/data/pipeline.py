@@ -1,0 +1,76 @@
+"""Deterministic, shardable, restartable synthetic token pipeline.
+
+Every sequence is a pure function of (seed, step, global_row): restart-
+after-failure resumes bit-identically from the checkpointed step with no
+pipeline state to save, and any host can materialize exactly its shard of
+the global batch (``host_batch``) — re-sharding (elastic rescale) never
+changes the data, because the PRNG is folded per *global row*, not per
+host.
+
+The stream is synthetic (offline container) but deliberately not i.i.d.
+noise: tokens follow a skewed unigram distribution with Markov runs, so
+cross-entropy decreases measurably during the example training runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenStream:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    repeat_p: float = 0.7          # Markov self-transition probability
+
+    def _row(self, key) -> jax.Array:
+        """One (seq_len+1,) int32 sequence with learnable structure."""
+        k1, k2 = jax.random.split(key)
+        ranks = jnp.arange(1, self.vocab_size + 1, dtype=jnp.float32)
+        logits = -1.2 * jnp.log(ranks)              # zipf-ish unigram
+        base = jax.random.categorical(
+            k1, jnp.broadcast_to(logits, (self.seq_len + 1,
+                                          self.vocab_size)))
+        rep = jax.random.bernoulli(k2, self.repeat_p, (self.seq_len + 1,))
+
+        def body(prev, xs):
+            tok, r = xs
+            cur = jnp.where(r, prev, tok)
+            return cur, cur
+
+        _, toks = jax.lax.scan(body, base[0], (base[1:], rep[1:]))
+        toks = jnp.concatenate([base[:1], toks])
+        return toks.astype(jnp.int32)
+
+    @partial(jax.jit, static_argnums=0)
+    def _rows(self, step, rows) -> jax.Array:
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        keys = jax.vmap(jax.random.fold_in, (None, 0))(key, rows)
+        return jax.vmap(self._row)(keys)
+
+    def batch(self, step: int) -> dict[str, jax.Array]:
+        """Full global batch for ``step``."""
+        toks = self._rows(step, jnp.arange(self.global_batch))
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def host_batch(self, step: int, shard: int,
+                   num_shards: int) -> dict[str, jax.Array]:
+        """This host's contiguous row slice — identical to slicing
+        ``batch(step)``, for any shard count."""
+        assert self.global_batch % num_shards == 0
+        per = self.global_batch // num_shards
+        rows = jnp.arange(shard * per, (shard + 1) * per)
+        toks = self._rows(step, rows)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_stream(cfg, shape, seed: int = 0) -> TokenStream:
+    """Stream matching a (ModelConfig, InputShape) pair."""
+    return TokenStream(vocab_size=cfg.vocab_size, seq_len=shape.seq_len,
+                       global_batch=shape.global_batch, seed=seed)

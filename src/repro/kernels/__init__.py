@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+    packed_canvas     multi-layer block-packed MVM (column-generation output)
+    packed_mvm        grouped MoE expert GEMM
+    flash_attention   causal/windowed GQA flash attention (train/prefill)
+    decode_attention  KV-cache GQA decode attention
+
+``ops`` holds the public wrappers (auto CPU-oracle fallback); ``ref`` the
+pure-jnp semantics the kernels are validated against (interpret=True).
+"""
+
+from . import ops, ref
+from .decode_attention import decode_attention
+from .flash_attention import flash_attention
+from .packed_canvas import build_block_meta, packed_canvas_matmul
+from .packed_mvm import grouped_mvm
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention",
+           "grouped_mvm", "packed_canvas_matmul", "build_block_meta"]

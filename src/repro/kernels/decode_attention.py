@@ -1,0 +1,100 @@
+"""KV-cache GQA decode attention (one query token per sequence), Pallas TPU.
+
+The decode hot loop is memory-bound: the whole KV cache is streamed once
+per step while the query is tiny. The kernel tiles the cache time axis and
+keeps an online softmax per (batch, kv-head); cache blocks wholly beyond
+the live length (scalar-prefetched per batch row) are skipped — both the
+DMA-issue cost and the FLOPs scale with the *live* cache, which is the
+decode analogue of skipping unoccupied canvas blocks.
+
+Layouts (arranged by ops.py):
+    q: (B, KV, G, dh)     k, v: (B, KV, T, dh)     lengths: (B,) int32
+Grid: (B, KV, T/bt).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, bt: int, g: int):
+    b, tk = pl.program_id(0), pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(tk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tk * bt < length)                      # skip dead cache blocks
+    def _step():
+        qb = q_ref[0, 0].astype(jnp.float32) * scale      # (G, dh)
+        kb = k_ref[0, 0].astype(jnp.float32)              # (bt, dh)
+        logits = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, bt)
+        t_pos = tk * bt + jax.lax.broadcasted_iota(jnp.int32, (g, bt), 1)
+        mask = t_pos < length
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                               # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(tk == pl.num_programs(2) - 1)
+    def _flush():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scale", "bt", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array, *, scale: float | None = None,
+                     bt: int = 256, interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, dh); k/v: (B, KV, T, dh); lengths (B,) -> (B, KV, G, dh)."""
+    B, KV, G, dh = q.shape
+    T = k.shape[2]
+    bt = min(bt, T)
+    assert T % bt == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_kernel, scale=scale, bt=bt, g=G)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B, KV, T // bt),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, dh), lambda b, h, t, L: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, bt, dh), lambda b, h, t, L: (b, h, t, 0)),
+                pl.BlockSpec((1, 1, bt, dh), lambda b, h, t, L: (b, h, t, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, dh),
+                                   lambda b, h, t, L: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)

@@ -1,0 +1,122 @@
+"""Causal GQA flash attention (prefill / train), Pallas TPU.
+
+Online-softmax tiling: the (S x T) score matrix is never materialized; a
+(bq x bkv) tile is computed per grid step with running max / sum / output
+accumulators in VMEM scratch. Fully-masked key blocks (beyond the causal
+frontier, or outside the local window) are skipped with ``pl.when`` — the
+same "don't drive inactive rows" gating the IMC paper applies to unused
+canvas regions.
+
+Layouts (arranged by ops.py):
+    q: (B, H, S, dh)      k, v: (B, KV, T, dh)      out: (B, H, S, dh)
+Grid: (B, H, S/bq, T/bkv); KV head = H-index // G with G = H // KV.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, bq: int, bkv: int,
+            s: int, t: int):
+    sq, tk = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(tk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # query rows are suffix-aligned: q row i sits at key position i + (t - s)
+    q_pos = sq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0) \
+        + (t - s)
+    k_pos = tk * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+
+    # block-level skip: no key in this block is visible to any query row
+    block_live = True
+    if causal:
+        block_live = tk * bkv <= sq * bq + (bq - 1) + (t - s)
+    if window:
+        block_live = jnp.logical_and(
+            block_live, (tk + 1) * bkv - 1 > sq * bq + (t - s) - window)
+
+    @pl.when(block_live)
+    def _step():
+        qb = q_ref[0, 0].astype(jnp.float32) * scale        # (bq, dh)
+        kb = k_ref[0, 0].astype(jnp.float32)                # (bkv, dh)
+        logits = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)             # (bq, bkv)
+        mask = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                                 # (bq, 1)
+        m_cur = jnp.max(logits, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(tk == pl.num_programs(3) - 1)
+    def _flush():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "scale", "bq", "bkv",
+                              "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    scale: float | None = None, bq: int = 128,
+                    bkv: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, dh); k/v: (B, KV, T, dh) -> (B, H, S, dh)."""
+    B, H, S, dh = q.shape
+    KV, T = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, S)
+    bkv = min(bkv, T)
+    assert S % bq == 0 and T % bkv == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, bq=bq, bkv=bkv, s=S, t=T)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // bq, T // bkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b, h, sq, tk: (b, h, sq, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b, h, sq, tk: (b, h // G, tk, 0)),
+            pl.BlockSpec((1, 1, bkv, dh),
+                         lambda b, h, sq, tk: (b, h // G, tk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b, h, sq, tk: (b, h, sq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,120 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each op accepts the model-layer layout, converts to the kernel layout, and
+dispatches to the Pallas kernel on TPU (or with ``interpret=True``) and to
+the pure-jnp oracle otherwise — so the model zoo can call these ops
+unconditionally and stay runnable on the CPU container.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import packed_canvas as _pc
+from . import packed_mvm as _pm
+from . import ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# --- attention -------------------------------------------------------------------
+
+def attention(q, k, v, *, causal=True, window=0, scale=None,
+              impl: str = "auto", bq=128, bkv=128):
+    """GQA attention in model layout: q (B,S,H,dh), k/v (B,T,KV,dh)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.mha_attention(q, k, v, causal=causal, window=window,
+                                 scale=scale)
+    interpret = impl == "interpret"
+    qt = jnp.transpose(q, (0, 2, 1, 3))            # (B, H, S, dh)
+    kt = jnp.transpose(k, (0, 2, 1, 3))            # (B, KV, T, dh)
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    S, T = qt.shape[2], kt.shape[2]
+    bq, bkv = min(bq, S), min(bkv, T)
+    qt = _pad_to(qt, 2, bq)
+    kt = _pad_to(kt, 2, bkv)
+    vt = _pad_to(vt, 2, bkv)
+    # padded key slots must stay invisible: causal masking handles suffix
+    # padding of keys only if queries are suffix-aligned — recompute offset
+    # on the *unpadded* T by masking via window/causal in-kernel using the
+    # padded sizes; simplest correct route: pad q too and slice the result.
+    out = _fa.flash_attention(qt, kt, vt, causal=causal, window=window,
+                              scale=scale, bq=bq, bkv=bkv,
+                              interpret=interpret)
+    out = out[:, :, :S]
+    return jnp.transpose(out, (0, 2, 1, 3))
+
+
+def decode_attention(q, k, v, lengths, *, scale=None, impl: str = "auto",
+                     bt=256):
+    """Decode attention in model layout: q (B,H,dh), k/v (B,T,KV,dh)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.decode_attention(q, k, v, lengths, scale=scale)
+    interpret = impl == "interpret"
+    B, H, dh = q.shape
+    KV = k.shape[2]
+    qt = q.reshape(B, KV, H // KV, dh)
+    kt = jnp.transpose(k, (0, 2, 1, 3))            # (B, KV, T, dh)
+    vt = jnp.transpose(v, (0, 2, 1, 3))
+    bt_eff = min(bt, kt.shape[2])
+    kt = _pad_to(kt, 2, bt_eff)
+    vt = _pad_to(vt, 2, bt_eff)
+    out = _dec.decode_attention(qt, kt, vt, lengths, scale=scale, bt=bt_eff,
+                                interpret=interpret)
+    return out.reshape(B, H, dh)
+
+
+# --- grouped MoE GEMM --------------------------------------------------------------
+
+def grouped_mvm(x, w, *, impl: str = "auto"):
+    """x (E,C,D) @ w (E,D,F) -> (E,C,F)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return ref.grouped_mvm(x, w)
+    return _pm.grouped_mvm(x, w, interpret=(impl == "interpret"))
+
+
+def moe_expert_ffn(xe, w_gate, w_up, w_down, *, impl: str = "auto"):
+    """SwiGLU over dispatched expert inputs xe (E, C, D)."""
+    h = jax.nn.silu(grouped_mvm(xe, w_gate, impl=impl)) \
+        * grouped_mvm(xe, w_up, impl=impl)
+    return grouped_mvm(h, w_down, impl=impl)
+
+
+# --- packed canvas -------------------------------------------------------------------
+
+def packed_canvas_matmul(x_packed, w_blocks, meta, *, impl: str = "auto",
+                         bb=128):
+    """Block-compacted multi-layer MVM; meta from build_block_meta.
+
+    The ref path reconstructs the dense virtual plane — only viable for
+    small planes; the kernel path touches just the stored blocks.
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        import numpy as np
+        C = (int(np.asarray(meta)[_pc.META_CB].max()) + 1) * _pc.BLK
+        wd = ref.blocks_to_dense(w_blocks, meta, x_packed.shape[1], C)
+        return ref.packed_canvas(x_packed, wd.astype(x_packed.dtype))
+    bb = min(bb, x_packed.shape[0])
+    return _pc.packed_canvas_matmul(x_packed, w_blocks, meta, bb=bb,
+                                    interpret=(impl == "interpret"))
+
+
+build_block_meta = _pc.build_block_meta

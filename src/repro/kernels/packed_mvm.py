@@ -1,0 +1,66 @@
+"""Grouped expert GEMM: (E, C, D) @ (E, D, F) -> (E, C, F).
+
+The MoE-expert form of the paper's packing: each expert is one weight tile;
+the "<= 1 tile of a layer per macro" rule becomes expert parallelism (one
+expert shard per chip along the model axis), and this kernel executes the
+per-shard group of expert tiles as one blocked, weight-stationary GEMM
+instead of E separate launches.
+
+Grid: (E, C/bc, F/bf, D/bd) — the inner D loop accumulates into an f32
+VMEM scratch; the weight block for a fixed (e, f, d) is reused across the
+whole C sweep (weight-stationary within the macro, as in the paper).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(3) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(3) == pl.num_programs(3) - 1)
+    def _flush():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bc", "bf", "bd", "interpret"))
+def grouped_mvm(x: jax.Array, w: jax.Array, *, bc: int = 128, bf: int = 128,
+                bd: int = 128, interpret: bool = False) -> jax.Array:
+    """x: (E, C, D), w: (E, D, F) -> (E, C, F); f32 accumulation."""
+    E, C, D = x.shape
+    F = w.shape[2]
+    bc, bf, bd = _pick(bc, C), _pick(bf, F), _pick(bd, D)
+    grid = (E, C // bc, F // bf, D // bd)
+
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e, c, f, d: (e, c, d)),
+            pl.BlockSpec((1, bd, bf), lambda e, c, f, d: (e, d, f)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e, c, f, d: (e, c, f)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

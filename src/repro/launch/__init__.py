@@ -1,0 +1,1 @@
+"""Distribution layer: mesh, shardings, step builders, dry-run, drivers."""

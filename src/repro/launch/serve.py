@@ -1,0 +1,96 @@
+"""Batched serving driver: prefill a prompt batch, decode N tokens.
+
+Runs reduced configs end-to-end on CPU (1x1 mesh); the pod-mesh serving
+cells are proven by the dry-run. Reports prefill/decode latency and
+writes the sampled continuations.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b \
+      --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import get_model, layers as L
+from . import sharding as sh
+from .mesh import make_host_mesh, make_production_mesh
+from .steps import make_prefill_step, make_serve_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--mesh", default="host", choices=("host", "pod"))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--cache-len", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    mesh = (make_production_mesh if args.mesh == "pod"
+            else make_host_mesh)()
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    cache_len = args.cache_len or (args.prompt_len + args.gen)
+
+    with mesh:
+        params = api.init_params(cfg, key)
+        p_spec = sh.param_pspecs(params, mesh)
+        params = jax.device_put(params, sh.to_shardings(p_spec, mesh))
+
+        key, kt = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(
+            kt, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                kt, (args.batch, cfg.encoder.seq_len, cfg.d_model))
+        if cfg.family == "vlm":
+            batch["patch_embeds"] = jax.random.normal(
+                kt, (args.batch, 4, cfg.d_model))
+
+        prefill = jax.jit(make_prefill_step(cfg, cache_len))
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+        t0 = time.monotonic()
+        logits, state = jax.block_until_ready(prefill(params, batch))
+        t_prefill = time.monotonic() - t0
+
+        toks = []
+        key, ks = jax.random.split(key)
+        tok = jax.random.categorical(ks, logits / args.temperature, -1)
+        t0 = time.monotonic()
+        for i in range(args.gen):
+            toks.append(np.asarray(tok))
+            logits, state = serve(params, state, tok)
+            key, ks = jax.random.split(key)
+            tok = jax.random.categorical(ks, logits / args.temperature, -1)
+        jax.block_until_ready(logits)
+        t_decode = (time.monotonic() - t0) / args.gen
+
+        out = np.stack(toks, axis=1)
+        print(f"arch={cfg.name} batch={args.batch} "
+              f"prompt={args.prompt_len} gen={args.gen}")
+        print(f"prefill: {t_prefill * 1e3:.1f} ms   "
+              f"decode: {t_decode * 1e3:.1f} ms/token")
+        for b in range(min(args.batch, 2)):
+            print(f"  seq{b}: {out[b].tolist()}")
+        assert np.isfinite(np.asarray(logits)).all()
+        print("ok")
+        return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,248 @@
+"""Sharding rules: parameter / optimizer / batch / decode-state specs.
+
+The rule engine classifies every parameter leaf by the *last component*
+of its pytree path, then builds a PartitionSpec from the leaf's rank:
+
+    col     column-parallel matmul weight  -> shard dim -1 over model
+    row     row-parallel matmul weight     -> shard dim -2 over model
+    ep      stacked expert / head weight   -> shard dim  1 over model
+    vocab   embedding table                -> shard dim  0 over model
+    chan    per-channel vector (biases of col-parallel outputs, RG-LRU
+            gates, rwkv decay)             -> shard dim -1 over model
+    rep     replicate
+
+This is the paper's "<= 1 tile of a layer per macro" rule as tensor /
+expert parallelism: every layer's weight is spread across the whole model
+axis so all D_h "macros" compute concurrently.
+
+Residency-streamed tensors (planner.residency) additionally shard their
+complementary matmul dimension over the data axis — FSDP: the weight is
+gathered per step (the controlled form of "weight reloading" whose
+traffic the plan minimizes).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Mapping
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .mesh import dp_axes
+
+# --- classification table ---------------------------------------------------------
+
+# last path component -> rule
+_RULES: dict[str, str] = {
+    # column-parallel (output dim sharded)
+    "wq": "col", "wk": "col", "wv": "col", "w_gate": "col", "w_up": "col",
+    "x_wq": "col", "x_wk": "col", "x_wv": "col",
+    "wr": "col", "wg": "col", "ffn_k": "col", "ffn_r": "col",
+    "w_lora_a": "col", "w_lora_b": "col",
+    "w_dkv": "col", "w_kr": "col", "patch_proj": "col",
+    "w_x": "col", "w_i": "col", "w_branch": "col",
+    "mix_w2": "col",
+    # tiny full-D vectors/loras consumed elementwise: replicate so the
+    # ddlerp base term stays local (§Perf iteration A2)
+    "mix_w1": "rep", "mu_base": "rep", "mu_ffn": "rep",
+    # row-parallel (input dim sharded)
+    "wo": "row", "w_down": "row", "w_out": "row", "ffn_v": "row",
+    "x_wo": "row",
+    # expert / head stacked (dim 1 sharded)
+    "u": "ep",
+    # embeddings
+    "embed": "vocab", "lm_head": "col",
+    # per-channel vectors aligned with col-sharded outputs
+    "bq": "chan", "bk": "chan", "bv": "chan", "b_up": "chan",
+    "x_bq": "chan", "x_bv": "chan",
+    "w_base": "chan", "gn": "chan", "gnb": "chan",
+    "lam": "chan", "b_i": "chan", "b_r": "chan", "conv_w": "chan",
+    "conv_b": "chan",
+    # replicated
+    "router": "rep", "enc_pos": "rep", "dec_pos": "rep",
+}
+
+# tensors under a `moe/` prefix use expert parallelism on the E axis
+_MOE_EP = {"w_gate": "ep", "w_up": "ep", "w_down": "ep"}
+# deepseek MLA per-head up-projections (L, H, r, d)
+_HEAD_EP = {"w_uk": "ep", "w_uv": "ep"}
+
+
+def _leaf_rule(path: tuple[str, ...]) -> str:
+    name = path[-1]
+    if len(path) >= 2 and path[-2] == "moe" and name in _MOE_EP:
+        return _MOE_EP[name]
+    if name in _HEAD_EP:
+        return _HEAD_EP[name]
+    if name.startswith("shared_"):
+        return "col" if name in ("shared_gate", "shared_up") else "row"
+    return _RULES.get(name, "rep")
+
+
+def _spec_for(rule: str, ndim: int, tp: str, fsdp_axis: str | None,
+              shape: tuple[int, ...], tp_size: int,
+              dp_size: int) -> P:
+    """Build the PartitionSpec, checking divisibility (fall back to
+    replication on any non-divisible dim — correctness first)."""
+    dims: list = [None] * ndim
+
+    def ok(d, size):
+        return shape[d] % size == 0 and shape[d] >= size
+
+    if rule == "col" and ndim >= 2 and ok(ndim - 1, tp_size):
+        dims[ndim - 1] = tp
+        if fsdp_axis and ok(ndim - 2, dp_size):
+            dims[ndim - 2] = fsdp_axis
+    elif rule == "row" and ndim >= 2 and ok(ndim - 2, tp_size):
+        dims[ndim - 2] = tp
+        if fsdp_axis and ok(ndim - 1, dp_size):
+            dims[ndim - 1] = fsdp_axis
+    elif rule == "ep" and ndim >= 2 and ok(1, tp_size):
+        dims[1] = tp
+        if fsdp_axis and ndim >= 3 and ok(2, dp_size):
+            dims[2] = fsdp_axis
+    elif rule == "vocab" and ok(0, tp_size):
+        dims[0] = tp
+        if fsdp_axis and ndim >= 2 and ok(1, dp_size):
+            dims[1] = fsdp_axis
+    elif rule == "chan" and ok(ndim - 1, tp_size):
+        dims[ndim - 1] = tp
+    return P(*dims)
+
+
+# residency tensor-group name -> param path patterns
+_GROUP_PATTERNS = {
+    "embed": [r"^embed$"],
+    "lm_head": [r"^lm_head$"],
+    "attn": [r"(^|/)(wq|wk|wv|wo|w_dkv|w_kr|w_uk|w_uv|x_w.)$"],
+    "ffn": [r"(^|/)(w_gate|w_up|w_down|ffn_.)$"],
+    "experts": [r"moe/(w_gate|w_up|w_down)$"],
+    "shared_experts": [r"moe/shared_"],
+    "recurrent": [r"(^|/)(w_x|w_i|w_branch|w_out|conv_w|lam)$"],
+    "att_proj": [r"(^|/)(wr|wg)$"],
+    "mixers": [r"(^|/)(mix_w|w_lora|mu_)"],
+    "encoder": [r"^enc_blocks/"],
+    "cross_attn": [r"/x_w"],
+}
+
+
+def _streamed(path_str: str, streamed_groups: frozenset[str]) -> bool:
+    for g in streamed_groups:
+        for pat in _GROUP_PATTERNS.get(g, []):
+            if re.search(pat, path_str):
+                return True
+    return False
+
+
+def _path_strs(path) -> tuple[str, ...]:
+    return tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                 for p in path)
+
+
+def param_pspecs(param_shapes, mesh, *,
+                 streamed_groups: frozenset[str] = frozenset(),
+                 wide_tp: bool = False):
+    """Pytree of PartitionSpec matching ``param_shapes`` (a pytree of
+    ShapeDtypeStruct or arrays).
+
+    wide_tp=True shards the tensor-parallel dim over BOTH mesh axes
+    (model x data): the serving topology for models whose bf16 weights
+    exceed HBM at 16-way TP. Streamed groups are ignored in this mode —
+    nothing needs gathering because nothing is replicated.
+    """
+    tp = ("model", "data") if wide_tp else "model"
+    tp_size = mesh.shape["model"] * (mesh.shape.get("data", 1)
+                                     if wide_tp else 1)
+    dp_size = mesh.shape.get("data", 1)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    specs = []
+    for path, leaf in flat:
+        parts = _path_strs(path)
+        rule = _leaf_rule(parts)
+        fsdp = "data" if (not wide_tp and
+                          _streamed("/".join(parts), streamed_groups)) \
+            else None
+        specs.append(_spec_for(rule, len(leaf.shape), tp, fsdp,
+                               tuple(leaf.shape), tp_size, dp_size))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --- batch & state ------------------------------------------------------------------
+
+def batch_dim_spec(size: int, mesh):
+    """Largest prefix of (pod, data) that divides ``size`` (batch dim)."""
+    axes = []
+    prod = 1
+    for a in dp_axes(mesh):
+        n = mesh.shape[a]
+        if size % (prod * n) == 0:
+            axes.append(a)
+            prod *= n
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def batch_pspecs(batch_shapes, mesh):
+    """tokens/labels (B, S) etc: shard dim 0 over the data axes."""
+    def spec(leaf):
+        b = batch_dim_spec(leaf.shape[0], mesh)
+        return P(b, *([None] * (len(leaf.shape) - 1)))
+    return jax.tree.map(spec, batch_shapes)
+
+
+# decode-state field rules: last path component -> (batch_dim, model_dims)
+# model_dims: candidate axes counted from the END, tried in order (the
+# first divisible one is sharded) — KV caches prefer the head axis (-2,
+# aligned with q-head TP after serve_kv_expand) and fall back to dh.
+_STATE_RULES: dict[str, tuple[int | None, tuple[int, ...]]] = {
+    "k": (1, (-2, -1)), "v": (1, (-2, -1)),   # (L, B, T, KVe, dh)
+    "kv": (None, (-2, -1)),                   # stacked/latent: see below
+    "wkv": (1, (2,)),                         # (L, B, H, dh, dh): heads
+    "att_prev": (1, (-1,)), "ffn_prev": (1, (-1,)),
+    "h": (1, (-1,)), "conv": (1, (-1,)),      # RG-LRU channels
+    "kpos": (1, ()),
+    "enc_out": (0, ()),
+    "pos": (None, ()),
+}
+
+
+def state_pspecs(state_shapes, mesh):
+    tp_size = mesh.shape["model"]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    specs = []
+    for path, leaf in flat:
+        name = _path_strs(path)[-1].lstrip(".")
+        ndim = len(leaf.shape)
+        bdim, mdims = _STATE_RULES.get(name, (None, ()))
+        dims: list = [None] * ndim
+        if name == "kv":          # (2,L,B,T,KV,dh) stacked or (L,B,T,r) MLA
+            bdim = 2 if ndim == 6 else 1
+            mdims = (-2, -1) if ndim == 6 else (-1,)
+        for mdim in mdims:
+            d = mdim % ndim
+            if leaf.shape[d] % tp_size == 0 and leaf.shape[d] >= tp_size:
+                dims[d] = "model"
+                break
+        if bdim is not None and ndim:
+            b = batch_dim_spec(leaf.shape[bdim], mesh)
+            if b is not None:
+                dims[bdim] = b
+        specs.append(P(*dims))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# --- helpers ------------------------------------------------------------------------
+
+def to_shardings(pspec_tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_pspecs(param_pspec_tree, mesh):
+    """OptState(step, m, v): moments shard like their parameters."""
+    from ..optim import OptState
+    import jax.numpy as jnp  # noqa: F401
+    return OptState(step=P(), m=param_pspec_tree, v=param_pspec_tree)

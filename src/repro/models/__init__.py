@@ -1,0 +1,44 @@
+"""Model zoo registry: family -> (init, forward, loss, prefill, decode...)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from . import griffin, moe, rwkv6, transformer, whisper
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init_params: Callable
+    forward: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_decode_state: Callable
+
+
+_FAMILIES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": rwkv6,
+    "hybrid": griffin,
+    "encdec": whisper,
+}
+
+
+def get_model(cfg) -> ModelApi:
+    mod = _FAMILIES[cfg.family]
+    return ModelApi(
+        init_params=mod.init_params,
+        forward=mod.forward,
+        loss_fn=mod.loss_fn,
+        prefill=mod.prefill,
+        decode_step=mod.decode_step,
+        init_decode_state=mod.init_decode_state,
+    )
+
+
+__all__ = ["get_model", "ModelApi", "transformer", "moe", "rwkv6", "griffin",
+           "whisper"]

@@ -1,0 +1,413 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427) — hybrid RG-LRU + local
+sliding-window attention, block pattern (rec, rec, attn).
+
+Every layer = temporal-mix (RG-LRU recurrent branch OR windowed MQA) + gated
+MLP, both with residuals. Layers are grouped into scanned *super-blocks* of
+one pattern period (rec, rec, attn); a remainder group of rec-only layers
+covers num_layers % 3 (38 = 12x3 + 2).
+
+Decode state is O(window): conv shift registers + LRU hidden per rec layer,
+ring-buffer KV (window slots) per attn layer — this is why the hybrid runs
+the long_500k shape with a bounded memory term.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+
+LRU_C = 8.0  # Griffin's fixed decay temperature
+
+
+# --- params -----------------------------------------------------------------------
+
+def _rec_init(cfg, k):
+    D = cfg.d_model
+    W = cfg.recurrent.lru_width or D
+    cw = cfg.recurrent.conv_width
+    ks = jax.random.split(k, 8)
+    return {
+        "ln": jnp.ones((D,), L.PARAM_DTYPE),
+        "w_branch": L.dense_init(ks[0], D, W),     # gelu branch
+        "w_x": L.dense_init(ks[1], D, W),          # recurrent branch input
+        "conv_w": L.trunc_normal(ks[2], (cw, W), std=1.0 / math.sqrt(cw)),
+        "conv_b": jnp.zeros((W,), L.PARAM_DTYPE),
+        "w_i": L.dense_init(ks[3], W, W),          # input gate
+        "b_i": jnp.zeros((W,), L.PARAM_DTYPE),
+        "w_r": L.dense_init(ks[4], W, W),          # recurrence gate
+        "b_r": jnp.zeros((W,), L.PARAM_DTYPE),
+        "lam": L.trunc_normal(ks[5], (W,), std=0.5),
+        "w_out": L.dense_init(ks[6], W, D),
+        **_mlp_init(cfg, ks[7]),
+    }
+
+
+def _attn_init(cfg, k):
+    D = cfg.d_model
+    ks = jax.random.split(k, 6)
+    return {
+        "ln": jnp.ones((D,), L.PARAM_DTYPE),
+        "wq": L.dense_init(ks[0], D, cfg.q_dim),
+        "wk": L.dense_init(ks[1], D, cfg.kv_dim),
+        "wv": L.dense_init(ks[2], D, cfg.kv_dim),
+        "wo": L.dense_init(ks[3], cfg.q_dim, D),
+        **_mlp_init(cfg, ks[4]),
+    }
+
+
+def _mlp_init(cfg, k):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(k, 3)
+    return {
+        "ln_mlp": jnp.ones((D,), L.PARAM_DTYPE),
+        "w_gate": L.dense_init(ks[0], D, F),
+        "w_up": L.dense_init(ks[1], D, F),
+        "w_down": L.dense_init(ks[2], F, D),
+    }
+
+
+def _counts(cfg) -> tuple[int, int]:
+    """(num full pattern periods, num trailing rec layers)."""
+    period = len(cfg.recurrent.block_pattern)
+    return cfg.num_layers // period, cfg.num_layers % period
+
+
+def init_params(cfg, key):
+    D, V = cfg.d_model, cfg.vocab_size
+    n_super, n_tail = _counts(cfg)
+    k_embed, k_sb, k_tail, k_head = jax.random.split(key, 4)
+
+    def super_init(k):
+        kr1, kr2, ka = jax.random.split(k, 3)
+        return {"rec1": _rec_init(cfg, kr1), "rec2": _rec_init(cfg, kr2),
+                "attn": _attn_init(cfg, ka)}
+
+    params = {
+        "embed": L.trunc_normal(k_embed, (V, D)),
+        "super": jax.vmap(super_init)(jax.random.split(k_sb, n_super)),
+        "ln_f": jnp.ones((D,), L.PARAM_DTYPE),
+        "lm_head": L.dense_init(k_head, D, V),
+    }
+    if n_tail:
+        params["tail"] = jax.vmap(lambda k: _rec_init(cfg, k))(
+            jax.random.split(k_tail, n_tail))
+    return params
+
+
+# --- RG-LRU recurrent block ----------------------------------------------------------
+
+def _causal_conv(x, w, b, conv_state):
+    """Depthwise causal conv1d. x: (B,S,W); w: (cw,W); conv_state: (B,cw-1,W)
+    holds the trailing inputs of the previous chunk."""
+    cw = w.shape[0]
+    xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else conv_state
+    return out + b, new_state
+
+
+def _rglru(x, r_gate, i_gate, lam, h0):
+    """RG-LRU scan. x, gates: (B,S,W); h0: (B,W) f32."""
+    a_log = -LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) \
+        * jax.nn.sigmoid(r_gate.astype(jnp.float32))            # (B,S,W) <= 0
+    a = jnp.exp(a_log)
+    gated = (jax.nn.sigmoid(i_gate.astype(jnp.float32))
+             * x.astype(jnp.float32))
+    scaled = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated
+
+    def step(h, xs):
+        a_t, s_t = xs
+        h = a_t * h + s_t
+        return h, h
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(scaled, 1, 0))
+    h_last, hs = lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), h_last
+
+
+def _rec_block(cfg, p, x, state):
+    """state: dict(conv (B,cw-1,W), h (B,W))."""
+    cd = L.COMPUTE_DTYPE
+    h_in = L.rmsnorm(x, p["ln"]).astype(cd)
+    branch = jax.nn.gelu(h_in @ p["w_branch"].astype(cd))
+    xr = h_in @ p["w_x"].astype(cd)
+    xr, conv_state = _causal_conv(xr, p["conv_w"].astype(cd),
+                                  p["conv_b"].astype(cd), state["conv"])
+    r_gate = xr @ p["w_r"].astype(cd) + p["b_r"].astype(cd)
+    i_gate = xr @ p["w_i"].astype(cd) + p["b_i"].astype(cd)
+    hseq, h_last = _rglru(xr, r_gate, i_gate, p["lam"], state["h"])
+    out = (branch * hseq) @ p["w_out"].astype(cd)
+    y = x + out.astype(x.dtype)
+    y = y + _mlp(p, y).astype(y.dtype)
+    return y, {"conv": conv_state.astype(state["conv"].dtype),
+               "h": h_last}
+
+
+def _mlp(p, x):
+    cd = L.COMPUTE_DTYPE
+    h = L.rmsnorm(x, p["ln_mlp"]).astype(cd)
+    return L.swiglu(h, p["w_gate"].astype(cd), p["w_up"].astype(cd),
+                    p["w_down"].astype(cd))
+
+
+# --- local attention block -------------------------------------------------------------
+
+def _attn_block_full(cfg, p, x, positions):
+    """Full-sequence windowed MQA (train/prefill)."""
+    cd = L.COMPUTE_DTYPE
+    B, S, D = x.shape
+    dh = cfg.head_dim
+    h = L.rmsnorm(x, p["ln"]).astype(cd)
+    q = (h @ p["wq"].astype(cd)).reshape(B, S, cfg.num_heads, dh)
+    k = (h @ p["wk"].astype(cd)).reshape(B, S, cfg.num_kv_heads, dh)
+    v = (h @ p["wv"].astype(cd)).reshape(B, S, cfg.num_kv_heads, dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    if S > L.ATTN_CHUNK_THRESHOLD:     # long seq: chunked windowed attn
+        attn = L.chunked_attention(q, k, v, causal=True,
+                                   window=cfg.recurrent.window)
+    else:
+        mask = L.window_mask(S, S, cfg.recurrent.window)
+        attn = L.gqa_attention(q, k, v, mask=mask)
+    y = x + (attn.reshape(B, S, cfg.q_dim) @ p["wo"].astype(cd)).astype(x.dtype)
+    y = y + _mlp(p, y).astype(y.dtype)
+    return y, (k, v)
+
+
+def _attn_block_decode(cfg, p, x, state, pos):
+    """One-token windowed MQA against a ring-buffer cache.
+
+    state: dict(k (B,W,KV,dh), v likewise, kpos (B,W) absolute positions,
+    init -1)."""
+    cd = L.COMPUTE_DTYPE
+    B, S, D = x.shape           # S == 1
+    dh = cfg.head_dim
+    W = cfg.recurrent.window
+    h = L.rmsnorm(x, p["ln"]).astype(cd)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = (h @ p["wq"].astype(cd)).reshape(B, 1, cfg.num_heads, dh)
+    k = (h @ p["wk"].astype(cd)).reshape(B, 1, cfg.num_kv_heads, dh)
+    v = (h @ p["wv"].astype(cd)).reshape(B, 1, cfg.num_kv_heads, dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    slot = pos % W
+    kv_expand = state["k"].shape[2] // cfg.num_kv_heads
+    k = L.expand_kv(k, kv_expand)
+    v = L.expand_kv(v, kv_expand)
+    ck = lax.dynamic_update_slice(state["k"], k.astype(state["k"].dtype),
+                                  (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(state["v"], v.astype(state["v"].dtype),
+                                  (0, slot, 0, 0))
+    kpos = lax.dynamic_update_slice(
+        state["kpos"], jnp.full((B, 1), pos, jnp.int32), (0, slot))
+    valid = (kpos >= 0) & (kpos <= pos) & (kpos > pos - W)
+    mask = valid[:, None, None, None, :]          # (B,1,1,1,W)
+    attn = L.gqa_attention(q, ck.astype(cd), cv.astype(cd), mask=mask)
+    y = x + (attn.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(cd)).astype(x.dtype)
+    y = y + _mlp(p, y).astype(y.dtype)
+    return y, {"k": ck, "v": cv, "kpos": kpos}
+
+
+# --- state -----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GriffinState:
+    conv: jax.Array     # (n_rec, B, cw-1, W)
+    h: jax.Array        # (n_rec, B, W) f32
+    k: jax.Array        # (n_attn, B, window, KV, dh)
+    v: jax.Array
+    kpos: jax.Array     # (n_attn, B, window) int32, -1 = empty
+    pos: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    GriffinState, data_fields=["conv", "h", "k", "v", "kpos", "pos"],
+    meta_fields=[])
+
+
+def _state_counts(cfg):
+    n_super, n_tail = _counts(cfg)
+    return 2 * n_super + n_tail, n_super       # (n_rec, n_attn)
+
+
+def init_decode_state(cfg, batch_size: int, cache_len: int = 0,
+                      dtype=L.COMPUTE_DTYPE, kv_expand=1) -> GriffinState:
+    n_rec, n_attn = _state_counts(cfg)
+    W = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv_width
+    win = cfg.recurrent.window
+    B = batch_size
+    kve = cfg.num_kv_heads * kv_expand
+    return GriffinState(
+        conv=jnp.zeros((n_rec, B, cw - 1, W), dtype),
+        h=jnp.zeros((n_rec, B, W), jnp.float32),
+        k=jnp.zeros((n_attn, B, win, kve, cfg.head_dim), dtype),
+        v=jnp.zeros((n_attn, B, win, kve, cfg.head_dim), dtype),
+        kpos=jnp.full((n_attn, B, win), -1, jnp.int32),
+        pos=jnp.zeros((), jnp.int32))
+
+
+# --- forward (train / prefill) ----------------------------------------------------------
+
+def _super_scan(cfg, params, x, positions, state: GriffinState,
+                *, remat=False, constrain=None, collect_kv=False):
+    """Scan the (rec, rec, attn) super-blocks, then the rec tail."""
+    n_super, n_tail = _counts(cfg)
+    B, S, D = x.shape
+
+    def sb_body(carry, xs):
+        xc = carry
+        p, conv1, h1, conv2, h2 = xs
+        y, st1 = _rec_block(cfg, p["rec1"], xc,
+                            {"conv": conv1, "h": h1})
+        y, st2 = _rec_block(cfg, p["rec2"], y, {"conv": conv2, "h": h2})
+        y, kv = _attn_block_full(cfg, p["attn"], y, positions)
+        if constrain is not None:
+            y = constrain(y)
+        return y, (st1["conv"], st1["h"], st2["conv"], st2["h"], kv)
+
+    if remat:
+        sb_body = jax.checkpoint(
+            sb_body, policy=jax.checkpoint_policies.nothing_saveable)
+
+    conv_r = state.conv
+    h_r = state.h
+    xs = (params["super"], conv_r[0:2 * n_super:2], h_r[0:2 * n_super:2],
+          conv_r[1:2 * n_super:2], h_r[1:2 * n_super:2])
+    x, (c1, h1, c2, h2, kvs) = lax.scan(sb_body, x, xs)
+
+    tail_states = (None, None)
+    if n_tail:
+        def tail_body(carry, xs):
+            p, conv, h = xs
+            y, st = _rec_block(cfg, p, carry, {"conv": conv, "h": h})
+            if constrain is not None:
+                y = constrain(y)
+            return y, (st["conv"], st["h"])
+        if remat:
+            tail_body = jax.checkpoint(
+                tail_body, policy=jax.checkpoint_policies.nothing_saveable)
+        x, tail_states = lax.scan(
+            tail_body, x,
+            (params["tail"], conv_r[2 * n_super:], h_r[2 * n_super:]))
+
+    # re-interleave rec states
+    conv_new = jnp.zeros_like(conv_r)
+    conv_new = conv_new.at[0:2 * n_super:2].set(c1)
+    conv_new = conv_new.at[1:2 * n_super:2].set(c2)
+    h_new = jnp.zeros_like(h_r).at[0:2 * n_super:2].set(h1)
+    h_new = h_new.at[1:2 * n_super:2].set(h2)
+    if n_tail:
+        conv_new = conv_new.at[2 * n_super:].set(tail_states[0])
+        h_new = h_new.at[2 * n_super:].set(tail_states[1])
+    return x, conv_new, h_new, kvs
+
+
+def forward(cfg, params, batch, *, remat=False, constrain=None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    state = init_decode_state(cfg, B)
+    x, _, _, _ = _super_scan(cfg, params, x, positions, state, remat=remat,
+                             constrain=constrain)
+    h = L.rmsnorm(x, params["ln_f"].astype(L.COMPUTE_DTYPE))
+    return (h @ params["lm_head"].astype(L.COMPUTE_DTYPE)) \
+        .astype(jnp.float32)
+
+
+def loss_fn(cfg, params, batch, *, remat=True, constrain=None):
+    logits = forward(cfg, params, batch, remat=remat, constrain=constrain)
+    return jnp.mean(L.softmax_xent(logits, batch["labels"]))
+
+
+def prefill(cfg, params, batch, cache_len: int = 0, *, constrain=None,
+            kv_expand=1):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    win = cfg.recurrent.window
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    state = init_decode_state(cfg, B)
+    x, conv_new, h_new, kvs = _super_scan(cfg, params, x, positions, state,
+                                          constrain=constrain)
+    k_all, v_all = kvs                                # (n_attn,B,S,KV,dh)
+    if kv_expand > 1:                                 # TP-aligned serving
+        k_all = jnp.repeat(k_all, kv_expand, axis=3)
+        v_all = jnp.repeat(v_all, kv_expand, axis=3)
+
+    if S >= win:
+        shift = S % win
+        k_ring = jnp.roll(k_all[:, :, -win:], shift, axis=2)
+        v_ring = jnp.roll(v_all[:, :, -win:], shift, axis=2)
+        kp = jnp.roll(jnp.broadcast_to(jnp.arange(S - win, S, dtype=jnp.int32),
+                                       (k_all.shape[0], B, win)), shift,
+                      axis=2)
+    else:
+        pad = [(0, 0), (0, 0), (0, win - S), (0, 0), (0, 0)]
+        k_ring = jnp.pad(k_all, pad)
+        v_ring = jnp.pad(v_all, pad)
+        kp = jnp.pad(jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                      (k_all.shape[0], B, S)),
+                     [(0, 0), (0, 0), (0, win - S)], constant_values=-1)
+
+    new_state = GriffinState(conv=conv_new, h=h_new,
+                             k=k_ring.astype(L.COMPUTE_DTYPE),
+                             v=v_ring.astype(L.COMPUTE_DTYPE),
+                             kpos=kp, pos=jnp.array(S, jnp.int32))
+    hx = L.rmsnorm(x, params["ln_f"].astype(L.COMPUTE_DTYPE))
+    logits = (hx @ params["lm_head"].astype(L.COMPUTE_DTYPE)) \
+        .astype(jnp.float32)
+    return logits[:, -1], new_state
+
+
+def decode_step(cfg, params, state: GriffinState, tokens, *, constrain=None):
+    B = tokens.shape[0]
+    n_super, n_tail = _counts(cfg)
+    pos = state.pos
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens[:, None]]
+
+    def sb_body(carry, xs):
+        xc = carry
+        p, conv1, h1, conv2, h2, ck, cv, ckp = xs
+        y, st1 = _rec_block(cfg, p["rec1"], xc, {"conv": conv1, "h": h1})
+        y, st2 = _rec_block(cfg, p["rec2"], y, {"conv": conv2, "h": h2})
+        y, ast = _attn_block_decode(cfg, p["attn"], y,
+                                    {"k": ck, "v": cv, "kpos": ckp}, pos)
+        return y, (st1["conv"], st1["h"], st2["conv"], st2["h"],
+                   ast["k"], ast["v"], ast["kpos"])
+
+    conv_r, h_r = state.conv, state.h
+    xs = (params["super"], conv_r[0:2 * n_super:2], h_r[0:2 * n_super:2],
+          conv_r[1:2 * n_super:2], h_r[1:2 * n_super:2],
+          state.k, state.v, state.kpos)
+    x, (c1, h1, c2, h2, k_new, v_new, kp_new) = lax.scan(sb_body, x, xs)
+
+    conv_new = jnp.zeros_like(conv_r).at[0:2 * n_super:2].set(c1) \
+        .at[1:2 * n_super:2].set(c2)
+    h_new = jnp.zeros_like(h_r).at[0:2 * n_super:2].set(h1) \
+        .at[1:2 * n_super:2].set(h2)
+    if n_tail:
+        def tail_body(carry, xs):
+            p, conv, h = xs
+            y, st = _rec_block(cfg, p, carry, {"conv": conv, "h": h})
+            return y, (st["conv"], st["h"])
+        x, (ct, ht) = lax.scan(tail_body, x,
+                               (params["tail"], conv_r[2 * n_super:],
+                                h_r[2 * n_super:]))
+        conv_new = conv_new.at[2 * n_super:].set(ct)
+        h_new = h_new.at[2 * n_super:].set(ht)
+
+    hx = L.rmsnorm(x, params["ln_f"].astype(L.COMPUTE_DTYPE))
+    logits = (hx @ params["lm_head"].astype(L.COMPUTE_DTYPE)) \
+        .astype(jnp.float32)[:, 0]
+    new_state = GriffinState(conv=conv_new, h=h_new, k=k_new, v=v_new,
+                             kpos=kp_new, pos=pos + 1)
+    return logits, new_state

@@ -1,0 +1,294 @@
+"""MoE decoder models: olmoe-1b-7b (GQA + 64e top-8) and
+deepseek-v2-lite-16b (MLA latent attention + 2 shared / 64 routed top-6).
+
+MLA decode uses the *absorbed* formulation: the KV cache stores only the
+compressed latent (kv_lora_rank + rope head) per token — the paper-adjacent
+"pack the stationary operand small" idea applied to the KV cache — and
+W_uk / W_uv are folded into the query/output projections at decode time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+from .transformer import _default_batch, _embed, _head
+
+
+# --- params ----------------------------------------------------------------------
+
+def init_params(cfg, key):
+    D, V = cfg.d_model, cfg.vocab_size
+    norm_init, _ = L.make_norm(cfg)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def block_init(k):
+        ks = jax.random.split(k, 10)
+        p = {"ln1": norm_init(ks[0], D), "ln2": norm_init(ks[1], D)}
+        if cfg.mla is not None:
+            m = cfg.mla
+            H = cfg.num_heads
+            p["wq"] = L.dense_init(
+                ks[2], D, H * (m.qk_nope_head_dim + m.qk_rope_head_dim))
+            p["w_dkv"] = L.dense_init(ks[3], D, m.kv_lora_rank)
+            p["w_kr"] = L.dense_init(ks[4], D, m.qk_rope_head_dim)
+            p["kv_ln"] = jnp.ones((m.kv_lora_rank,), L.PARAM_DTYPE)
+            p["w_uk"] = L.trunc_normal(
+                ks[5], (H, m.kv_lora_rank, m.qk_nope_head_dim),
+                std=1.0 / math.sqrt(m.kv_lora_rank))
+            p["w_uv"] = L.trunc_normal(
+                ks[6], (H, m.kv_lora_rank, m.v_head_dim),
+                std=1.0 / math.sqrt(m.kv_lora_rank))
+            p["wo"] = L.dense_init(ks[7], H * m.v_head_dim, D)
+        else:
+            p["wq"] = L.dense_init(ks[2], D, cfg.q_dim)
+            p["wk"] = L.dense_init(ks[3], D, cfg.kv_dim)
+            p["wv"] = L.dense_init(ks[4], D, cfg.kv_dim)
+            p["wo"] = L.dense_init(ks[5], cfg.q_dim, D)
+        p["moe"] = L.init_moe_params(ks[8], cfg, D)
+        return p
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_blocks, cfg.num_layers))
+    return {
+        "embed": L.trunc_normal(k_embed, (V, D)),
+        "blocks": blocks,
+        "ln_f": norm_init(k_head, D),
+        "lm_head": L.dense_init(k_head, D, V),
+    }
+
+
+# --- attention variants ------------------------------------------------------------
+
+def _gqa_part(cfg, p, h, batch, mask, cache, cache_pos):
+    B, S, _ = h.shape
+    cd = L.COMPUTE_DTYPE
+    dh = cfg.head_dim
+    q = (h @ p["wq"].astype(cd)).reshape(B, S, cfg.num_heads, dh)
+    k = (h @ p["wk"].astype(cd)).reshape(B, S, cfg.num_kv_heads, dh)
+    v = (h @ p["wv"].astype(cd)).reshape(B, S, cfg.num_kv_heads, dh)
+    q = L.apply_rope(q, batch["positions"], cfg.rope_theta)
+    k = L.apply_rope(k, batch["positions"], cfg.rope_theta)
+    if cache is not None:
+        ck, cv = cache
+        k = lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                     (0, cache_pos, 0, 0))
+        v = lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                     (0, cache_pos, 0, 0))
+    if mask is None:       # long sequence: never materialize (S, T) scores
+        attn = L.chunked_attention(q, k.astype(cd), v.astype(cd),
+                                   causal=True)
+    else:
+        attn = L.gqa_attention(q, k.astype(cd), v.astype(cd), mask=mask)
+    out = attn.reshape(B, S, cfg.q_dim) @ p["wo"].astype(cd)
+    return out, (k, v)
+
+
+def _mla_part(cfg, p, h, batch, mask, cache, cache_pos):
+    """Multi-head latent attention (training/prefill: materialized K/V;
+    decode: absorbed latent math — see `_mla_decode_part`)."""
+    m = cfg.mla
+    B, S, _ = h.shape
+    H = cfg.num_heads
+    cd = L.COMPUTE_DTYPE
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = (h @ p["wq"].astype(cd)).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, batch["positions"], cfg.rope_theta)
+
+    c_kv = L.rmsnorm(h @ p["w_dkv"].astype(cd), p["kv_ln"])   # (B,S,r)
+    k_rope = L.apply_rope((h @ p["w_kr"].astype(cd))[:, :, None, :],
+                          batch["positions"], cfg.rope_theta)  # (B,S,1,dr)
+
+    latent = jnp.concatenate([c_kv, k_rope[:, :, 0, :]], axis=-1)
+    if cache is not None:
+        latent = lax.dynamic_update_slice(cache, latent.astype(cache.dtype),
+                                          (0, cache_pos, 0))
+        c_all = latent[..., :m.kv_lora_rank].astype(cd)
+        kr_all = latent[..., m.kv_lora_rank:].astype(cd)
+    else:
+        c_all, kr_all = c_kv, k_rope[:, :, 0, :]
+
+    # absorbed scores: q_nope (B,S,H,dn) @ w_uk^T (H,dn,r) -> (B,S,H,r)
+    q_lat = jnp.einsum("bshd,hrd->bshr", q_nope,
+                       p["w_uk"].astype(cd))
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    def scores_chunk(ql, qr, q0, qc):
+        s = (jnp.einsum("bshr,btr->bhst", ql, c_all)
+             + jnp.einsum("bshd,btd->bhst", qr, kr_all))
+        s = s.astype(jnp.float32) * scale
+        if mask is not None:
+            s = jnp.where(mask, s, L.NEG_INF)
+        elif cache is None:     # full-seq causal mask built per chunk
+            qi = (q0 + jnp.arange(qc))[:, None]
+            kj = jnp.arange(c_all.shape[1])[None, :]
+            s = jnp.where((kj <= qi)[None, None], s, L.NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(cd)
+        return jnp.einsum("bhst,btr->bshr", probs, c_all)      # (B,S,H,r)
+
+    if S > L.ATTN_CHUNK_THRESHOLD:   # chunked: never materialize (S, T)
+        qc = math.gcd(S, 1024)
+        n = S // qc
+
+        def body(carry, xs):
+            ql, qr, i = xs
+            return carry, scores_chunk(ql, qr, i * qc, qc)
+
+        qls = q_lat.reshape(B, n, qc, H, -1).swapaxes(0, 1)
+        qrs = q_rope.reshape(B, n, qc, H, -1).swapaxes(0, 1)
+        _, outs = lax.scan(body, 0, (qls, qrs, jnp.arange(n)))
+        out_lat = outs.swapaxes(0, 1).reshape(B, S, H, -1)
+    else:
+        out_lat = scores_chunk(q_lat, q_rope, 0, S)
+    attn = jnp.einsum("bshr,hrd->bshd", out_lat, p["w_uv"].astype(cd))
+    out = attn.reshape(B, S, H * dv) @ p["wo"].astype(cd)
+    return out, latent
+
+
+# --- block ------------------------------------------------------------------------
+
+def _block(cfg, p, x, batch, mask, dims, cache=None, cache_pos=None,
+           constrain=None):
+    _, norm = L.make_norm(cfg)
+    B, S, D = x.shape
+    cd = L.COMPUTE_DTYPE
+    h = norm(x, p["ln1"]).astype(cd)
+    if cfg.mla is not None:
+        # MLA mask shape: (B?,H? broadcast) (.., S, T) -> (1,1,S,T)
+        mla_mask = mask[:, :, 0] if mask is not None and mask.ndim == 5 \
+            else mask
+        attn_out, kv = _mla_part(cfg, p, h, batch, mla_mask, cache, cache_pos)
+    else:
+        attn_out, kv = _gqa_part(cfg, p, h, batch, mask, cache, cache_pos)
+    if constrain is not None:
+        attn_out = constrain(attn_out)
+    y = x + attn_out.astype(x.dtype)
+
+    h2 = norm(y, p["ln2"]).astype(cd)
+    mp = jax.tree.map(lambda a: a.astype(cd), p["moe"])
+    ff, aux = L.moe_ffn(h2.reshape(B * S, D), mp, dims)
+    if cfg.moe.num_shared_experts:
+        ff = ff + L.swiglu(h2.reshape(B * S, D), mp["shared_gate"],
+                           mp["shared_up"], mp["shared_down"])
+    out = y + ff.reshape(B, S, D).astype(x.dtype)
+    if constrain is not None:
+        out = constrain(out)
+    return out, kv, aux
+
+
+# --- forward / loss ------------------------------------------------------------------
+
+def forward(cfg, params, batch, *, remat=False, constrain=None,
+            return_kv=False, return_aux=False):
+    batch = _default_batch(cfg, batch)
+    x = _embed(cfg, params, batch)
+    B, S, D = x.shape
+    mask = L.causal_mask(S, S) if S <= L.ATTN_CHUNK_THRESHOLD else None
+    dims = L.moe_dims(cfg, B * S)
+
+    def body(carry, p):
+        y, kv, aux = _block(cfg, p, carry, batch, mask, dims,
+                            constrain=constrain)
+        return y, (kv if return_kv else 0, aux)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (kvs, auxs) = lax.scan(body, x, params["blocks"])
+    logits = _head(cfg, params, x)
+    aux = jnp.mean(auxs)
+    out = [logits]
+    if return_kv:
+        out.append(kvs)
+    if return_aux:
+        out.append(aux)
+    return tuple(out) if len(out) > 1 else logits
+
+
+def loss_fn(cfg, params, batch, *, remat=True, constrain=None,
+            aux_coef=0.01):
+    logits, aux = forward(cfg, params, batch, remat=remat,
+                          constrain=constrain, return_aux=True)
+    loss = jnp.mean(L.softmax_xent(logits, batch["labels"]))
+    return loss + aux_coef * aux
+
+
+# --- decode -----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MoEDecodeState:
+    kv: jax.Array          # GQA: stacked (2, L, B, T, KV, dh); MLA: (L,B,T,r+dr)
+    pos: jax.Array
+
+
+jax.tree_util.register_dataclass(MoEDecodeState, data_fields=["kv", "pos"],
+                                 meta_fields=[])
+
+
+def init_decode_state(cfg, batch_size: int, cache_len: int,
+                      dtype=L.COMPUTE_DTYPE, kv_expand=1) -> MoEDecodeState:
+    assert kv_expand == 1, "olmoe KV=16 divides tp; MLA caches latents"  
+    if cfg.mla is not None:
+        width = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        kv = jnp.zeros((cfg.num_layers, batch_size, cache_len, width), dtype)
+    else:
+        kv = jnp.zeros((2, cfg.num_layers, batch_size, cache_len,
+                        cfg.num_kv_heads, cfg.head_dim), dtype)
+    return MoEDecodeState(kv=kv, pos=jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg, params, batch, cache_len: int, *, constrain=None,
+            kv_expand=1):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    logits, kvs, _ = forward(cfg, params, batch, return_kv=True,
+                             return_aux=True, constrain=constrain)
+    if cfg.mla is not None:
+        pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0)]
+        kv = jnp.pad(kvs.astype(L.COMPUTE_DTYPE), pad)
+    else:
+        k, v = kvs
+        pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+        kv = jnp.stack([jnp.pad(k.astype(L.COMPUTE_DTYPE), pad),
+                        jnp.pad(v.astype(L.COMPUTE_DTYPE), pad)])
+    return logits[:, -1], MoEDecodeState(kv=kv, pos=jnp.array(S, jnp.int32))
+
+
+def decode_step(cfg, params, state: MoEDecodeState, tokens, *,
+                constrain=None):
+    B = tokens.shape[0]
+    pos = state.pos
+    T = state.kv.shape[-2] if cfg.mla is not None else state.kv.shape[-3]
+    batch = _default_batch(cfg, {"tokens": tokens[:, None],
+                                 "positions": jnp.full((B, 1), pos,
+                                                       jnp.int32)})
+    x = _embed(cfg, params, batch)
+    kj = jnp.arange(T)[None, :]
+    mask5 = (kj <= pos)[None, None, None]     # (1,1,1,1,T)
+    dims = L.moe_dims(cfg, B)
+
+    if cfg.mla is not None:
+        def body(carry, xs):
+            p, cache = xs
+            y, kv, _ = _block(cfg, p, carry, batch, mask5, dims,
+                              cache=cache, cache_pos=pos)
+            return y, kv
+        x, kv_new = lax.scan(body, x, (params["blocks"], state.kv))
+    else:
+        def body(carry, xs):
+            p, ck, cv = xs
+            y, (k, v), _ = _block(cfg, p, carry, batch, mask5, dims,
+                                  cache=(ck, cv), cache_pos=pos)
+            return y, (k, v)
+        x, (k_new, v_new) = lax.scan(body, x,
+                                     (params["blocks"], state.kv[0],
+                                      state.kv[1]))
+        kv_new = jnp.stack([k_new, v_new])
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, MoEDecodeState(kv=kv_new, pos=pos + 1)

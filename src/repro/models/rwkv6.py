@@ -1,0 +1,332 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892) — attention-free linear recurrence with
+data-dependent per-channel decay.
+
+Per block: time-mix (token-shift ddlerp -> r/k/v/w/g projections -> WKV
+linear recurrence with decay w_t and bonus u) + channel-mix (squared-ReLU
+FFN gated by sigmoid(r)).
+
+State per layer: shift registers (last x for att & ffn paths) + the WKV
+matrix state (B, H, dk, dv) — O(1) per decoded token, which is why this arch
+runs the long_500k shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+
+MIX_LORA = 32     # token-shift ddlerp lora rank
+DECAY_LORA = 64   # data-dependent decay lora rank
+STREAMS = 5       # r, k, v, w, g
+
+
+def init_params(cfg, key):
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    H, dh = cfg.num_heads, cfg.head_dim
+    assert H * dh == D
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def block_init(k):
+        ks = jax.random.split(k, 16)
+        return {
+            "ln1": jnp.ones((D,), L.PARAM_DTYPE),
+            "ln1b": jnp.zeros((D,), L.PARAM_DTYPE),
+            "ln2": jnp.ones((D,), L.PARAM_DTYPE),
+            "ln2b": jnp.zeros((D,), L.PARAM_DTYPE),
+            # token-shift ddlerp
+            "mu_base": L.trunc_normal(ks[0], (STREAMS, D), std=0.1),
+            "mix_w1": L.trunc_normal(ks[1], (D, STREAMS * MIX_LORA)),
+            "mix_w2": L.trunc_normal(ks[2], (STREAMS, MIX_LORA, D)),
+            # projections
+            "wr": L.dense_init(ks[3], D, D),
+            "wk": L.dense_init(ks[4], D, D),
+            "wv": L.dense_init(ks[5], D, D),
+            "wg": L.dense_init(ks[6], D, D),
+            "wo": L.dense_init(ks[7], D, D),
+            # decay + bonus
+            "w_base": L.trunc_normal(ks[8], (D,), std=0.5),
+            "w_lora_a": L.trunc_normal(ks[9], (D, DECAY_LORA)),
+            "w_lora_b": L.trunc_normal(ks[10], (DECAY_LORA, D)),
+            "u": L.trunc_normal(ks[11], (H, dh), std=0.5),
+            # per-head output groupnorm
+            "gn": jnp.ones((D,), L.PARAM_DTYPE),
+            "gnb": jnp.zeros((D,), L.PARAM_DTYPE),
+            # channel mix
+            "mu_ffn": L.trunc_normal(ks[12], (2, D), std=0.1),
+            "ffn_k": L.dense_init(ks[13], D, F),
+            "ffn_v": L.dense_init(ks[14], F, D),
+            "ffn_r": L.dense_init(ks[15], D, D),
+        }
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_blocks, cfg.num_layers))
+    return {
+        "embed": L.trunc_normal(k_embed, (V, D)),
+        "ln_in": jnp.ones((D,), L.PARAM_DTYPE),
+        "ln_inb": jnp.zeros((D,), L.PARAM_DTYPE),
+        "blocks": blocks,
+        "ln_f": jnp.ones((D,), L.PARAM_DTYPE),
+        "ln_fb": jnp.zeros((D,), L.PARAM_DTYPE),
+        "lm_head": L.dense_init(k_head, D, V),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift interpolation -> the 5 mixed streams."""
+    delta = x_prev - x                                          # (B,S,D)
+    xx = x + delta * p["mu_base"][0]  # base mix for the lora input
+    lora = jnp.tanh(xx @ p["mix_w1"])                           # (B,S,5*r)
+    B, S, _ = lora.shape
+    lora = lora.reshape(B, S, STREAMS, MIX_LORA)
+    adj = jnp.einsum("bsnr,nrd->bnsd", lora, p["mix_w2"])       # (B,5,S,D)
+    mixed = x[:, None] + delta[:, None] * (p["mu_base"][None, :, None]
+                                           + adj.transpose(0, 1, 2, 3))
+    return [mixed[:, i] for i in range(STREAMS)]                # 5 x (B,S,D)
+
+
+def _lora_streams(p, x, x_prev):
+    """delta and the shared (B,S,5,r) lora activations — the small
+    full-precision part of the ddlerp; adj itself stays D-sharded."""
+    delta = x_prev - x                                          # (B,S,D)
+    xx = x + delta * p["mu_base"][0]
+    lora = jnp.tanh(xx @ p["mix_w1"])                           # (B,S,5*r)
+    B, S, _ = lora.shape
+    return delta, lora.reshape(B, S, STREAMS, MIX_LORA)
+
+
+def _mixed_proj(p, x, delta, lora, idx, W):
+    """((x + delta*(mu[idx] + adj_idx)) @ W) WITHOUT gathering adj.
+
+    §Perf iteration A2 (beyond-paper): the ddlerp adjustment adj_idx =
+    lora_idx @ mix_w2[idx] is rank-32 and naturally D-sharded (mix_w2 is
+    column-parallel). Gathering the five (B,S,D) mixed streams costs
+    ~2.7 GB/layer; splitting the projection into a column-parallel base
+    term plus a D-sharded partial contraction replaces the gather with
+    an all-reduce of the (B,S,out/tp) shard (~16x fewer bytes, +6%
+    FLOPs/chip).
+    """
+    mu = p["mu_base"][idx]                        # (D,) replicated
+    base = (x + delta * mu) @ W                   # col-parallel, local
+    adj = jnp.einsum("bsr,rd->bsd", lora[:, :, idx], p["mix_w2"][idx])
+    adj = L.shard_hint(adj, "dp", None, "tp")     # keep D sharded
+    return base + (delta * adj) @ W               # partial-D -> all-reduce
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """WKV linear recurrence, token-sequential reference.
+    r,k,w: (B,S,H,dk); v: (B,S,H,dv); u: (H,dk); state: (B,H,dk,dv).
+    Returns y (B,S,H,dv), new state."""
+    u = u.astype(jnp.float32)
+
+    def step(S_, xs):
+        r_t, k_t, v_t, w_t = xs                                  # (B,H,d*)
+        kv = k_t[..., :, None] * v_t[..., None, :]               # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S_ + u[None, :, :, None] * kv)
+        S_ = w_t[..., :, None] * S_ + kv
+        return S_, y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+               for t in (r, k, v, w))                            # (S,B,H,d)
+    state, ys = lax.scan(step, state.astype(jnp.float32), xs)
+    return (jnp.moveaxis(ys, 0, 1).astype(r.dtype),
+            state.astype(r.dtype))                               # (B,S,H,dv)
+
+
+WKV_CHUNK = 32
+
+
+def _wkv_chunked(r, k, v, w, u, state, chunk=WKV_CHUNK):
+    """Chunk-parallel WKV — §Perf iteration A1 (beyond-paper).
+
+    The sequential scan touches the (B,H,dk,dv) state per TOKEN; chunking
+    touches it per CHUNK and turns the intra-chunk work into batched
+    contractions (MXU food). Exact reformulation with cumulative decays
+    cs = cumsum(log w):
+
+        y_i = (r_i * e^{cs_{i-1}}) @ S_in
+            + sum_{j<i} <r_i, k_j * e^{cs_{i-1}-cs_j}> v_j
+            + <r_i, u * k_i> v_i
+        S_out = e^{cs_last} * S_in + sum_j (k_j * e^{cs_last-cs_j}) v_j^T
+
+    every exponent is <= 0 (w in (0,1)) — no overflow path. f32 math.
+    """
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    if S % chunk:
+        chunk = math.gcd(S, chunk) or 1
+    if chunk <= 1:
+        return _wkv_scan(r, k, v, w, u, state)
+    n = S // chunk
+    f32 = jnp.float32
+    rc, kc, vc, wc = (jnp.moveaxis(
+        t.reshape(B, n, chunk, H, -1), 1, 0).astype(f32)
+        for t in (r, k, v, w))                      # (n,B,C,H,d)
+    u32 = u.astype(f32)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # j < i
+
+    def per_chunk(S_, xs):
+        rq, kq, vq, wq = xs                          # (B,C,H,d)
+        logw = jnp.maximum(jnp.log(wq), -30.0)
+        cs = jnp.cumsum(logw, axis=1)                # (B,C,H,dk)
+        cs_prev = cs - logw                          # exclusive cumsum
+        # inter-chunk: read the carried state once
+        y_inter = jnp.einsum("bchk,bhkv->bchv", rq * jnp.exp(cs_prev), S_)
+        # intra-chunk: masked per-channel decay contraction
+        expo = cs_prev[:, :, None] - cs[:, None]     # (B,C,C,H,dk), <=0 on tri
+        a = jnp.einsum("bihk,bjhk,bijhk->bijh", rq, kq,
+                       jnp.exp(jnp.where(tri[None, :, :, None, None],
+                                         expo, -jnp.inf)))
+        diag = jnp.einsum("bchk,hk,bchk->bch", rq, u32, kq)
+        a = a + diag[:, :, None] * jnp.eye(chunk)[None, :, :, None]
+        y = y_inter + jnp.einsum("bijh,bjhv->bihv", a, vq)
+        # carry the state across the chunk boundary
+        decay_out = jnp.exp(cs[:, -1:] - cs)         # (B,C,H,dk), <=0 exps
+        S_ = jnp.exp(cs[:, -1])[..., None] * S_ \
+            + jnp.einsum("bchk,bchv->bhkv", kq * decay_out, vq)
+        return S_, y
+
+    state, ys = lax.scan(per_chunk, state.astype(f32), (rc, kc, vc, wc))
+    ys = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dv)
+    return ys.astype(r.dtype), state.astype(r.dtype)
+
+
+def _time_mix(cfg, p, x, x_prev_last, wkv_state):
+    """x: (B,S,D). x_prev_last: (B,D) carry from previous chunk/step."""
+    B, S, D = x.shape
+    H, dh = cfg.num_heads, cfg.head_dim
+    cd = L.COMPUTE_DTYPE
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    # NOTE §Perf iteration A2 (refuted): splitting these projections into
+    # a local base term + a D-sharded adj term (see _mixed_proj) WORSENED
+    # the collective term 27.8s -> 38.9s: with column-parallel weights the
+    # contracting dim is replicated, so SPMD all-gathers the lhs either
+    # way, and the split doubled the gathered tensors. A real fix needs a
+    # residual-D-sharded (sequence-parallel-style) layer layout with
+    # row-parallel weights + reduce-scatter outputs — future work.
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    r = (xr @ p["wr"]).reshape(B, S, H, dh)
+    k = (xk @ p["wk"]).reshape(B, S, H, dh)
+    v = (xv @ p["wv"]).reshape(B, S, H, dh)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = p["w_base"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).astype(cd)
+    w = w.reshape(B, S, H, dh)
+    wkv = _wkv_chunked if S > 1 else _wkv_scan
+    y, wkv_state = wkv(r, k, v, w, p["u"].astype(cd), wkv_state)
+    y = y.reshape(B, S, D)
+    # per-head group norm
+    yg = y.reshape(B, S, H, dh)
+    yg = L.layernorm(yg, None)
+    y = yg.reshape(B, S, D) * p["gn"] + p["gnb"]
+    out = (y * g) @ p["wo"]
+    return out.astype(x.dtype), x[:, -1], wkv_state
+
+
+def _channel_mix(p, x, x_prev_last):
+    x_prev = jnp.concatenate([x_prev_last[:, None], x[:, :-1]], axis=1)
+    delta = x_prev - x
+    xk = x + delta * p["mu_ffn"][0]
+    xr = x + delta * p["mu_ffn"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["ffn_k"]))
+    return jax.nn.sigmoid(xr @ p["ffn_r"]) * (k @ p["ffn_v"]), x[:, -1]
+
+
+def _block(cfg, p, x, att_prev, ffn_prev, wkv_state):
+    cd = L.COMPUTE_DTYPE
+    pc = jax.tree.map(lambda a: a.astype(cd), p)
+    h = L.layernorm(x, pc["ln1"], pc["ln1b"]).astype(cd)
+    att, att_last, wkv_state = _time_mix(cfg, pc, h, att_prev, wkv_state)
+    x = x + att.astype(x.dtype)
+    h2 = L.layernorm(x, pc["ln2"], pc["ln2b"]).astype(cd)
+    ffn, ffn_last = _channel_mix(pc, h2, ffn_prev)
+    return x + ffn.astype(x.dtype), att_last, ffn_last, wkv_state
+
+
+# --- state ---------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RwkvState:
+    att_prev: jax.Array    # (L, B, D)  last normed x seen by time-mix
+    ffn_prev: jax.Array    # (L, B, D)
+    wkv: jax.Array         # (L, B, H, dk, dv) f32
+    pos: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    RwkvState, data_fields=["att_prev", "ffn_prev", "wkv", "pos"],
+    meta_fields=[])
+
+
+def init_decode_state(cfg, batch_size: int, cache_len: int = 0, kv_expand=1,
+                      dtype=L.COMPUTE_DTYPE) -> RwkvState:
+    Lr, D = cfg.num_layers, cfg.d_model
+    H, dh = cfg.num_heads, cfg.head_dim
+    return RwkvState(
+        att_prev=jnp.zeros((Lr, batch_size, D), dtype),
+        ffn_prev=jnp.zeros((Lr, batch_size, D), dtype),
+        wkv=jnp.zeros((Lr, batch_size, H, dh, dh), dtype),
+        pos=jnp.zeros((), jnp.int32))
+
+
+# --- forward / loss / decode ------------------------------------------------------
+
+def _run(cfg, params, tokens, state: RwkvState, *, remat=False,
+         constrain=None):
+    cd = L.COMPUTE_DTYPE
+    x = params["embed"].astype(cd)[tokens]
+    x = L.layernorm(x, params["ln_in"].astype(cd),
+                    params["ln_inb"].astype(cd))
+
+    def body(carry, xs):
+        p, ap, fp, wkv = xs
+        y, ap2, fp2, wkv2 = _block(cfg, p, carry, ap, fp, wkv)
+        if constrain is not None:
+            y = constrain(y)
+        return y, (ap2, fp2, wkv2)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, (ap, fp, wkv) = lax.scan(
+        body, x, (params["blocks"], state.att_prev, state.ffn_prev,
+                  state.wkv))
+    h = L.layernorm(x, params["ln_f"].astype(cd),
+                    params["ln_fb"].astype(cd))
+    logits = (h @ params["lm_head"].astype(cd)).astype(jnp.float32)
+    new_state = RwkvState(att_prev=ap, ffn_prev=fp, wkv=wkv,
+                          pos=state.pos + tokens.shape[1])
+    return logits, new_state
+
+
+def forward(cfg, params, batch, *, remat=False, constrain=None):
+    B = batch["tokens"].shape[0]
+    state = init_decode_state(cfg, B)
+    logits, _ = _run(cfg, params, batch["tokens"], state, remat=remat,
+                     constrain=constrain)
+    return logits
+
+
+def loss_fn(cfg, params, batch, *, remat=True, constrain=None):
+    logits = forward(cfg, params, batch, remat=remat, constrain=constrain)
+    return jnp.mean(L.softmax_xent(logits, batch["labels"]))
+
+
+def prefill(cfg, params, batch, cache_len: int = 0, *, constrain=None,
+            kv_expand=1):
+    B = batch["tokens"].shape[0]
+    state = init_decode_state(cfg, B)
+    logits, state = _run(cfg, params, batch["tokens"], state,
+                         constrain=constrain)
+    return logits[:, -1], state
+
+
+def decode_step(cfg, params, state: RwkvState, tokens, *, constrain=None):
+    logits, state = _run(cfg, params, tokens[:, None], state,
+                         constrain=constrain)
+    return logits[:, 0], state

@@ -1,0 +1,241 @@
+"""Dense decoder-only transformer.
+
+Covers: codeqwen1.5-7b, olmo-1b, command-r-35b, command-r-plus-104b and the
+qwen2-vl-7b backbone (M-RoPE + patch-embedding injection; vision frontend is
+a stub per the task spec).
+
+Block params are stacked on a leading layer axis and executed with
+jax.lax.scan; an optional remat policy wraps the block body. The same block
+runs train (full seq), prefill (full seq + returns KV), and decode (S=1 +
+cache update).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import layers as L
+
+
+# --- params ----------------------------------------------------------------------
+
+def init_params(cfg, key):
+    D, F, V = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    Q, KV = cfg.q_dim, cfg.kv_dim
+    norm_init, _ = L.make_norm(cfg)
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+    def block_init(k):
+        ks = jax.random.split(k, 8)
+        p = {
+            "ln1": norm_init(ks[0], D),
+            "ln2": norm_init(ks[1], D),
+            "wq": L.dense_init(ks[2], D, Q),
+            "wk": L.dense_init(ks[3], D, KV),
+            "wv": L.dense_init(ks[4], D, KV),
+            "wo": L.dense_init(ks[5], Q, D),
+            "w_gate": L.dense_init(ks[6], D, F),
+            "w_up": L.dense_init(ks[7], D, F),
+            "w_down": L.dense_init(ks[0], F, D),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((Q,), L.PARAM_DTYPE)
+            p["bk"] = jnp.zeros((KV,), L.PARAM_DTYPE)
+            p["bv"] = jnp.zeros((KV,), L.PARAM_DTYPE)
+        return p
+
+    blocks = jax.vmap(block_init)(jax.random.split(k_blocks, cfg.num_layers))
+    params = {
+        "embed": L.trunc_normal(k_embed, (V, D)),
+        "blocks": blocks,
+        "ln_f": norm_init(k_head, D),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, D, V)
+    if cfg.family == "vlm":
+        params["patch_proj"] = L.dense_init(k_head, D, D)
+    return params
+
+
+# --- block -----------------------------------------------------------------------
+
+def _rope(cfg, x, batch):
+    if cfg.mrope:
+        return L.apply_mrope(x, batch["pos3"], cfg.rope_theta)
+    return L.apply_rope(x, batch["positions"], cfg.rope_theta)
+
+
+def _block(cfg, p, x, batch, mask, cache=None, cache_pos=None,
+           constrain=None, kv_expand=1):
+    """One decoder block. cache: (k, v) with shape (B, T, KV*e, dh) or
+    None. Returns (y, (k_full, v_full)) where k_full/v_full include the
+    cache. kv_expand replicates KV heads for TP-aligned serving."""
+    _, norm = L.make_norm(cfg)
+    B, S, D = x.shape
+    dh = cfg.head_dim
+    cd = L.COMPUTE_DTYPE
+
+    h = norm(x, p["ln1"]).astype(cd)
+    q = h @ p["wq"].astype(cd)
+    k = h @ p["wk"].astype(cd)
+    v = h @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q, k, v = (q + p["bq"].astype(cd), k + p["bk"].astype(cd),
+                   v + p["bv"].astype(cd))
+    q = q.reshape(B, S, cfg.num_heads, dh)
+    k = k.reshape(B, S, cfg.num_kv_heads, dh)
+    v = v.reshape(B, S, cfg.num_kv_heads, dh)
+    q = _rope(cfg, q, batch)
+    k = _rope(cfg, k, batch)
+
+    if cache is not None:
+        ck, cv = cache
+        k = lax.dynamic_update_slice(ck, L.expand_kv(k, kv_expand)
+                                     .astype(ck.dtype), (0, cache_pos, 0, 0))
+        v = lax.dynamic_update_slice(cv, L.expand_kv(v, kv_expand)
+                                     .astype(cv.dtype), (0, cache_pos, 0, 0))
+
+    if mask is None:       # long sequence: never materialize (S, T) scores
+        attn = L.chunked_attention(q, k.astype(cd), v.astype(cd),
+                                   causal=True)
+    else:
+        attn = L.gqa_attention(q, k.astype(cd), v.astype(cd), mask=mask)
+    if constrain is not None:
+        attn = constrain(attn)
+    y = x + (attn.reshape(B, S, cfg.q_dim) @ p["wo"].astype(cd)).astype(x.dtype)
+
+    h2 = norm(y, p["ln2"]).astype(cd)
+    ff = L.swiglu(h2, p["w_gate"].astype(cd), p["w_up"].astype(cd),
+                  p["w_down"].astype(cd))
+    out = y + ff.astype(x.dtype)
+    if constrain is not None:
+        out = constrain(out)
+    return out, (k, v)
+
+
+# --- embedding / head ---------------------------------------------------------------
+
+def _embed(cfg, params, batch):
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[batch["tokens"]]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(L.COMPUTE_DTYPE) \
+            @ params["patch_proj"].astype(L.COMPUTE_DTYPE)
+        P = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, P:]], axis=1)
+    return x
+
+
+def _head(cfg, params, x):
+    _, norm = L.make_norm(cfg)
+    h = norm(x, params["ln_f"]).astype(L.COMPUTE_DTYPE)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return (h @ w.astype(L.COMPUTE_DTYPE)).astype(jnp.float32)
+
+
+def _default_batch(cfg, batch):
+    b = dict(batch)
+    B, S = b["tokens"].shape
+    if "positions" not in b:
+        b["positions"] = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                          (B, S))
+    if cfg.mrope and "pos3" not in b:
+        b["pos3"] = jnp.broadcast_to(b["positions"][None], (3, B, S))
+    return b
+
+
+# --- full-sequence forward (train / prefill) ------------------------------------------
+
+def forward(cfg, params, batch, *, remat=False, constrain=None,
+            return_kv=False):
+    batch = _default_batch(cfg, batch)
+    x = _embed(cfg, params, batch)
+    B, S, D = x.shape
+    mask = L.causal_mask(S, S) if S <= L.ATTN_CHUNK_THRESHOLD else None
+
+    def body(carry, p):
+        y, kv = _block(cfg, p, carry, batch, mask, constrain=constrain)
+        return y, (kv if return_kv else 0)
+
+    if remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, kvs = lax.scan(body, x, params["blocks"])
+    logits = _head(cfg, params, x)
+    return (logits, kvs) if return_kv else logits
+
+
+def loss_fn(cfg, params, batch, *, remat=True, constrain=None):
+    logits = forward(cfg, params, batch, remat=remat, constrain=constrain)
+    loss = L.softmax_xent(logits, batch["labels"])
+    return jnp.mean(loss)
+
+
+# --- decode ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecodeState:
+    k: jax.Array           # (L, B, T, KV, dh)
+    v: jax.Array
+    pos: jax.Array         # scalar int32: next write offset
+
+
+jax.tree_util.register_dataclass(DecodeState, data_fields=["k", "v", "pos"],
+                                 meta_fields=[])
+
+
+def init_decode_state(cfg, batch_size: int, cache_len: int,
+                      dtype=L.COMPUTE_DTYPE, kv_expand=1) -> DecodeState:
+    shape = (cfg.num_layers, batch_size, cache_len,
+             cfg.num_kv_heads * kv_expand, cfg.head_dim)
+    return DecodeState(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       pos=jnp.zeros((), jnp.int32))
+
+
+def prefill(cfg, params, batch, cache_len: int, *, constrain=None,
+            kv_expand=1):
+    """Run the full prompt, materialize the KV cache, return last logits."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    logits, kvs = forward(cfg, params, batch, return_kv=True,
+                          constrain=constrain)
+    k, v = kvs                                 # (L, B, S, KV, dh)
+    if kv_expand > 1:                          # expand on the head axis (3)
+        k, v = (jnp.repeat(t, kv_expand, axis=3) for t in (k, v))
+    pad = [(0, 0), (0, 0), (0, cache_len - S), (0, 0), (0, 0)]
+    state = DecodeState(k=jnp.pad(k.astype(L.COMPUTE_DTYPE), pad),
+                        v=jnp.pad(v.astype(L.COMPUTE_DTYPE), pad),
+                        pos=jnp.array(S, jnp.int32))
+    return logits[:, -1], state
+
+
+def decode_step(cfg, params, state: DecodeState, tokens, *, constrain=None):
+    """One token for the whole batch. tokens: (B,) int32."""
+    B = tokens.shape[0]
+    T = state.k.shape[2]
+    kv_expand = state.k.shape[3] // cfg.num_kv_heads
+    pos = state.pos
+    batch = {"tokens": tokens[:, None],
+             "positions": jnp.full((B, 1), pos, jnp.int32)}
+    batch = _default_batch(cfg, batch)
+    x = _embed(cfg, params, batch)
+    # valid keys: cache slots < pos, plus the slot we are writing now.
+    kj = jnp.arange(T)[None, :]
+    mask = (kj <= pos)[None, None, None]
+
+    def body(carry, xs):
+        p, ck, cv = xs
+        y, (k_full, v_full) = _block(cfg, p, carry, batch, mask,
+                                     cache=(ck, cv), cache_pos=pos,
+                                     constrain=constrain,
+                                     kv_expand=kv_expand)
+        return y, (k_full, v_full)
+
+    x, (k_new, v_new) = lax.scan(body, x, (params["blocks"], state.k, state.v))
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, DecodeState(k=k_new, v=v_new, pos=pos + 1)

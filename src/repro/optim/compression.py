@@ -1,0 +1,39 @@
+"""int8 gradient compression with stochastic rounding.
+
+For the cross-pod gradient reduction (DCN-bandwidth-bound at 1000+ nodes)
+gradients can be quantized to int8 + per-tensor f32 scale before the
+``pod``-axis psum and dequantized after — a 4x wire-bytes reduction on the
+slowest link. Stochastic rounding keeps the quantizer unbiased, so SGD
+convergence is preserved in expectation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_compress(tree, key):
+    """pytree of f32/bf16 -> (pytree of int8, pytree of f32 scales)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+
+    def q(g, k):
+        g = g.astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        x = g / scale
+        lo = jnp.floor(x)
+        p = x - lo                                  # in [0, 1)
+        up = jax.random.bernoulli(k, p, g.shape)
+        q8 = jnp.clip(lo + up.astype(jnp.float32), -127, 127)
+        return q8.astype(jnp.int8), scale
+
+    qs = [q(g, k) for g, k in zip(leaves, keys)]
+    return treedef.unflatten([a for a, _ in qs]), \
+        treedef.unflatten([s for _, s in qs])
+
+
+def int8_decompress(q_tree, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda q8, s: (q8.astype(jnp.float32) * s).astype(dtype),
+        q_tree, scales)

@@ -1,0 +1,10 @@
+"""TPU adaptation of the paper's packing: canvas layout + HBM residency."""
+
+from .mxu_pack import (ChunkPlacement, PackedLayout, WeightMatrix,
+                       pack_canvas)
+from .residency import (Decision, ParamTensor, ResidencyPlan, plan_residency,
+                        weight_inventory)
+
+__all__ = ["ChunkPlacement", "PackedLayout", "WeightMatrix", "pack_canvas",
+           "Decision", "ParamTensor", "ResidencyPlan", "plan_residency",
+           "weight_inventory"]

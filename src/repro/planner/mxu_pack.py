@@ -1,0 +1,271 @@
+"""Weight packing -> virtual-plane layout for the packed_canvas kernel.
+
+The paper packs weight tiles into the D_i x D_o multiplier plane of IMC
+macros, overflowing into the D_m cell depth. The TPU analogue places every
+small weight matrix into one *virtual* plane
+
+    rows  (R) = concatenation of distinct input vectors   (D_i reuse)
+    cols  (C) = concatenation of tile output ranges       (D_o)
+
+and stores only the 128x128 MXU blocks that intersect a tile, compacted
+into ``w_blocks (G, 128, 128)`` — the D_m capacity axis become a block
+list. Both of the paper's objectives collapse into one number here:
+
+    density = sum(tile volumes) / (G * 128 * 128)
+
+fewer blocks = less memory held AND fewer MXU passes, since the kernel
+visits exactly the block list. Placement is deliberately *unaligned*:
+matrices sharing an input (share_group — fused QKV, gate+up) share rows;
+adjacent small tiles share edge blocks. Oversize matrices are chunked:
+column chunks reassemble by concat (§3.1 — outputs independent along
+D_o); row chunks are the paper's *folding* (§3.4) and reassemble by
+summation in ``gather_outputs``.
+
+Correctness rests on one invariant the layout maintains: a tile's row
+interval holds exactly its input vector in x_packed, its column interval
+belongs to it alone, and W_virtual is zero outside tiles — so the virtual
+matmul computes every tile's y = x @ W independently, whatever blocks the
+cover stores around them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.packed_canvas import build_block_meta
+
+BLK = 128
+
+
+def _ceil(x: int, m: int = BLK) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightMatrix:
+    """One packable weight: y[B, cols] = x[B, rows] @ W[rows, cols].
+
+    ``share_group``: matrices in the same group consume the same input and
+    share a row interval (fused QKV / gate-up — the D_i reuse argument).
+    """
+    name: str
+    rows: int
+    cols: int
+    share_group: str | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlacement:
+    """One placed chunk of a matrix: W[src_row:+rows, src_col:+cols] sits
+    at virtual-plane position (x_off, y_off)."""
+    x_off: int
+    y_off: int
+    rows: int
+    cols: int
+    src_row: int = 0
+    src_col: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedLayout:
+    R: int                                   # x_packed width (128-multiple)
+    C: int                                   # y_packed width (128-multiple)
+    placements: Mapping[str, tuple[ChunkPlacement, ...]]
+
+    def _all(self):
+        for name, chunks in self.placements.items():
+            for p in chunks:
+                yield name, p
+
+    # -- block cover (what the kernel/memory actually touch) ----------------
+
+    @property
+    def blocks(self) -> np.ndarray:
+        """(N, 2) sorted unique (kb, cb) blocks intersecting any tile."""
+        s: set[tuple[int, int]] = set()
+        for _, p in self._all():
+            for kb in range(p.x_off // BLK, _ceil(p.x_off + p.rows) // BLK):
+                for cb in range(p.y_off // BLK,
+                                _ceil(p.y_off + p.cols) // BLK):
+                    s.add((kb, cb))
+        return np.asarray(sorted(s), np.int64).reshape(-1, 2)
+
+    @property
+    def num_blocks(self) -> int:
+        return len(self.blocks)
+
+    @property
+    def density(self) -> float:
+        """The paper's packing density on MXU blocks: true weight volume
+        over stored-block volume. 1.0 = perfectly packed."""
+        vol = sum(p.rows * p.cols for _, p in self._all())
+        return vol / (self.num_blocks * BLK * BLK)
+
+    def block_meta(self) -> np.ndarray:
+        meta, _ = build_block_meta(self.blocks)
+        return meta
+
+    # -- array builders -------------------------------------------------------
+
+    def build_w_blocks(self, weights: Mapping[str, np.ndarray],
+                       dtype=jnp.bfloat16) -> jnp.ndarray:
+        """(G, 128, 128) compacted blocks in meta order (host-side, once)."""
+        blocks = self.blocks
+        _, order = build_block_meta(blocks)
+        index = {tuple(b): i for i, b in enumerate(blocks[order])}
+        out = np.zeros((len(blocks), BLK, BLK), np.float32)
+        for name, p in self._all():
+            wi = np.asarray(weights[name], np.float32)
+            wi = wi[p.src_row:p.src_row + p.rows,
+                    p.src_col:p.src_col + p.cols]
+            for kb in range(p.x_off // BLK, _ceil(p.x_off + p.rows) // BLK):
+                for cb in range(p.y_off // BLK,
+                                _ceil(p.y_off + p.cols) // BLK):
+                    g = index[(kb, cb)]
+                    # intersection of block window and tile extent
+                    r0 = max(kb * BLK, p.x_off)
+                    r1 = min((kb + 1) * BLK, p.x_off + p.rows)
+                    c0 = max(cb * BLK, p.y_off)
+                    c1 = min((cb + 1) * BLK, p.y_off + p.cols)
+                    out[g, r0 - kb * BLK:r1 - kb * BLK,
+                        c0 - cb * BLK:c1 - cb * BLK] = \
+                        wi[r0 - p.x_off:r1 - p.x_off,
+                           c0 - p.y_off:c1 - p.y_off]
+        return jnp.asarray(out, dtype)
+
+    def build_x_packed(self, inputs: Mapping[str, jnp.ndarray],
+                       batch: int, dtype=jnp.bfloat16) -> jnp.ndarray:
+        """(B, R): write each matrix's full input at its chunks' offsets.
+
+        ``inputs[name]``: (batch, matrix.rows). Row chunks take their
+        src_row slice; share-group members write identical rows.
+        """
+        x = jnp.zeros((batch, self.R), dtype)
+        for name, p in self._all():
+            xi = inputs[name].astype(dtype)
+            x = x.at[:, p.x_off:p.x_off + p.rows].set(
+                xi[:, p.src_row:p.src_row + p.rows])
+        return x
+
+    def gather_outputs(self, y_packed: jnp.ndarray) -> dict[str, jnp.ndarray]:
+        """Reassemble (B, cols) per matrix: concat column chunks, sum row
+        chunks (fold accumulation)."""
+        out = {}
+        for name, chunks in self.placements.items():
+            by_col: dict[int, list[ChunkPlacement]] = {}
+            for p in chunks:
+                by_col.setdefault(p.src_col, []).append(p)
+            parts = []
+            for src_col in sorted(by_col):
+                ps = by_col[src_col]
+                acc = y_packed[:, ps[0].y_off:ps[0].y_off + ps[0].cols]
+                for p in ps[1:]:
+                    acc = acc + y_packed[:, p.y_off:p.y_off + p.cols]
+                parts.append(acc)
+            out[name] = jnp.concatenate(parts, axis=-1) if len(parts) > 1 \
+                else parts[0]
+        return out
+
+    def build_w_virtual(self, weights: Mapping[str, np.ndarray],
+                        dtype=jnp.float32) -> jnp.ndarray:
+        """Dense (R, C) virtual plane — oracle/debug only."""
+        w = np.zeros((self.R, self.C), np.float32)
+        for name, p in self._all():
+            wi = np.asarray(weights[name], np.float32)
+            w[p.x_off:p.x_off + p.rows, p.y_off:p.y_off + p.cols] = \
+                wi[p.src_row:p.src_row + p.rows,
+                   p.src_col:p.src_col + p.cols]
+        return jnp.asarray(w, dtype)
+
+
+def _chunk(m: WeightMatrix, max_rows: int, max_cols: int):
+    """Split an oversize matrix into (rows, cols, src_row, src_col) pieces.
+
+    Chunked matrices keep their share_group only for the first row chunk
+    (later row chunks consume different input slices).
+    """
+    out = []
+    r = 0
+    while True:
+        h = min(max_rows, m.rows - r)
+        c = 0
+        while True:
+            w = min(max_cols, m.cols - c)
+            out.append((h, w, r, c))
+            c += w
+            if c >= m.cols:
+                break
+        r += h
+        if r >= m.rows:
+            break
+    return out
+
+
+def _lay_out(ordered, *, mode: str) -> PackedLayout:
+    """Concatenate groups along x and tiles along y.
+
+    mode="aligned": every offset is 128-aligned (no block straddling —
+    best when tiles are comparable to or larger than a block).
+    mode="diagonal": tight concatenation (adjacent tiles share edge
+    blocks — best when tiles are much smaller than a block).
+    mode="snapped": diagonal, but a group that would straddle a block
+    boundary snaps to the next block first — sub-block tiles stack
+    multiple-per-block without paying 2x2 straddle covers.
+    """
+    placements: dict[str, list[ChunkPlacement]] = {}
+    x_off = 0
+    y_off = 0
+    for key, members in ordered:
+        h = max(ch[0] for _, ch in members)
+        w = sum(ch[1] for _, ch in members)
+        if mode == "snapped":
+            if x_off // BLK != (x_off + h - 1) // BLK:
+                x_off = _ceil(x_off)
+            if y_off // BLK != (y_off + w - 1) // BLK:
+                y_off = _ceil(y_off)
+        for m, (rows, cols, sr, sc) in members:
+            placements.setdefault(m.name, []).append(ChunkPlacement(
+                x_off=x_off, y_off=y_off, rows=rows, cols=cols,
+                src_row=sr, src_col=sc))
+            y_off += _ceil(cols) if mode == "aligned" else cols
+        x_off += _ceil(h) if mode == "aligned" else h
+    return PackedLayout(R=_ceil(max(x_off, 1)), C=_ceil(max(y_off, 1)),
+                        placements={k: tuple(v)
+                                    for k, v in placements.items()})
+
+
+def pack_canvas(mats: Sequence[WeightMatrix], *, max_tile_rows: int = 4096,
+                max_tile_cols: int = 4096) -> PackedLayout:
+    """Lay matrices out on the virtual plane, minimizing the block cover.
+
+    Mirrors the paper's §3.3 allocation scoring: candidate layouts
+    (block-aligned vs tight-diagonal) are generated and the densest —
+    fewest stored MXU blocks — wins. Groups are ordered tallest-first
+    (the supertile/shelf heuristic) deterministically.
+    """
+    names = [m.name for m in mats]
+    if len(set(names)) != len(names):
+        raise ValueError("duplicate matrix names")
+
+    # expand into chunks grouped by input interval identity
+    # group key: (share_group or name, src_row)
+    groups: dict[tuple, list[tuple[WeightMatrix, tuple]]] = {}
+    for m in mats:
+        for ch in _chunk(m, max_tile_rows, max_tile_cols):
+            h, w, sr, sc = ch
+            key = (m.share_group or m.name, sr)
+            groups.setdefault(key, []).append((m, ch))
+
+    def g_height(entry):
+        return max(ch[0] for _, ch in entry[1])
+
+    ordered = sorted(groups.items(), key=lambda e: (-g_height(e), e[0]))
+
+    candidates = [_lay_out(ordered, mode=m)
+                  for m in ("aligned", "diagonal", "snapped")]
+    return min(candidates, key=lambda l: l.num_blocks)

@@ -1,0 +1,190 @@
+"""HBM weight-residency planner — the paper's D_m capacity story at pod scale.
+
+An IMC macro keeps weights stationary; spilling to DRAM costs reload energy
+and stall latency. On a TPU pod the same economics appear one level up:
+
+    resident  = parameter sharded over the model (TP) axis only, replicated
+                across data — zero per-step weight traffic (stationary);
+    streamed  = additionally sharded over the data axis (FSDP/ZeRO-3) and
+                all-gathered every step — the TPU form of weight reloading.
+
+Given an arch config and a mesh, the planner bin-packs parameter tensors
+into the per-chip HBM budget, spilling to *streamed* in ascending order of
+**compute reuse per parameter** — the transplant of the paper's fold-the-
+lowest-latency-layer-first heuristic (§3.4): tensors with the least MACs
+per byte (embeddings ~0, MoE experts k/E, dense matmuls 1) lose the least
+from streaming.
+
+Optimizer state (f32 master + Adam m/v) is always ZeRO-sharded over
+(data x model); the resident/streamed decision concerns the bf16/f32
+compute copy of each parameter.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+GiB = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamTensor:
+    """One shardable parameter tensor (stacked over layers where applicable).
+
+    reuse = MACs per parameter per processed token (the stationarity value
+    of keeping it resident). tp_shardable: can it shard over the model axis.
+    """
+    name: str
+    params: int
+    reuse: float
+    tp_shardable: bool = True
+
+
+def weight_inventory(cfg) -> list[ParamTensor]:
+    """Flatten a ModelConfig into shardable parameter tensors."""
+    D, F, V, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    out = [ParamTensor("embed", V * D, reuse=0.0)]
+    if cfg.family == "ssm":                      # rwkv6
+        out += [ParamTensor("att_proj", L * 4 * D * D, 1.0),
+                ParamTensor("mixers", L * 10 * D * 64, 1.0),
+                ParamTensor("ffn", L * 2 * D * F, 1.0)]
+    elif cfg.family == "hybrid":                 # griffin/recurrentgemma
+        pat = cfg.recurrent.block_pattern
+        n_attn = sum(1 for i in range(L) if pat[i % len(pat)] == "attn")
+        n_rec = L - n_attn
+        W = cfg.recurrent.lru_width or D
+        out += [ParamTensor("attn", n_attn * (D * cfg.q_dim
+                                              + 2 * D * cfg.kv_dim
+                                              + cfg.q_dim * D), 1.0),
+                ParamTensor("recurrent", n_rec * (2 * D * W + W * D), 1.0),
+                ParamTensor("ffn", L * 3 * D * F, 1.0)]
+    else:
+        if cfg.mla is not None:
+            m = cfg.mla
+            att = (D * cfg.num_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+                   + D * (m.kv_lora_rank + m.qk_rope_head_dim)
+                   + m.kv_lora_rank * cfg.num_heads
+                   * (m.qk_nope_head_dim + m.v_head_dim)
+                   + cfg.num_heads * m.v_head_dim * D)
+        else:
+            att = D * cfg.q_dim + 2 * D * cfg.kv_dim + cfg.q_dim * D
+        out.append(ParamTensor("attn", L * att, 1.0))
+        if cfg.moe:
+            mo = cfg.moe
+            out.append(ParamTensor(
+                "experts", L * mo.num_experts * 3 * D * mo.d_ff_expert,
+                reuse=mo.top_k / mo.num_experts))
+            if mo.num_shared_experts:
+                out.append(ParamTensor(
+                    "shared_experts",
+                    L * mo.num_shared_experts * 3 * D * mo.d_ff_expert, 1.0))
+            out.append(ParamTensor("router", L * D * mo.num_experts, 1.0))
+        else:
+            out.append(ParamTensor("ffn", L * 3 * D * F, 1.0))
+    if cfg.encoder is not None and cfg.family == "encdec":
+        E = cfg.encoder.num_layers
+        out += [ParamTensor("encoder", E * (4 * D * D + 2 * D * F), 1.0),
+                ParamTensor("cross_attn", L * 4 * D * D, 1.0)]
+    if not cfg.tie_embeddings:
+        out.append(ParamTensor("lm_head", D * V, 1.0))
+    out.append(ParamTensor("norms", L * 2 * D + D, 1.0,
+                           tp_shardable=False))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    tensor: ParamTensor
+    mode: str                       # "resident" | "streamed"
+    bytes_per_chip: int             # steady-state HBM held by this tensor
+    stream_bytes_per_step: int      # per-chip all-gather receive bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidencyPlan:
+    decisions: tuple[Decision, ...]
+    tp: int
+    dp: int
+    train: bool
+    hbm_budget_bytes: int
+
+    @property
+    def bytes_per_chip(self) -> int:
+        return sum(d.bytes_per_chip for d in self.decisions)
+
+    @property
+    def stream_bytes_per_step(self) -> int:
+        return sum(d.stream_bytes_per_step for d in self.decisions)
+
+    @property
+    def fits(self) -> bool:
+        return self.bytes_per_chip <= self.hbm_budget_bytes
+
+    @property
+    def streamed(self) -> frozenset[str]:
+        return frozenset(d.tensor.name for d in self.decisions
+                         if d.mode == "streamed")
+
+    def summary(self) -> dict:
+        return {
+            "tp": self.tp, "dp": self.dp, "train": self.train,
+            "GiB_per_chip": round(self.bytes_per_chip / GiB, 3),
+            "budget_GiB": round(self.hbm_budget_bytes / GiB, 3),
+            "fits": self.fits,
+            "streamed": sorted(self.streamed),
+            "stream_MiB_per_step":
+                round(self.stream_bytes_per_step / (1 << 20), 2),
+        }
+
+
+def _tensor_bytes(t: ParamTensor, tp: int, dp: int, *, train: bool,
+                  streamed: bool, param_bytes: int = 2) -> tuple[int, int]:
+    """(steady bytes/chip, stream bytes/step/chip) for one tensor."""
+    shard_tp = tp if t.tp_shardable else 1
+    opt = 12 * t.params // (tp * dp) if train else 0   # ZeRO: f32 master+m+v
+    if streamed:
+        held = param_bytes * t.params // (shard_tp * dp)
+        gathered = param_bytes * t.params // shard_tp
+        traffic = gathered - held                       # all-gather receive
+        if train:
+            traffic *= 2                                # + reduce-scatter grads
+        return held + opt, traffic
+    return param_bytes * t.params // shard_tp + opt, 0
+
+
+def plan_residency(cfg, *, tp: int, dp: int, train: bool,
+                   hbm_gb: float = 16.0, reserve_frac: float = 0.35,
+                   param_bytes: int = 2) -> ResidencyPlan:
+    """Pack tensors into HBM; spill lowest-reuse-per-byte first.
+
+    reserve_frac of HBM is withheld for activations, KV caches and
+    collective scratch. param_bytes=2: bf16 compute copies.
+    """
+    budget = int(hbm_gb * GiB * (1.0 - reserve_frac))
+    tensors = weight_inventory(cfg)
+    # paper §3.4 heuristic, transplanted: spill candidates ordered by
+    # ascending reuse (MACs/param), then descending size.
+    spill_order = sorted(tensors, key=lambda t: (t.reuse, -t.params))
+    streamed: set[str] = set()
+
+    def total(streamed_names: set[str]) -> int:
+        return sum(_tensor_bytes(t, tp, dp, train=train,
+                                 streamed=t.name in streamed_names,
+                                 param_bytes=param_bytes)[0]
+                   for t in tensors)
+
+    for t in spill_order:
+        if total(streamed) <= budget:
+            break
+        if dp > 1:
+            streamed.add(t.name)
+
+    decisions = []
+    for t in tensors:
+        s = t.name in streamed
+        held, traffic = _tensor_bytes(t, tp, dp, train=train, streamed=s,
+                                      param_bytes=param_bytes)
+        decisions.append(Decision(t, "streamed" if s else "resident",
+                                  held, traffic))
+    return ResidencyPlan(tuple(decisions), tp, dp, train, budget)

@@ -1,0 +1,4 @@
+from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
+                              TrainingSupervisor)
+
+__all__ = ["ElasticConfig", "RunReport", "StepTimeout", "TrainingSupervisor"]

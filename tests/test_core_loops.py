@@ -1,0 +1,67 @@
+"""Unit tests: loop/LPF machinery (repro.core.loops)."""
+
+import pytest
+
+from repro.core import LayerSpec, Workload, best_subproduct, prime_factors
+
+
+def test_prime_factors_basic():
+    assert prime_factors(1) == ()
+    assert prime_factors(2) == (2,)
+    assert prime_factors(12) == (2, 2, 3)
+    assert prime_factors(640) == (2, 2, 2, 2, 2, 2, 2, 5)
+    assert prime_factors(97) == (97,)
+
+
+def test_prime_factors_rejects_nonpositive():
+    with pytest.raises(ValueError):
+        prime_factors(0)
+
+
+@pytest.mark.parametrize("n", [2, 6, 36, 144, 92416, 13440])
+def test_prime_factors_multiply_back(n):
+    prod = 1
+    for f in prime_factors(n):
+        prod *= f
+    assert prod == n
+
+
+def test_best_subproduct_exact():
+    # 144 = 2^4 * 3^2 ; cap 16 -> best is 16
+    assert best_subproduct(prime_factors(144), 16)[0] == 16
+    # cap 15 -> best is 12 (2*2*3)
+    assert best_subproduct(prime_factors(144), 15)[0] == 12
+    # cap larger than n -> n itself
+    assert best_subproduct(prime_factors(144), 1000)[0] == 144
+
+
+def test_best_subproduct_returns_usable_factors():
+    factors = prime_factors(640)
+    best, used = best_subproduct(factors, 256)
+    prod = 1
+    for f in used:
+        prod *= f
+    assert prod == best
+    # chosen factors are a sub-multiset
+    pool = list(factors)
+    for f in used:
+        pool.remove(f)  # raises if not present
+
+
+def test_layerspec_volumes():
+    l = LayerSpec.conv2d("c", 16, 32, 3, (8, 8))
+    assert l.weight_volume == 32 * 16 * 9
+    assert l.macs == l.weight_volume * 64
+    assert l.reduction == 16 * 9
+
+
+def test_layerspec_depthwise():
+    l = LayerSpec.conv2d("dw", 64, 64, 3, (25, 5), groups=64)
+    assert l.weight_volume == 64 * 9      # one 3x3 filter per channel
+    assert l.reduction == 9
+
+
+def test_workload_rejects_duplicate_names():
+    l = LayerSpec.fc("a", 4, 4)
+    with pytest.raises(ValueError):
+        Workload(name="w", layers=(l, l))

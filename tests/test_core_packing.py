@@ -1,0 +1,160 @@
+"""System tests for the §3 packing pipeline: tiles, supertiles, columns,
+allocation, folding, spilling — including the paper's structural invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import (PackingPlan, Tile, a_imc, d_imc, fold_tile,
+                        generate_columns, generate_supertiles,
+                        generate_tile_pool, mlperf_tiny_suite, pack,
+                        stacked_plan, flattened_plan)
+from repro.core.workloads import autoencoder, ds_cnn, resnet8
+
+ARCHS = [d_imc(1, 1), d_imc(4, 1), a_imc(2, 1)]
+SUITE = mlperf_tiny_suite()
+
+
+# --- §3.1 tile generation -----------------------------------------------------
+
+@pytest.mark.parametrize("wl", SUITE, ids=lambda w: w.name)
+@pytest.mark.parametrize("arch", ARCHS, ids=lambda a: f"{a.macro.name}-Dh{a.D_h}")
+def test_tiles_fit_and_conserve_volume(wl, arch):
+    for t in generate_tile_pool(wl.layers, arch):
+        assert t.T_i <= arch.macro.D_i
+        assert t.T_o <= arch.macro.D_o
+        assert t.T_h <= arch.D_h
+        assert t.T_i * t.T_o * t.T_m * t.T_h == t.layer.weight_volume
+        # relevance split consistency
+        assert t.T_o * t.T_m_red * t.T_h_red == t.layer.reduction
+
+
+def test_tile_utilization_maximized_resnet_conv():
+    # K=16 fully fills D_i=16; C*FX*FY=144 is the max LPF subproduct <=256.
+    arch = d_imc(1, 1)
+    [t] = generate_tile_pool([resnet8().layer("s1_c1")], arch)
+    assert (t.T_i, t.T_o, t.T_m, t.T_h) == (16, 144, 1, 1)
+
+
+def test_fold_moves_spatial_to_temporal():
+    arch = d_imc(1, 1)
+    [t] = generate_tile_pool([resnet8().layer("s1_c1")], arch)
+    f = fold_tile(t)
+    assert f.T_i * f.T_o < t.T_i * t.T_o
+    assert f.T_m > t.T_m
+    assert f.T_i * f.T_o * f.T_m * f.T_h == t.layer.weight_volume
+    assert f.folds == 1
+
+
+def test_fold_exhausts_to_none():
+    arch = d_imc(1, 1)
+    [t] = generate_tile_pool([resnet8().layer("fc")], arch)
+    seen = 0
+    while t is not None:
+        last, t = t, fold_tile(t)
+        seen += 1
+        assert seen < 64
+    assert last.T_i == 1 and last.T_o == 1
+
+
+# --- §3.2 supertiles -----------------------------------------------------------
+
+def test_supertiles_distinct_layers_and_height_cap():
+    arch = d_imc(1, 1)
+    tiles = generate_tile_pool(ds_cnn().layers, arch)
+    max_tm = max(t.T_m for t in tiles)
+    for st in generate_supertiles(tiles):
+        names = [m.layer_name for m in st.members]
+        assert len(set(names)) == len(names)
+        assert st.ST_m <= max_tm or len(st.members) == 1
+        assert st.ST_m == sum(m.tile.T_m for m in st.members)
+        assert st.volume <= st.bbox_volume
+
+
+# --- §3.3 columns: geometric soundness -----------------------------------------
+
+def _assert_no_overlap(column):
+    grid = np.zeros((column.D_i, column.D_o), dtype=np.int32)
+    for p in column.placements:
+        st = p.supertile
+        assert p.row + st.ST_i <= column.D_i
+        assert p.col + st.ST_o <= column.D_o
+        grid[p.row:p.row + st.ST_i, p.col:p.col + st.ST_o] += 1
+    assert grid.max() <= 1, "supertiles overlap in the D_i x D_o plane"
+
+
+@pytest.mark.parametrize("wl", SUITE, ids=lambda w: w.name)
+def test_columns_no_overlap_and_cover_pool(wl):
+    arch = d_imc(1, 1)
+    tiles = generate_tile_pool(wl.layers, arch)
+    cols = generate_columns(tiles, arch)
+    for c in cols:
+        _assert_no_overlap(c)
+        assert 0 < c.density <= 1.0
+    # every tile instance placed exactly once
+    keys = [k for c in cols for k in c.keys]
+    assert len(keys) == len(set(keys))
+    expect = {(t.name, c) for t in tiles for c in range(t.T_h)}
+    assert set(keys) == expect
+
+
+# --- §3.4 allocation + end-to-end ----------------------------------------------
+
+@pytest.mark.parametrize("wl", SUITE, ids=lambda w: w.name)
+@pytest.mark.parametrize("arch", ARCHS, ids=lambda a: f"{a.macro.name}-Dh{a.D_h}")
+def test_pack_unbounded_invariants(wl, arch):
+    plan = pack(wl, arch, bounded=False)
+    assert not plan.streamed_layers
+    assert plan.min_D_m >= 1
+    # layer-disjointness per macro
+    for cols in plan.allocation.macros:
+        seen: set = set()
+        for c in cols:
+            assert not (seen & c.layer_names)
+            seen |= c.layer_names
+    # volume conservation across all macros
+    placed = sum(c.volume for cols in plan.allocation.macros for c in cols)
+    assert placed == wl.total_weight_volume
+
+
+@pytest.mark.parametrize("wl", SUITE, ids=lambda w: w.name)
+def test_packed_never_worse_than_stacked(wl):
+    """The paper's headline: packed min-D_m <= stacked min-D_m."""
+    arch = d_imc(1, 1)
+    packed = pack(wl, arch, bounded=False)
+    stacked = stacked_plan(wl, arch, bounded=False)
+    assert packed.min_D_m <= stacked.min_D_m
+
+
+@pytest.mark.parametrize("wl", SUITE, ids=lambda w: w.name)
+def test_bounded_pack_respects_capacity(wl):
+    arch = d_imc(1, 8)
+    plan = pack(wl, arch, bounded=True)
+    for cols in plan.allocation.macros:
+        assert sum(c.height for c in cols) <= arch.D_m
+
+
+def test_bounded_pack_spills_when_tiny():
+    plan = pack(autoencoder(), d_imc(1, 1), bounded=True)
+    assert plan.streamed_layers  # 264k weights cannot fit 4096 cells
+    assert plan.min_D_m <= 1
+
+
+def test_folding_enables_tighter_dm():
+    """AE at D_m just below the unfolded minimum must fold, not spill
+    everything (paper §4.1: AE packs tightly 'at the cost of folding')."""
+    wl = autoencoder()
+    base = pack(wl, d_imc(1, 1), bounded=False).min_D_m
+    plan = pack(wl, d_imc(1, base - 8), bounded=True)
+    folds = sum(t.folds for t in plan.tiles.values())
+    assert folds > 0
+    assert len(plan.streamed_layers) <= 2
+
+
+def test_baseline_plans_are_valid_plans():
+    for wl in SUITE:
+        for mk in (stacked_plan, flattened_plan):
+            plan = mk(wl, d_imc(2, 64), bounded=True)
+            assert isinstance(plan, PackingPlan)
+            for cols in plan.allocation.macros:
+                for c in cols:
+                    _assert_no_overlap(c)

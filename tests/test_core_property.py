@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) for the packing algorithm's invariants
+over randomly generated workloads and architectures."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (LayerSpec, Workload, best_subproduct, d_imc,
+                        fold_tile, generate_tile, pack, prime_factors,
+                        stacked_plan)
+
+
+@given(st.integers(min_value=1, max_value=100000))
+def test_prime_factors_roundtrip(n):
+    prod = 1
+    for f in prime_factors(n):
+        prod *= f
+        # every factor is prime
+        assert all(f % d for d in range(2, int(f ** 0.5) + 1))
+    assert prod == n
+
+
+@given(st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=1, max_value=512))
+def test_best_subproduct_bounds(n, cap):
+    best, used = best_subproduct(prime_factors(n), cap)
+    assert 1 <= best <= cap or (best == 1 and cap >= 1)
+    assert n % best == 0  # always a divisor
+
+
+def _layers(draw):
+    n = draw(st.integers(min_value=1, max_value=6))
+    out = []
+    for i in range(n):
+        k = draw(st.integers(min_value=1, max_value=256))
+        c = draw(st.integers(min_value=1, max_value=256))
+        fx = draw(st.sampled_from([1, 3]))
+        ox = draw(st.sampled_from([1, 5, 16]))
+        out.append(LayerSpec(name=f"l{i}", K=k, C=c, FX=fx, FY=fx,
+                             OX=ox, OY=ox))
+    return Workload(name="rand", layers=tuple(out))
+
+
+wl_strategy = st.builds(lambda d: d, st.data())
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_tile_generation_invariants_random(data):
+    wl = _layers(data.draw)
+    arch = d_imc(D_h=data.draw(st.sampled_from([1, 2, 4])), D_m=1)
+    for layer in wl.layers:
+        t = generate_tile(layer, arch)
+        assert t.T_i <= arch.macro.D_i
+        assert t.T_o <= arch.macro.D_o
+        assert t.T_h <= arch.D_h
+        assert t.T_i * t.T_o * t.T_m * t.T_h == layer.weight_volume
+        assert t.T_o * t.T_m_red * t.T_h_red == layer.reduction
+        # folding preserves volume & monotonically grows T_m
+        f = fold_tile(t)
+        if f is not None:
+            assert f.T_m > t.T_m
+            assert f.T_i * f.T_o * f.T_m * f.T_h == layer.weight_volume
+            assert f.T_o * f.T_m_red * f.T_h_red == layer.reduction
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_pack_random_workloads(data):
+    """End-to-end pack() on random workloads: geometric + conservation
+    invariants, and the packed-vs-stacked dominance claim."""
+    wl = _layers(data.draw)
+    arch = d_imc(D_h=data.draw(st.sampled_from([1, 2])), D_m=1)
+    plan = pack(wl, arch, bounded=False)
+    assert not plan.streamed_layers
+
+    # no overlap anywhere, capacity bookkeeping consistent
+    for cols in plan.allocation.macros:
+        seen_layers: set = set()
+        for col in cols:
+            grid = np.zeros((col.D_i, col.D_o), dtype=np.int16)
+            for p in col.placements:
+                s = p.supertile
+                assert p.row + s.ST_i <= col.D_i
+                assert p.col + s.ST_o <= col.D_o
+                grid[p.row:p.row + s.ST_i, p.col:p.col + s.ST_o] += 1
+            assert grid.max() <= 1
+            assert not (seen_layers & col.layer_names)
+            seen_layers |= col.layer_names
+
+    placed = sum(c.volume for cols in plan.allocation.macros for c in cols)
+    assert placed == wl.total_weight_volume
+
+    stacked = stacked_plan(wl, arch, bounded=False)
+    assert plan.min_D_m <= stacked.min_D_m
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_bounded_pack_never_exceeds_capacity(data):
+    wl = _layers(data.draw)
+    dm = data.draw(st.sampled_from([1, 4, 16, 256]))
+    arch = d_imc(D_h=1, D_m=dm)
+    plan = pack(wl, arch, bounded=True)
+    for cols in plan.allocation.macros:
+        assert sum(c.height for c in cols) <= dm
+    # all layers accounted for: on-chip + streamed
+    on_chip = {l.name for l in plan.on_chip_layers}
+    assert on_chip | set(plan.streamed_layers) == \
+        {l.name for l in wl.layers}

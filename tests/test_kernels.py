@@ -1,0 +1,210 @@
+"""Per-kernel allclose validation vs ref.py oracles (interpret=True on CPU).
+
+Sweeps shapes/dtypes per the task spec. bf16 tolerances are loose (the
+kernels accumulate in f32 but inputs are quantized to bf16).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (build_block_meta, decode_attention,
+                           flash_attention, grouped_mvm,
+                           packed_canvas_matmul, ref)
+from repro.kernels import ops
+
+# f32 tol covers blocked-reduction order differences vs one-shot einsum
+TOL = {jnp.float32: dict(rtol=1e-4, atol=2e-4),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# --- grouped MVM --------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("E,C,D,F", [
+    (4, 128, 128, 128),
+    (2, 256, 512, 384),
+    (8, 64, 96, 160),     # odd sizes -> block-size fallback path
+    (1, 128, 256, 128),
+])
+def test_grouped_mvm(E, C, D, F, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = rand(k1, (E, C, D), dtype)
+    w = rand(k2, (E, D, F), dtype)
+    got = grouped_mvm(x, w, interpret=True)
+    want = ref.grouped_mvm(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# --- packed canvas -------------------------------------------------------------------
+
+def _blocks_case(key, R, C, B, dtype, block_coords):
+    """Build a block-sparse virtual plane from (kb, cb) coords."""
+    kx, kw = jax.random.split(key)
+    x = rand(kx, (B, R), dtype)
+    blocks = np.asarray(sorted(set(block_coords)), np.int64)
+    meta, order = build_block_meta(blocks)
+    wb = rand(kw, (len(blocks), 128, 128), dtype)
+    wd = ref.blocks_to_dense(wb, meta, R, C).astype(dtype)
+    return x, wb, jnp.asarray(meta), wd
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_packed_canvas_block_sparse(dtype):
+    # block-diagonal + a row-sharing column strip + an isolated block
+    R, C, B = 512, 640, 128
+    coords = [(0, 0), (1, 1), (2, 2), (3, 3),     # diagonal
+              (0, 4), (1, 4), (2, 4), (3, 4),     # full column strip
+              (2, 0)]                             # extra off-diagonal
+    x, wb, meta, wd = _blocks_case(jax.random.PRNGKey(1), R, C, B, dtype,
+                                   coords)
+    got = packed_canvas_matmul(x, wb, meta, interpret=True)
+    want = ref.packed_canvas(x, wd)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_packed_canvas_single_block_runs():
+    # every output column block has exactly one k-block (first == last)
+    R, C, B = 256, 256, 128
+    x, wb, meta, wd = _blocks_case(jax.random.PRNGKey(2), R, C, B,
+                                   jnp.float32, [(0, 0), (1, 1)])
+    got = packed_canvas_matmul(x, wb, meta, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(ref.packed_canvas(x, wd)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_meta_structure():
+    blocks = np.array([[1, 0], [3, 0], [0, 1]])
+    meta, order = build_block_meta(blocks)
+    assert meta.shape == (4, 3)
+    # ordered by (cb, kb): (1,0), (3,0), (0,1)
+    assert list(meta[0]) == [1, 3, 0]          # kb
+    assert list(meta[1]) == [0, 0, 1]          # cb
+    assert list(meta[2]) == [1, 0, 1]          # first-of-run
+    assert list(meta[3]) == [0, 1, 1]          # last-of-run
+
+
+# --- flash attention -----------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,T,H,KV,dh,window", [
+    (2, 256, 256, 4, 2, 64, 0),        # GQA causal
+    (1, 128, 384, 8, 8, 64, 0),        # MHA, suffix-aligned (prefix cache)
+    (2, 256, 256, 4, 1, 128, 0),       # MQA
+    (1, 256, 256, 2, 2, 64, 128),      # local window (recurrentgemma)
+])
+def test_flash_attention(B, S, T, H, KV, dh, window, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (B, H, S, dh), dtype)
+    k = rand(ks[1], (B, KV, T, dh), dtype)
+    v = rand(ks[2], (B, KV, T, dh), dtype)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          bq=128, bkv=128, interpret=True)
+    want = ref.mha_attention(
+        jnp.transpose(q, (0, 2, 1, 3)), jnp.transpose(k, (0, 2, 1, 3)),
+        jnp.transpose(v, (0, 2, 1, 3)), causal=True, window=window)
+    want = jnp.transpose(want, (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+@pytest.mark.parametrize("bq,bkv", [(64, 64), (128, 256), (256, 128)])
+def test_flash_attention_block_sweep(bq, bkv):
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    B, S, H, KV, dh = 1, 512, 2, 1, 64
+    q = rand(ks[0], (B, H, S, dh), jnp.float32)
+    k = rand(ks[1], (B, KV, S, dh), jnp.float32)
+    v = rand(ks[2], (B, KV, S, dh), jnp.float32)
+    got = flash_attention(q, k, v, bq=bq, bkv=bkv, interpret=True)
+    want = jnp.transpose(ref.mha_attention(
+        jnp.transpose(q, (0, 2, 1, 3)), jnp.transpose(k, (0, 2, 1, 3)),
+        jnp.transpose(v, (0, 2, 1, 3))), (0, 2, 1, 3))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- decode attention ----------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,T,H,KV,dh,bt", [
+    (4, 512, 8, 2, 64, 256),
+    (2, 1024, 4, 4, 128, 256),
+    (3, 384, 8, 1, 64, 128),
+])
+def test_decode_attention(B, T, H, KV, dh, bt, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    G = H // KV
+    q = rand(ks[0], (B, KV, G, dh), dtype)
+    k = rand(ks[1], (B, KV, T, dh), dtype)
+    v = rand(ks[2], (B, KV, T, dh), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, T + 1)
+    got = decode_attention(q, k, v, lengths, bt=bt, interpret=True)
+    want = ref.decode_attention(
+        q.reshape(B, H, dh), jnp.transpose(k, (0, 2, 1, 3)),
+        jnp.transpose(v, (0, 2, 1, 3)), lengths)
+    np.testing.assert_allclose(np.asarray(got, np.float32).reshape(B, H, dh),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+def test_decode_attention_length_one():
+    # only one live cache slot: softmax over a single key
+    B, H, KV, T, dh = 2, 4, 2, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = rand(ks[0], (B, KV, H // KV, dh), jnp.float32)
+    k = rand(ks[1], (B, KV, T, dh), jnp.float32)
+    v = rand(ks[2], (B, KV, T, dh), jnp.float32)
+    lengths = jnp.ones((B,), jnp.int32)
+    got = decode_attention(q, k, v, lengths, bt=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(v[:, :, :1, :]
+                                          * jnp.ones_like(got)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- ops-layer wrappers (model layout round trips) -----------------------------------
+
+def test_ops_attention_model_layout():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    B, S, H, KV, dh = 2, 192, 4, 2, 64       # S not a block multiple -> pad
+    q = rand(ks[0], (B, S, H, dh), jnp.float32)
+    k = rand(ks[1], (B, S, KV, dh), jnp.float32)
+    v = rand(ks[2], (B, S, KV, dh), jnp.float32)
+    got = ops.attention(q, k, v, impl="interpret", bq=64, bkv=64)
+    want = ref.mha_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_decode_model_layout():
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    B, T, H, KV, dh = 2, 320, 8, 2, 64        # T pads to bt multiple
+    q = rand(ks[0], (B, H, dh), jnp.float32)
+    k = rand(ks[1], (B, T, KV, dh), jnp.float32)
+    v = rand(ks[2], (B, T, KV, dh), jnp.float32)
+    lengths = jnp.array([T, T // 2], jnp.int32)
+    got = ops.decode_attention(q, k, v, lengths, impl="interpret", bt=128)
+    want = ref.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ops_moe_ffn():
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    E, C, D, F = 4, 128, 64, 128
+    xe = rand(ks[0], (E, C, D), jnp.float32)
+    wg = rand(ks[1], (E, D, F), jnp.float32)
+    wu = rand(ks[2], (E, D, F), jnp.float32)
+    wd = rand(ks[3], (E, F, D), jnp.float32)
+    got = ops.moe_expert_ffn(xe, wg, wu, wd, impl="interpret")
+    want = (jax.nn.silu(ref.grouped_mvm(xe, wg)) * ref.grouped_mvm(xe, wu))
+    want = ref.grouped_mvm(want, wd)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

