@@ -74,6 +74,8 @@ def run_cell(arch: str, shape_name: str) -> dict:
 
     tot = executed_totals(compiled.as_text())
     raw = compiled.cost_analysis() or {}
+    if isinstance(raw, (list, tuple)):      # older jax: one dict per device
+        raw = raw[0] if raw else {}
     mem = compiled.memory_analysis()
 
     t_c = tot["flops"] / PEAK_FLOPS

@@ -21,6 +21,7 @@ BENCHES = [
     "benchmarks.bench_fig9_sweep",
     "benchmarks.bench_kernels",
     "benchmarks.bench_lm_packing",
+    "benchmarks.bench_serve",
     "benchmarks.bench_dryrun",
     "benchmarks.bench_roofline",
 ]

@@ -1,0 +1,15 @@
+"""Make ``repro`` importable from an uninstalled checkout.
+
+Examples do ``import _bootstrap  # noqa: F401`` first; with the package
+pip-installed this is a no-op, otherwise the sibling ``src/`` directory
+is put on sys.path.
+"""
+
+try:
+    import repro  # noqa: F401
+except ImportError:
+    import pathlib
+    import sys
+
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "src"))

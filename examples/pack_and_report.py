@@ -8,8 +8,10 @@ Part 2 — the TPU adaptation: whisper-tiny's per-block projection matrices
 packed into the MXU virtual plane (planner.mxu_pack); reports block-cover
 density and verifies the packed grouped matmul against per-matrix matmuls.
 
-    PYTHONPATH=src python examples/pack_and_report.py
+    python examples/pack_and_report.py
 """
+
+import _bootstrap  # noqa: F401
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,10 @@ a D-IMC macro (256x16 plane), compare against the stacked baseline, print
 the EDP split (MAC / activation / weight-loading) — weight reloads vanish
 once everything fits on-chip.
 
-    PYTHONPATH=src python examples/quickstart.py
+    python examples/quickstart.py
 """
+
+import _bootstrap  # noqa: F401
 
 from repro.core import d_imc, ds_cnn, pack, plan_cost, stacked_plan
 

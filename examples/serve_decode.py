@@ -1,27 +1,58 @@
-"""Batched serving example: prefill + decode across four model families.
+"""Continuous-batching serving example with a staggered-arrival trace.
 
-Exercises the KV-cache / recurrent-state serving path (the decode_* dry-run
-cells) end-to-end on CPU reduced configs: dense GQA, MoE + MLA latent
-cache, RWKV constant-state, and the RG-LRU + windowed-attention hybrid.
+Drives runtime.Engine directly across three cache shapes — dense GQA,
+the M-RoPE vlm backbone, and RWKV constant-state recurrence — with
+requests arriving mid-flight, so slots recycle, the paged KV cache
+grows and shrinks with live tokens, and short requests finish without
+waiting for long ones. The MoE+MLA latent-cache family has no engine
+backend yet and runs through the static lockstep path for contrast.
 
+    python examples/serve_decode.py        (installed via pyproject)
     PYTHONPATH=src python examples/serve_decode.py
 """
 
-import sys
+import json
 
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401
 
+import jax  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
 from repro.launch import serve  # noqa: E402
+from repro.models import get_model  # noqa: E402
+from repro.runtime import (Engine, EngineConfig, poisson_trace,  # noqa: E402
+                           vlm_extras_fn)
 
-ARCHS = ["codeqwen1.5-7b", "deepseek-v2-lite-16b", "rwkv6-7b",
-         "recurrentgemma-9b"]
+ENGINE_ARCHS = ["codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b"]
+# families without an engine backend keep the static path (MoE + MLA
+# latent cache; RG-LRU + windowed-attention hybrid)
+STATIC_ARCHS = ["deepseek-v2-lite-16b", "recurrentgemma-9b"]
 
 
 def main():
-    for arch in ARCHS:
+    for arch in ENGINE_ARCHS:
         print("\n" + "=" * 60)
-        serve.main(["--arch", arch, "--batch", "2", "--prompt-len", "16",
-                    "--gen", "8"])
+        cfg = get_config(arch).reduced()
+        params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+        extras_fn = vlm_extras_fn(cfg) if cfg.family == "vlm" else None
+        # staggered arrivals: mean 1 step apart, mixed prompt/gen lengths
+        trace = poisson_trace(12, mean_interarrival=1.0,
+                              prompt_lens=(8, 16), gen_lens=(4, 8, 24),
+                              vocab_size=cfg.vocab_size, seed=0,
+                              extras_fn=extras_fn)
+        ecfg = EngineConfig(num_slots=4, page_size=8, num_pages=33,
+                            max_pages_per_seq=8, prefill_bucket=8,
+                            greedy=False, temperature=0.8)
+        rep = Engine(cfg, params, ecfg).run(trace)
+        print(f"{cfg.name} [{cfg.family}] — continuous batching")
+        print(json.dumps(rep.summary(), indent=1))
+        for r in rep.completed[:3]:
+            print(f"  req{r.rid} arrive@{r.arrival} done@{r.done_step}: "
+                  f"{r.generated}")
+    for arch in STATIC_ARCHS:
+        print("\n" + "=" * 60)
+        serve.main(["--arch", arch, "--mode", "static", "--batch", "2",
+                    "--prompt-len", "16", "--gen", "8"])
     return 0
 
 

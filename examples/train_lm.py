@@ -11,11 +11,10 @@ quick pass.
 
 import argparse
 import dataclasses
-import sys
 
 import jax
 
-sys.path.insert(0, "src")
+import _bootstrap  # noqa: F401
 
 from repro.configs import get_config  # noqa: E402
 from repro.configs.base import ModelConfig  # noqa: E402

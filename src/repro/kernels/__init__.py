@@ -3,17 +3,18 @@
     packed_canvas     multi-layer block-packed MVM (column-generation output)
     packed_mvm        grouped MoE expert GEMM
     flash_attention   causal/windowed GQA flash attention (train/prefill)
-    decode_attention  KV-cache GQA decode attention
+    decode_attention  KV-cache GQA decode attention (dense + paged variants)
 
 ``ops`` holds the public wrappers (auto CPU-oracle fallback); ``ref`` the
 pure-jnp semantics the kernels are validated against (interpret=True).
 """
 
 from . import ops, ref
-from .decode_attention import decode_attention
+from .decode_attention import decode_attention, paged_decode_attention
 from .flash_attention import flash_attention
 from .packed_canvas import build_block_meta, packed_canvas_matmul
 from .packed_mvm import grouped_mvm
 
 __all__ = ["ops", "ref", "flash_attention", "decode_attention",
-           "grouped_mvm", "packed_canvas_matmul", "build_block_meta"]
+           "paged_decode_attention", "grouped_mvm", "packed_canvas_matmul",
+           "build_block_meta"]

@@ -10,6 +10,14 @@ decode analogue of skipping unoccupied canvas blocks.
 Layouts (arranged by ops.py):
     q: (B, KV, G, dh)     k, v: (B, KV, T, dh)     lengths: (B,) int32
 Grid: (B, KV, T/bt).
+
+``paged_decode_attention`` is the same online softmax over a *paged* cache:
+k/v live in a shared page pool (KV, P, page, dh) and each sequence names
+its pages through an int32 page table (B, M). Both the table and the live
+lengths are scalar-prefetched so the page gather is pure block indexing —
+the cache bytes touched per step scale with the pages a sequence actually
+owns, and dead table slots are skipped with the same ``pl.when`` gating.
+Grid: (B, KV, M).
 """
 
 from __future__ import annotations
@@ -98,3 +106,91 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         interpret=interpret,
     )(lengths.astype(jnp.int32), q, k, v)
+
+
+# --- paged variant -------------------------------------------------------------
+
+
+def _paged_kernel(len_ref, pt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, page: int, g: int):
+    b, p = pl.program_id(0), pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(p * page < length)                     # skip dead table slots
+    def _step():
+        qb = q_ref[0, 0].astype(jnp.float32) * scale      # (G, dh)
+        kb = k_ref[0, 0].astype(jnp.float32)              # (page, dh)
+        logits = jax.lax.dot_general(
+            qb, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (G, page)
+        t_pos = p * page + jax.lax.broadcasted_iota(jnp.int32, (g, page), 1)
+        mask = t_pos < length
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_ref[...]                               # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, -1, keepdims=True))
+        pr = jnp.where(mask, jnp.exp(logits - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(pr, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            pr, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(p == pl.num_programs(2) - 1)
+    def _flush():
+        l = l_ref[...]
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.where(l == 0.0, 1.0, l)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, page_table: jax.Array,
+                           lengths: jax.Array, *, scale: float | None = None,
+                           interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, dh); k/v_pages: (KV, P, page, dh);
+    page_table: (B, M) int32 page ids; lengths: (B,) live tokens.
+
+    Sequence b's cache position t lives in page ``page_table[b, t // page]``
+    at row ``t % page``. Table entries at or beyond the live length are
+    never read (they must still be valid indices — the pager points them
+    at its reserved trash page). Returns (B, KV, G, dh).
+    """
+    B, KV, G, dh = q.shape
+    _, P, page, _ = k_pages.shape
+    M = page_table.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page=page, g=G)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, KV, M),
+            in_specs=[
+                pl.BlockSpec((1, 1, G, dh),
+                             lambda b, h, p, L, pt: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, page, dh),
+                             lambda b, h, p, L, pt: (h, pt[b, p], 0, 0)),
+                pl.BlockSpec((1, 1, page, dh),
+                             lambda b, h, p, L, pt: (h, pt[b, p], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, dh),
+                                   lambda b, h, p, L, pt: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), page_table.astype(jnp.int32), q, k_pages,
+      v_pages)

@@ -82,6 +82,27 @@ def decode_attention(q, k, v, lengths, *, scale=None, impl: str = "auto",
     return out.reshape(B, H, dh)
 
 
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           scale=None, impl: str = "auto"):
+    """Paged decode attention: q (B, H, dh) model layout; k/v_pages
+    (KV, P, page, dh) *kernel* layout (models.layers.paged_cache_init
+    stores pools head-major precisely so the decode hot loop pays no
+    pool-wide relayout here); page_table (B, M) int32; lengths (B,)."""
+    B, H, dh = q.shape
+    KV = k_pages.shape[0]
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        kt = jnp.transpose(k_pages, (1, 2, 0, 3))  # (P, page, KV, dh)
+        vt = jnp.transpose(v_pages, (1, 2, 0, 3))
+        return ref.paged_decode_attention(q, kt, vt, page_table, lengths,
+                                          scale=scale)
+    interpret = impl == "interpret"
+    qt = q.reshape(B, KV, H // KV, dh)
+    out = _dec.paged_decode_attention(qt, k_pages, v_pages, page_table,
+                                      lengths, scale=scale,
+                                      interpret=interpret)
+    return out.reshape(B, H, dh)
+
+
 # --- grouped MoE GEMM --------------------------------------------------------------
 
 def grouped_mvm(x, w, *, impl: str = "auto"):
@@ -101,20 +122,33 @@ def moe_expert_ffn(xe, w_gate, w_up, w_down, *, impl: str = "auto"):
 # --- packed canvas -------------------------------------------------------------------
 
 def packed_canvas_matmul(x_packed, w_blocks, meta, *, impl: str = "auto",
-                         bb=128):
+                         bb=128, bias=None, residual=None, activation=None):
     """Block-compacted multi-layer MVM; meta from build_block_meta.
 
     The ref path reconstructs the dense virtual plane — only viable for
-    small planes; the kernel path touches just the stored blocks.
+    small planes; the kernel path touches just the stored blocks. The
+    optional epilogue ``y = act(y + bias) + residual`` is fused into the
+    kernel's flush (one HBM write per output block in the decode loop).
     """
     if impl == "ref" or (impl == "auto" and not _on_tpu()):
         import numpy as np
         C = (int(np.asarray(meta)[_pc.META_CB].max()) + 1) * _pc.BLK
         wd = ref.blocks_to_dense(w_blocks, meta, x_packed.shape[1], C)
-        return ref.packed_canvas(x_packed, wd.astype(x_packed.dtype))
+        y = ref.packed_canvas(x_packed, wd.astype(x_packed.dtype))
+        if bias is not None or residual is not None or activation is not None:
+            yf = y.astype(jnp.float32)
+            if bias is not None:
+                yf = yf + bias.astype(jnp.float32)
+            yf = _pc.ACTIVATIONS[activation or "none"](yf)
+            if residual is not None:
+                yf = yf + residual.astype(jnp.float32)
+            y = yf.astype(y.dtype)
+        return y
     bb = min(bb, x_packed.shape[0])
     return _pc.packed_canvas_matmul(x_packed, w_blocks, meta, bb=bb,
-                                    interpret=(impl == "interpret"))
+                                    interpret=(impl == "interpret"),
+                                    bias=bias, residual=residual,
+                                    activation=activation)
 
 
 build_block_meta = _pc.build_block_meta

@@ -18,6 +18,10 @@ which the planner minimizes.
 Grid: (B/bb, G); meta orders blocks so all row-blocks of one output block
 cb are contiguous; an f32 VMEM accumulator is zeroed at each run's first
 entry and flushed at its last.
+
+The flush optionally fuses an epilogue ``y = act(acc + bias) + residual``
+so the decode hot loop's per-layer bias/activation/residual never round-
+trip through HBM as separate element-wise passes.
 """
 
 from __future__ import annotations
@@ -33,6 +37,13 @@ from jax.experimental.pallas import tpu as pltpu
 BLK = 128
 # metadata rows (meta: int32 (4, G))
 META_KB, META_CB, META_FIRST, META_LAST = range(4)
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+}
 
 
 def _kernel(meta_ref, x_ref, w_ref, o_ref, acc_ref):
@@ -51,39 +62,111 @@ def _kernel(meta_ref, x_ref, w_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def _kernel_epilogue(meta_ref, x_ref, w_ref, bias_ref, res_ref, o_ref,
+                     acc_ref, *, activation: str):
+    g = pl.program_id(1)
+
+    @pl.when(meta_ref[META_FIRST, g] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(meta_ref[META_LAST, g] == 1)
+    def _flush():
+        y = acc_ref[...] + bias_ref[0].astype(jnp.float32)
+        y = ACTIVATIONS[activation](y)
+        y = y + res_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+_META_CACHE: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+
+
 def build_block_meta(blocks: np.ndarray) -> np.ndarray:
     """Compact a (N, 2) array of occupied (kb, cb) block coords into
     meta (4, N) ordered by (cb, kb) with first/last run flags.
 
     The caller guarantees every cb in [0, C/128) appears at least once
     (y_packed has no gaps), so no sentinel entries are needed.
+
+    Memoized on the block-coord bytes: a serving layout's meta is built
+    once per process lifetime, not once per step. Callers must treat the
+    returned arrays as read-only.
     """
     blocks = np.asarray(blocks, np.int32)
+    key = (blocks.shape, blocks.tobytes())
+    hit = _META_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if len(_META_CACHE) >= 256:             # bound like pack_canvas's lru
+        _META_CACHE.pop(next(iter(_META_CACHE)))
     order = np.lexsort((blocks[:, 0], blocks[:, 1]))
     kb, cb = blocks[order, 0], blocks[order, 1]
     first = np.ones_like(cb)
     first[1:] = cb[1:] != cb[:-1]
     last = np.ones_like(cb)
     last[:-1] = cb[:-1] != cb[1:]
-    return np.ascontiguousarray(
-        np.stack([kb, cb, first, last]).astype(np.int32)), order
+    meta = np.ascontiguousarray(
+        np.stack([kb, cb, first, last]).astype(np.int32))
+    _META_CACHE[key] = (meta, order)
+    return meta, order
 
 
 def packed_canvas_matmul(x_packed: jax.Array, w_blocks: jax.Array,
                          meta: jax.Array, *, c_blocks: int | None = None,
-                         bb: int = 128, interpret: bool = False) -> jax.Array:
+                         bb: int = 128, interpret: bool = False,
+                         bias: jax.Array | None = None,
+                         residual: jax.Array | None = None,
+                         activation: str | None = None) -> jax.Array:
     """y (B, C) = x_packed (B, R) @ virtual plane held in w_blocks.
 
     w_blocks: (G, 128, 128) compacted blocks in meta order; meta (4, G)
     from build_block_meta. B % bb == 0; R, C are 128-multiples.
     c_blocks = C/128; static — derived from meta when omitted, which
     requires a concrete (non-traced) meta array.
+
+    Optional fused epilogue (decode hot loop: one HBM write instead of
+    four element-wise round-trips): ``y = act(y + bias) + residual`` with
+    bias (C,), residual (B, C), activation in ACTIVATIONS. Any subset may
+    be given; omitted pieces default to zeros / identity.
     """
     if c_blocks is None:                 # only valid outside a jit trace
         c_blocks = int(np.asarray(meta)[META_CB].max()) + 1
-    return _packed_canvas_matmul(x_packed, w_blocks, meta,
-                                 c_blocks=c_blocks, bb=bb,
-                                 interpret=interpret)
+    if bias is None and residual is None and activation is None:
+        return _packed_canvas_matmul(x_packed, w_blocks, meta,
+                                     c_blocks=c_blocks, bb=bb,
+                                     interpret=interpret)
+    activation = activation or "none"
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    B = x_packed.shape[0]
+    C = c_blocks * BLK
+    if bias is None:
+        bias = jnp.zeros((C,), x_packed.dtype)
+    if residual is None:
+        residual = jnp.zeros((B, C), x_packed.dtype)
+    return _packed_canvas_epilogue(x_packed, w_blocks, meta, bias, residual,
+                                   c_blocks=c_blocks, bb=bb,
+                                   activation=activation,
+                                   interpret=interpret)
+
+
+def _grid_spec(G: int, B: int, bb: int, *, extra_in=(), extra_scratch=()):
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // bb, G),
+        in_specs=[
+            pl.BlockSpec((bb, BLK), lambda b, g, m: (b, m[META_KB, g])),
+            pl.BlockSpec((1, BLK, BLK), lambda b, g, m: (g, 0, 0)),
+            *extra_in,
+        ],
+        out_specs=pl.BlockSpec((bb, BLK),
+                               lambda b, g, m: (b, m[META_CB, g])),
+        scratch_shapes=[pltpu.VMEM((bb, BLK), jnp.float32), *extra_scratch],
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("c_blocks", "bb", "interpret"))
@@ -95,17 +178,27 @@ def _packed_canvas_matmul(x_packed, w_blocks, meta, *, c_blocks: int,
 
     return pl.pallas_call(
         _kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=(B // bb, G),
-            in_specs=[
-                pl.BlockSpec((bb, BLK), lambda b, g, m: (b, m[META_KB, g])),
-                pl.BlockSpec((1, BLK, BLK), lambda b, g, m: (g, 0, 0)),
-            ],
-            out_specs=pl.BlockSpec((bb, BLK),
-                                   lambda b, g, m: (b, m[META_CB, g])),
-            scratch_shapes=[pltpu.VMEM((bb, BLK), jnp.float32)],
-        ),
+        grid_spec=_grid_spec(G, B, bb),
         out_shape=jax.ShapeDtypeStruct((B, C), x_packed.dtype),
         interpret=interpret,
     )(meta, x_packed, w_blocks)
+
+
+@functools.partial(jax.jit, static_argnames=("c_blocks", "bb", "activation",
+                                             "interpret"))
+def _packed_canvas_epilogue(x_packed, w_blocks, meta, bias, residual, *,
+                            c_blocks: int, bb: int, activation: str,
+                            interpret: bool) -> jax.Array:
+    B, R = x_packed.shape
+    G = w_blocks.shape[0]
+    C = c_blocks * BLK
+    extra = (
+        pl.BlockSpec((1, BLK), lambda b, g, m: (0, m[META_CB, g])),
+        pl.BlockSpec((bb, BLK), lambda b, g, m: (b, m[META_CB, g])),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_epilogue, activation=activation),
+        grid_spec=_grid_spec(G, B, bb, extra_in=extra),
+        out_shape=jax.ShapeDtypeStruct((B, C), x_packed.dtype),
+        interpret=interpret,
+    )(meta, x_packed, w_blocks, bias.reshape(1, C), residual)

@@ -82,7 +82,8 @@ def mha_attention(q, k, v, *, causal=True, window=0, scale=None):
 def decode_attention(q, k, v, lengths, *, scale=None):
     """q: (B, H, dh); k/v: (B, T, KV, dh); lengths: (B,) valid cache length.
 
-    Query attends to cache positions < lengths[b]. f32 softmax.
+    Query attends to cache positions < lengths[b]. f32 softmax. A row with
+    length 0 has no valid keys and yields zeros (the kernels' flush guard).
     """
     B, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
@@ -94,4 +95,21 @@ def decode_attention(q, k, v, lengths, *, scale=None):
     logits = jnp.where(valid, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bkgt,btkd->bkgd", probs, v.astype(jnp.float32))
+    out = jnp.where(lengths[:, None, None, None] > 0, out, 0.0)
     return out.reshape(B, H, dh).astype(q.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           scale=None):
+    """q: (B, H, dh); k/v_pages: (P, page, KV, dh); page_table: (B, M).
+
+    Gathers each sequence's pages into a contiguous (B, M*page, KV, dh)
+    cache and applies decode_attention — the semantics the paged kernel
+    must match while touching only the owned pages.
+    """
+    B = q.shape[0]
+    M = page_table.shape[1]
+    P, page, KV, dh = k_pages.shape
+    k = k_pages[page_table].reshape(B, M * page, KV, dh)
+    v = v_pages[page_table].reshape(B, M * page, KV, dh)
+    return decode_attention(q, k, v, lengths, scale=scale)

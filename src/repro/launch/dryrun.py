@@ -96,6 +96,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool) -> dict:
             if v is not None:
                 mem_d[k] = int(v)
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax: one dict per device
+        cost = cost[0] if cost else {}
     cost_d = {k: float(v) for k, v in cost.items()
               if isinstance(v, (int, float)) and (
                   "flops" in k or "bytes" in k or "utilization" in k.lower()

@@ -1,8 +1,15 @@
-"""Batched serving driver: prefill a prompt batch, decode N tokens.
+"""Serving driver: continuous-batching engine (default) or static batch.
+
+``--mode engine`` runs the runtime.Engine — admission queue, per-slot
+request state, paged KV cache, slot recycling — against a mixed-length
+Poisson arrival trace. ``--mode static`` is the seed lockstep path kept
+as the measurable baseline: one batch prefills together, decodes in
+unison, and holds a dense cache_len x batch KV cache. ``--mode auto``
+picks the engine when the model family has a backend (dense / vlm / ssm)
+and falls back to static otherwise.
 
 Runs reduced configs end-to-end on CPU (1x1 mesh); the pod-mesh serving
-cells are proven by the dry-run. Reports prefill/decode latency and
-writes the sampled continuations.
+cells are proven by the dry-run.
 
   PYTHONPATH=src python -m repro.launch.serve --arch codeqwen1.5-7b \
       --batch 4 --prompt-len 32 --gen 16
@@ -11,6 +18,7 @@ writes the sampled continuations.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -18,10 +26,87 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config
-from ..models import get_model, layers as L
+from ..models import get_model
+from ..runtime import (ENGINE_FAMILIES, Engine, EngineConfig, poisson_trace,
+                       vlm_extras_fn)
 from . import sharding as sh
 from .mesh import make_host_mesh, make_production_mesh
 from .steps import make_prefill_step, make_serve_step
+
+
+def run_static(cfg, params, args):
+    """Seed lockstep path: one prefill, ``--gen`` decode steps in unison."""
+    key = jax.random.PRNGKey(args.seed)
+    cache_len = args.cache_len or (args.prompt_len + args.gen)
+
+    key, kt = jax.random.split(key)
+    batch = {"tokens": jax.random.randint(
+        kt, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            kt, (args.batch, cfg.encoder.seq_len, cfg.d_model))
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            kt, (args.batch, 4, cfg.d_model))
+
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    t0 = time.monotonic()
+    logits, state = jax.block_until_ready(prefill(params, batch))
+    t_prefill = time.monotonic() - t0
+
+    toks = []
+    key, ks = jax.random.split(key)
+    tok = jax.random.categorical(ks, logits / args.temperature, -1)
+    t0 = time.monotonic()
+    for i in range(args.gen):
+        toks.append(np.asarray(tok))
+        logits, state = serve(params, state, tok)
+        key, ks = jax.random.split(key)
+        tok = jax.random.categorical(ks, logits / args.temperature, -1)
+    jax.block_until_ready(logits)
+    t_decode = (time.monotonic() - t0) / args.gen
+
+    out = np.stack(toks, axis=1)
+    print(f"arch={cfg.name} mode=static batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen}")
+    print(f"prefill: {t_prefill * 1e3:.1f} ms   "
+          f"decode: {t_decode * 1e3:.1f} ms/token")
+    for b in range(min(args.batch, 2)):
+        print(f"  seq{b}: {out[b].tolist()}")
+    assert np.isfinite(np.asarray(logits)).all()
+    print("ok")
+    return 0
+
+
+def run_engine(cfg, params, args):
+    """Continuous batching against a Poisson arrival trace."""
+    page = max(8, args.prompt_len // 4)
+    max_len = args.prompt_len + args.gen
+    pages_per_seq = -(-max_len // page) + 1
+    ecfg = EngineConfig(
+        num_slots=args.batch, page_size=page,
+        num_pages=1 + pages_per_seq * args.batch * 2,
+        max_pages_per_seq=pages_per_seq,
+        prefill_bucket=page,
+        greedy=False, temperature=args.temperature, seed=args.seed)
+    extras_fn = vlm_extras_fn(cfg) if cfg.family == "vlm" else None
+    trace = poisson_trace(
+        args.requests, mean_interarrival=args.mean_interarrival,
+        prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+        gen_lens=(max(args.gen // 4, 1), max(args.gen // 2, 1), args.gen),
+        vocab_size=cfg.vocab_size, seed=args.seed, extras_fn=extras_fn)
+    rep = Engine(cfg, params, ecfg).run(trace)
+    print(f"arch={cfg.name} mode=engine slots={args.batch} "
+          f"requests={args.requests}")
+    print(json.dumps(rep.summary(), indent=1))
+    done = [r for r in rep.completed if not r.truncated]
+    for r in done[:2]:
+        print(f"  req{r.rid}: {r.generated}")
+    assert done, "no requests completed"
+    print("ok")
+    return 0
 
 
 def main(argv=None):
@@ -29,67 +114,40 @@ def main(argv=None):
     ap.add_argument("--arch", default="codeqwen1.5-7b")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--mesh", default="host", choices=("host", "pod"))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mode", default="auto",
+                    choices=("auto", "engine", "static"))
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / engine slot count")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=0)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="engine trace length (default 3x slots)")
+    ap.add_argument("--mean-interarrival", type=float, default=0.5,
+                    help="engine trace mean gap in decode steps")
     ap.add_argument("--temperature", type=float, default=0.8)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if not args.requests:
+        args.requests = 3 * args.batch
 
     mesh = (make_production_mesh if args.mesh == "pod"
             else make_host_mesh)()
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()
-    api = get_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    cache_len = args.cache_len or (args.prompt_len + args.gen)
+    mode = args.mode
+    if mode == "auto":
+        mode = "engine" if cfg.family in ENGINE_FAMILIES else "static"
 
     with mesh:
-        params = api.init_params(cfg, key)
+        api = get_model(cfg)
+        params = api.init_params(cfg, jax.random.PRNGKey(args.seed))
         p_spec = sh.param_pspecs(params, mesh)
         params = jax.device_put(params, sh.to_shardings(p_spec, mesh))
-
-        key, kt = jax.random.split(key)
-        batch = {"tokens": jax.random.randint(
-            kt, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
-        if cfg.family == "encdec":
-            batch["frames"] = jax.random.normal(
-                kt, (args.batch, cfg.encoder.seq_len, cfg.d_model))
-        if cfg.family == "vlm":
-            batch["patch_embeds"] = jax.random.normal(
-                kt, (args.batch, 4, cfg.d_model))
-
-        prefill = jax.jit(make_prefill_step(cfg, cache_len))
-        serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
-
-        t0 = time.monotonic()
-        logits, state = jax.block_until_ready(prefill(params, batch))
-        t_prefill = time.monotonic() - t0
-
-        toks = []
-        key, ks = jax.random.split(key)
-        tok = jax.random.categorical(ks, logits / args.temperature, -1)
-        t0 = time.monotonic()
-        for i in range(args.gen):
-            toks.append(np.asarray(tok))
-            logits, state = serve(params, state, tok)
-            key, ks = jax.random.split(key)
-            tok = jax.random.categorical(ks, logits / args.temperature, -1)
-        jax.block_until_ready(logits)
-        t_decode = (time.monotonic() - t0) / args.gen
-
-        out = np.stack(toks, axis=1)
-        print(f"arch={cfg.name} batch={args.batch} "
-              f"prompt={args.prompt_len} gen={args.gen}")
-        print(f"prefill: {t_prefill * 1e3:.1f} ms   "
-              f"decode: {t_decode * 1e3:.1f} ms/token")
-        for b in range(min(args.batch, 2)):
-            print(f"  seq{b}: {out[b].tolist()}")
-        assert np.isfinite(np.asarray(logits)).all()
-        print("ok")
-        return 0
+        if mode == "engine":
+            return run_engine(cfg, params, args)
+        return run_static(cfg, params, args)
 
 
 if __name__ == "__main__":

@@ -109,6 +109,41 @@ def expand_kv(k, e: int):
     return k if e == 1 else jnp.repeat(k, e, axis=2)
 
 
+# --- paged KV cache ---------------------------------------------------------------
+# Fixed-size pages from a shared pool; each sequence names its pages via an
+# int32 page table row, so cache memory tracks *live* tokens instead of
+# batch x max_len — the serving analogue of the paper's packed canvas
+# (occupied blocks only), with page 0 reserved as the pager's trash page.
+
+def paged_cache_init(num_layers: int, num_pages: int, page_size: int,
+                     kv_heads: int, head_dim: int, dtype=COMPUTE_DTYPE):
+    """(k_pages, v_pages), each (L, KV, P, page, dh).
+
+    Pools live in the *kernel* layout (head-major) so the decode hot loop
+    hands them to paged_decode_attention without relayout — a pool-wide
+    transpose per layer per step would cost O(pool bytes) HBM traffic,
+    defeating the touch-only-owned-pages design."""
+    shape = (num_layers, kv_heads, num_pages, page_size, head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+def paged_cache_append(pages, new, page_ids, offsets):
+    """Write one token per sequence into its page: pages (KV, P, page,
+    dh), new (B, KV, dh), page_ids/offsets (B,) int32. Inactive slots must
+    point at the trash page (collisions there are harmless)."""
+    return pages.at[:, page_ids, offsets].set(
+        new.transpose(1, 0, 2).astype(pages.dtype))
+
+
+def paged_cache_write_prompt(pages, kv, page_ids):
+    """Scatter a prefilled sequence into its pages: pages (L, KV, P, page,
+    dh), kv (L, S, KV, dh) with S a page multiple, page_ids (S/page,) int32
+    (entries past the live pages point at the trash page)."""
+    Lc, KVh, P, page, dh = pages.shape
+    chunks = kv.reshape(Lc, -1, page, KVh, dh).transpose(0, 3, 1, 2, 4)
+    return pages.at[:, :, page_ids].set(chunks.astype(pages.dtype))
+
+
 # --- initializers -------------------------------------------------------------
 
 def trunc_normal(key, shape, std=0.02, dtype=PARAM_DTYPE):

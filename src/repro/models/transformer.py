@@ -239,3 +239,133 @@ def decode_step(cfg, params, state: DecodeState, tokens, *, constrain=None):
     x, (k_new, v_new) = lax.scan(body, x, (params["blocks"], state.k, state.v))
     logits = _head(cfg, params, x)[:, 0]
     return logits, DecodeState(k=k_new, v=v_new, pos=pos + 1)
+
+
+# --- paged decode (continuous batching) -----------------------------------------
+# Per-slot lengths instead of one lockstep position: every slot in the
+# batch can sit at a different point of a different request, and cache
+# bytes track live tokens through the page pool (runtime/kv_pager.py).
+
+
+@dataclasses.dataclass
+class PagedDecodeState:
+    k_pages: jax.Array     # (L, KV, P, page, dh); page 0 = trash page
+    v_pages: jax.Array
+
+
+jax.tree_util.register_dataclass(PagedDecodeState,
+                                 data_fields=["k_pages", "v_pages"],
+                                 meta_fields=[])
+
+
+def init_paged_decode_state(cfg, num_pages: int, page_size: int,
+                            dtype=L.COMPUTE_DTYPE) -> PagedDecodeState:
+    k, v = L.paged_cache_init(cfg.num_layers, num_pages, page_size,
+                              cfg.num_kv_heads, cfg.head_dim, dtype)
+    return PagedDecodeState(k_pages=k, v_pages=v)
+
+
+def paged_prefill(cfg, params, batch, lengths, *, constrain=None):
+    """Forward the (padded) prompts; return per-sequence last-live-token
+    logits plus the raw per-layer KV (L, B, S, KV, dh) for page scatter.
+
+    tokens (B, S) may be padded past lengths (B,): causality keeps pad
+    positions from touching live ones, and the pad KV is either masked by
+    the live length or scattered to the trash page.
+    """
+    logits, (k, v) = forward(cfg, params, batch, return_kv=True,
+                             constrain=constrain)
+    idx = (lengths - 1)[:, None, None]
+    last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return last, (k.astype(L.COMPUTE_DTYPE), v.astype(L.COMPUTE_DTYPE))
+
+
+def write_prefill_pages(cfg, state: PagedDecodeState, kv, page_ids
+                        ) -> PagedDecodeState:
+    """Scatter one prefilled request's KV into its pages. kv: (k, v) each
+    (L, S, KV, dh), S a page multiple; page_ids (S/page,) int32 with dead
+    entries pointing at the trash page."""
+    k, v = kv
+    return PagedDecodeState(
+        k_pages=L.paged_cache_write_prompt(state.k_pages, k, page_ids),
+        v_pages=L.paged_cache_write_prompt(state.v_pages, v, page_ids))
+
+
+def _paged_block(cfg, p, x, batch, k_pages, v_pages, page_table,
+                 page_ids, offsets, attn_lengths, constrain=None):
+    """One decoder block over a paged cache, S == 1. k/v_pages: (KV, P,
+    page, dh) for this layer; returns (y, k_pages, v_pages) with the new
+    token appended at (page_ids, offsets)."""
+    from ..kernels import ops as kops
+
+    _, norm = L.make_norm(cfg)
+    B, S, D = x.shape
+    dh = cfg.head_dim
+    cd = L.COMPUTE_DTYPE
+
+    h = norm(x, p["ln1"]).astype(cd)
+    q = h @ p["wq"].astype(cd)
+    k = h @ p["wk"].astype(cd)
+    v = h @ p["wv"].astype(cd)
+    if cfg.qkv_bias:
+        q, k, v = (q + p["bq"].astype(cd), k + p["bk"].astype(cd),
+                   v + p["bv"].astype(cd))
+    q = q.reshape(B, S, cfg.num_heads, dh)
+    k = k.reshape(B, S, cfg.num_kv_heads, dh)
+    v = v.reshape(B, S, cfg.num_kv_heads, dh)
+    q = _rope(cfg, q, batch)
+    k = _rope(cfg, k, batch)
+
+    k_pages = L.paged_cache_append(k_pages, k[:, 0], page_ids, offsets)
+    v_pages = L.paged_cache_append(v_pages, v[:, 0], page_ids, offsets)
+    attn = kops.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                       page_table, attn_lengths)
+    if constrain is not None:
+        attn = constrain(attn[:, None])[:, 0]
+    y = x + (attn.reshape(B, 1, cfg.q_dim)
+             @ p["wo"].astype(cd)).astype(x.dtype)
+
+    h2 = norm(y, p["ln2"]).astype(cd)
+    ff = L.swiglu(h2, p["w_gate"].astype(cd), p["w_up"].astype(cd),
+                  p["w_down"].astype(cd))
+    out = y + ff.astype(x.dtype)
+    if constrain is not None:
+        out = constrain(out)
+    return out, k_pages, v_pages
+
+
+def paged_decode_step(cfg, params, state: PagedDecodeState, tokens,
+                      page_table, lengths, active, *, constrain=None):
+    """One token per slot against the paged cache.
+
+    tokens (B,) int32; page_table (B, M) int32; lengths (B,) live context
+    per slot; active (B,) bool — inactive slots write to the trash page
+    and read zero-length caches, so their (discarded) outputs cost no
+    correctness. Returns (logits (B, V), new state); lengths are advanced
+    by the caller (host-side scheduler owns them).
+    """
+    B = tokens.shape[0]
+    page = state.k_pages.shape[3]
+    lengths = lengths.astype(jnp.int32)
+    active = active.astype(bool)
+    batch = _default_batch(cfg, {"tokens": tokens[:, None],
+                                 "positions": lengths[:, None]})
+    x = _embed(cfg, params, batch)
+
+    slot = (lengths // page)[:, None]                       # (B, 1)
+    page_ids = jnp.take_along_axis(page_table, slot, axis=1)[:, 0]
+    page_ids = jnp.where(active, page_ids, 0)               # trash page
+    offsets = jnp.where(active, lengths % page, 0)
+    attn_lengths = jnp.where(active, lengths + 1, 0)        # incl. new token
+
+    def body(carry, xs):
+        p, kp, vp = xs
+        y, kp, vp = _paged_block(cfg, p, carry, batch, kp, vp, page_table,
+                                 page_ids, offsets, attn_lengths,
+                                 constrain=constrain)
+        return y, (kp, vp)
+
+    x, (k_pages, v_pages) = lax.scan(
+        body, x, (params["blocks"], state.k_pages, state.v_pages))
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, PagedDecodeState(k_pages=k_pages, v_pages=v_pages)

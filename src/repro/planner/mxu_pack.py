@@ -31,6 +31,7 @@ cover stores around them.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Mapping, Sequence
 
 import jax
@@ -84,9 +85,13 @@ class PackedLayout:
 
     # -- block cover (what the kernel/memory actually touch) ----------------
 
-    @property
+    @functools.cached_property
     def blocks(self) -> np.ndarray:
-        """(N, 2) sorted unique (kb, cb) blocks intersecting any tile."""
+        """(N, 2) sorted unique (kb, cb) blocks intersecting any tile.
+
+        Cached on the instance (layouts are immutable): with pack_canvas
+        memoized too, a serving config's block cover and meta are computed
+        once per process lifetime."""
         s: set[tuple[int, int]] = set()
         for _, p in self._all():
             for kb in range(p.x_off // BLK, _ceil(p.x_off + p.rows) // BLK):
@@ -247,7 +252,16 @@ def pack_canvas(mats: Sequence[WeightMatrix], *, max_tile_rows: int = 4096,
     (block-aligned vs tight-diagonal) are generated and the densest —
     fewest stored MXU blocks — wins. Groups are ordered tallest-first
     (the supertile/shelf heuristic) deterministically.
+
+    Memoized per (mats, chunking) — WeightMatrix is frozen/hashable — so
+    a serving process lays out each config once, not once per step.
     """
+    return _pack_canvas_cached(tuple(mats), max_tile_rows, max_tile_cols)
+
+
+@functools.lru_cache(maxsize=256)
+def _pack_canvas_cached(mats: tuple[WeightMatrix, ...], max_tile_rows: int,
+                        max_tile_cols: int) -> PackedLayout:
     names = [m.name for m in mats]
     if len(set(names)) != len(names):
         raise ValueError("duplicate matrix names")

@@ -1,4 +1,16 @@
+"""Serving/runtime subsystems: continuous-batching engine, KV pager,
+arrival-trace scheduler, and the elastic training supervisor."""
+
+from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
+                     make_sampler, run_static, vlm_extras_fn)
 from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
                               TrainingSupervisor)
+from .kv_pager import TRASH_PAGE, PageAllocator, PagerConfig
+from .scheduler import Request, Scheduler, poisson_trace
 
-__all__ = ["ElasticConfig", "RunReport", "StepTimeout", "TrainingSupervisor"]
+__all__ = ["Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
+           "run_static", "make_sampler", "vlm_extras_fn",
+           "PageAllocator", "PagerConfig", "TRASH_PAGE",
+           "Request", "Scheduler", "poisson_trace",
+           "ElasticConfig", "RunReport", "StepTimeout",
+           "TrainingSupervisor"]

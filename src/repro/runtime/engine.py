@@ -1,0 +1,529 @@
+"""Continuous-batching decode engine over a paged KV cache.
+
+The static serving path (launch/serve.py --mode static) prefills one
+lockstep batch and decodes until the *longest* request finishes: slots
+whose request completed keep burning decode steps and the dense cache
+holds ``batch x max_len`` whether occupied or not — the serving analogue
+of the idle-rows / wasted-cells failure mode the paper attacks in the IMC
+fabric. This engine keeps the compute fabric occupied instead:
+
+  * an admission queue (scheduler.py) feeds free slots as requests arrive;
+  * each slot advances its own request at its own length (per-slot RoPE
+    positions and attention lengths — models.transformer.paged_decode_step);
+  * the KV cache is a shared page pool (kv_pager.py) addressed through
+    int32 page tables, so cache bytes track live tokens;
+  * finished slots are recycled immediately and their pages returned;
+  * on page exhaustion the youngest request is preempted (pages freed,
+    request requeued) rather than stalling the whole batch.
+
+Two backends cover the model zoo's cache shapes: PagedTransformerBackend
+(dense + vlm families — a real paged KV cache) and RecurrentBackend (ssm —
+constant-size per-slot state, where continuous batching still removes the
+lockstep drain but there is no cache growth to page).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import get_model
+from .kv_pager import PageAllocator, PagerConfig, TRASH_PAGE
+from .scheduler import Request, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_slots: int = 8
+    page_size: int = 16
+    num_pages: int = 257               # incl. the trash page
+    max_pages_per_seq: int = 16
+    prefill_bucket: int = 32           # prompt pad quantum (page multiple)
+    greedy: bool = True
+    temperature: float = 0.8
+    seed: int = 0
+    max_steps: int = 200_000
+
+    def __post_init__(self):
+        assert self.prefill_bucket % self.page_size == 0, \
+            "prefill bucket must be a page multiple"
+
+    @property
+    def pager(self) -> PagerConfig:
+        return PagerConfig(self.num_pages, self.page_size,
+                           self.max_pages_per_seq)
+
+
+# --- reports -------------------------------------------------------------------
+
+
+def make_sampler(rng: np.random.Generator, greedy: bool,
+                 temperature: float):
+    """Shared host-side sampler (engine and static baseline must match)."""
+    def sample(logits_row: np.ndarray) -> int:
+        if greedy:
+            return int(np.argmax(logits_row))
+        z = logits_row.astype(np.float64) / temperature
+        z -= z.max()
+        p = np.exp(z)
+        return int(rng.choice(p.size, p=p / p.sum()))
+    return sample
+
+
+def vlm_extras_fn(cfg, num_patches: int = 4):
+    """Per-request extras generator for vlm traces (poisson_trace hook)."""
+    def extras(rng: np.random.Generator) -> dict:
+        return {"patch_embeds": rng.standard_normal(
+            (num_patches, cfg.d_model)).astype(np.float32)}
+    return extras
+
+
+@dataclasses.dataclass
+class EngineReport:
+    name: str
+    num_slots: int
+    decode_steps: int = 0
+    slot_steps: int = 0                # actual batch width summed per step
+    useful_slot_steps: int = 0
+    prefill_calls: int = 0
+    preemptions: int = 0
+    completed: list[Request] = dataclasses.field(default_factory=list)
+    peak_live_pages: int = 0
+    page_bytes: int = 0                # 0 -> non-paged backend
+    cache_bytes_alloc: int = 0         # full backing allocation
+    wall_s: float = 0.0
+    decode_wall_s: float = 0.0
+
+    @property
+    def new_tokens(self) -> int:
+        return sum(len(r.generated) for r in self.completed)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Decode utilization: generated tokens per batched decode step.
+        The structural throughput metric — wall-clock tokens/s is this
+        times steps/s, and steps cost the same for engine and baseline."""
+        return self.new_tokens / max(self.decode_steps, 1)
+
+    @property
+    def wasted_slot_fraction(self) -> float:
+        return 1.0 - self.useful_slot_steps / max(self.slot_steps, 1)
+
+    @property
+    def kv_bytes_peak(self) -> int:
+        """Peak cache bytes holding *live* tokens (paged) or the full
+        dense allocation (static / recurrent)."""
+        if self.page_bytes:
+            return self.peak_live_pages * self.page_bytes
+        return self.cache_bytes_alloc
+
+    def latency_percentiles(self, qs=(50, 95)) -> dict[str, float]:
+        lats = [r.latency_steps for r in self.completed] or [0]
+        return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
+
+    def summary(self) -> dict:
+        return {
+            "name": self.name,
+            "requests": len(self.completed),
+            "new_tokens": self.new_tokens,
+            "decode_steps": self.decode_steps,
+            "tokens_per_step": round(self.tokens_per_step, 3),
+            "wasted_slot_fraction": round(self.wasted_slot_fraction, 3),
+            "kv_bytes_peak": self.kv_bytes_peak,
+            "preemptions": self.preemptions,
+            "prefill_calls": self.prefill_calls,
+            **{k: round(v, 1)
+               for k, v in self.latency_percentiles().items()},
+            "wall_s": round(self.wall_s, 3),
+            "tokens_per_s": round(self.new_tokens / self.decode_wall_s, 1)
+            if self.decode_wall_s > 0 else 0.0,
+        }
+
+
+# --- backends ------------------------------------------------------------------
+
+
+class PagedTransformerBackend:
+    """Dense/vlm families: real paged KV cache + paged decode attention."""
+
+    paged = True
+
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        from ..models import transformer as T
+
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.T = T
+        self.state = T.init_paged_decode_state(cfg, ecfg.num_pages,
+                                               ecfg.page_size)
+
+        def prefill_write(params, state, batch, lengths, page_ids):
+            last, (k, v) = T.paged_prefill(cfg, params, batch, lengths)
+            state = T.write_prefill_pages(cfg, state, (k[:, 0], v[:, 0]),
+                                          page_ids)
+            return last[0], state
+
+        def decode(params, state, tokens, page_table, lengths, active):
+            return T.paged_decode_step(cfg, params, state, tokens,
+                                       page_table, lengths, active)
+
+        self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def prefill(self, ctx: np.ndarray, extras, page_ids: list[int]
+                ) -> np.ndarray:
+        """Prefill one request (padded to the bucket), scatter its KV into
+        ``page_ids``, return the last live token's logits (V,)."""
+        e = self.ecfg
+        plen = len(ctx)
+        bucket = -(-plen // e.prefill_bucket) * e.prefill_bucket
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = ctx
+        pids = np.full((bucket // e.page_size,), TRASH_PAGE, np.int32)
+        pids[:len(page_ids)] = page_ids
+        batch = {"tokens": jnp.asarray(toks)}
+        if extras:
+            batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
+        logits, self.state = self._prefill(
+            self.params, self.state, batch,
+            jnp.asarray([plen], jnp.int32), jnp.asarray(pids))
+        return np.asarray(logits)
+
+    def decode(self, tokens, page_table, lengths, active) -> np.ndarray:
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(page_table), jnp.asarray(lengths),
+            jnp.asarray(active))
+        return np.asarray(logits)
+
+    def release_slot(self, slot: int) -> None:
+        pass                            # pages freed by the allocator
+
+
+class RecurrentBackend:
+    """ssm family (rwkv6): constant-size per-slot state, no paging.
+
+    The recurrence consumes every token it sees, so prompts are prefilled
+    at their exact length (no pad bucketing — traces should draw prompt
+    lengths from a small set to bound jit compiles).
+    """
+
+    paged = False
+
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.api = get_model(cfg)
+        self.state = self.api.init_decode_state(cfg, ecfg.num_slots)
+        self._prefill = jax.jit(
+            lambda params, batch: self.api.prefill(cfg, params, batch, 0))
+        self._decode = jax.jit(
+            lambda params, state, tokens: self.api.decode_step(
+                cfg, params, state, tokens),
+            donate_argnums=(1,))
+        self._write = jax.jit(self._write_slot, static_argnums=(2,),
+                              donate_argnums=(0,))
+
+    @staticmethod
+    def _write_slot(state, single, slot: int):
+        """Copy a B=1 prefill state into batch slot ``slot`` (every data
+        leaf of RwkvState carries batch on axis 1; pos is lockstep-only
+        and unused by the engine)."""
+        return dataclasses.replace(
+            state,
+            att_prev=state.att_prev.at[:, slot].set(single.att_prev[:, 0]),
+            ffn_prev=state.ffn_prev.at[:, slot].set(single.ffn_prev[:, 0]),
+            wkv=state.wkv.at[:, slot].set(single.wkv[:, 0]))
+
+    def prefill(self, ctx: np.ndarray, extras, slot: int) -> np.ndarray:
+        batch = {"tokens": jnp.asarray(ctx[None].astype(np.int32))}
+        logits, single = self._prefill(self.params, batch)
+        self.state = self._write(self.state, single, slot)
+        return np.asarray(logits[0])
+
+    def decode(self, tokens, page_table, lengths, active) -> np.ndarray:
+        logits, self.state = self._decode(self.params, self.state,
+                                          jnp.asarray(tokens))
+        return np.asarray(logits)
+
+    def release_slot(self, slot: int) -> None:
+        pass                            # overwritten at next admission
+
+
+ENGINE_FAMILIES = {"dense": PagedTransformerBackend,
+                   "vlm": PagedTransformerBackend,
+                   "ssm": RecurrentBackend}
+
+
+# --- engine --------------------------------------------------------------------
+
+
+class Engine:
+    """Host-driven continuous-batching loop around a jitted decode step."""
+
+    def __init__(self, cfg, params, ecfg: EngineConfig | None = None):
+        self.cfg = cfg
+        self.ecfg = ecfg or EngineConfig()
+        backend_cls = ENGINE_FAMILIES.get(cfg.family)
+        if backend_cls is None:
+            raise ValueError(
+                f"family {cfg.family!r} has no engine backend "
+                f"(supported: {sorted(ENGINE_FAMILIES)})")
+        self.backend = backend_cls(cfg, params, self.ecfg)
+        self.rng = np.random.default_rng(self.ecfg.seed)
+        self._sample = make_sampler(self.rng, self.ecfg.greedy,
+                                    self.ecfg.temperature)
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self, requests: list[Request]) -> EngineReport:
+        e, pgr = self.ecfg, self.ecfg.pager
+        B, M, page = e.num_slots, pgr.max_pages_per_seq, pgr.page_size
+        paged = self.backend.paged
+        sched = Scheduler(requests)
+        alloc = PageAllocator(e.num_pages) if paged else None
+
+        slots: list[Request | None] = [None] * B
+        page_table = np.zeros((B, M), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        pending = np.zeros((B,), np.int32)      # next decode input token
+
+        page_bytes = pgr.page_bytes(self.cfg) if paged else 0
+        rep = EngineReport(
+            name=f"engine/{self.cfg.name}", num_slots=B,
+            page_bytes=page_bytes,
+            cache_bytes_alloc=page_bytes * (e.num_pages - 1) if paged
+            else _state_bytes(self.backend.state))
+        t_run = time.monotonic()
+        step = 0
+
+        def clear_slot(s: int) -> None:
+            req = slots[s]
+            slots[s] = None
+            page_table[s, :] = TRASH_PAGE
+            lengths[s] = 0
+            pending[s] = 0
+            if paged:
+                alloc.free_owner(req.rid)
+            self.backend.release_slot(s)
+
+        def finish(s: int) -> None:
+            slots[s].done_step = step
+            rep.completed.append(slots[s])
+            clear_slot(s)
+
+        def preempt(s: int) -> None:
+            req = slots[s]
+            clear_slot(s)
+            sched.requeue(req)
+
+        while True:
+            sched.release_arrivals(step)
+
+            # -- admission into free slots -------------------------------
+            admitting = True
+            for s in range(B):
+                # retry the same slot until it is filled (rejected or
+                # finished-at-prefill requests must not waste the slot)
+                while admitting and slots[s] is None:
+                    req = sched.peek_ready()
+                    if req is None:
+                        admitting = False
+                        break
+                    ctx = req.context_tokens
+                    assert len(ctx) >= 1, "empty prompts are not admissible"
+                    if paged:
+                        n_pages = pgr.pages_for(len(ctx))
+                        # cache at completion holds prompt + max_new - 1
+                        # tokens (the final sampled token is never written)
+                        final_ctx = len(req.prompt) + req.max_new_tokens - 1
+                        if (final_ctx > pgr.max_context
+                                or pgr.pages_for(final_ctx) > e.num_pages - 1
+                                or n_pages > e.num_pages - 1):
+                            sched.pop_ready()   # can never fit: fail fast
+                            req.truncated = True
+                            req.done_step = step
+                            rep.completed.append(req)
+                            continue
+                        if not alloc.can_alloc(n_pages):
+                            admitting = False   # FCFS: wait for free pages
+                            break
+                        sched.pop_ready()
+                        pages = alloc.alloc(req.rid, n_pages)
+                        page_table[s, :] = TRASH_PAGE
+                        page_table[s, :len(pages)] = pages
+                        logits = self.backend.prefill(ctx, req.extras, pages)
+                    else:
+                        sched.pop_ready()
+                        logits = self.backend.prefill(ctx, req.extras, s)
+                    rep.prefill_calls += 1
+                    req.prefills += 1
+                    req.admitted_step = step
+                    slots[s] = req
+                    lengths[s] = len(ctx)
+                    if req.generated:   # re-admission after preemption
+                        pending[s] = req.generated[-1]
+                    else:
+                        tok = self._sample(logits)
+                        req.generated.append(tok)
+                        pending[s] = tok
+                        if req.done:
+                            finish(s)   # slot freed: while re-admits
+
+            active = [s for s in range(B) if slots[s] is not None]
+
+            # -- page growth / preemption --------------------------------
+            if paged and active:
+                for s in list(active):
+                    if slots[s] is None:
+                        continue
+                    need_page = lengths[s] % page == 0
+                    if not need_page:
+                        continue
+                    pi = lengths[s] // page
+                    if pi >= M:         # table row full: stop the request
+                        slots[s].truncated = True
+                        finish(s)
+                        active.remove(s)
+                        continue
+                    while not alloc.can_alloc(1):
+                        victim = Scheduler.pick_victim(
+                            [(v, slots[v]) for v in active
+                             if slots[v] is not None], exclude=s)
+                        if victim is None or victim[0] == s:
+                            preempt(s)
+                            active.remove(s)
+                            break
+                        preempt(victim[0])
+                        active.remove(victim[0])
+                    if slots[s] is None:
+                        continue
+                    new = alloc.alloc(slots[s].rid, 1)
+                    page_table[s, pi] = new[0]
+
+            # -- one batched decode step ---------------------------------
+            if active:
+                act = np.zeros((B,), bool)
+                act[active] = True
+                t0 = time.monotonic()
+                logits = self.backend.decode(pending, page_table, lengths,
+                                             act)
+                rep.decode_wall_s += time.monotonic() - t0
+                rep.decode_steps += 1
+                rep.slot_steps += B     # the batch always runs full width
+                rep.useful_slot_steps += len(active)
+                lengths[active] += 1
+                for s in active:
+                    req = slots[s]
+                    tok = self._sample(logits[s])
+                    req.generated.append(tok)
+                    pending[s] = tok
+                    if req.done:
+                        finish(s)
+                if paged:
+                    rep.peak_live_pages = max(rep.peak_live_pages,
+                                              alloc.live_count)
+            elif not sched.exhausted:
+                nxt = sched.next_arrival()
+                if nxt is not None and nxt > step:
+                    step = nxt          # idle: fast-forward to next arrival
+                    continue
+            else:
+                break
+
+            step += 1
+            if step > e.max_steps:
+                raise RuntimeError("engine exceeded max_steps")
+
+        if paged:
+            alloc.check()
+            assert alloc.live_count == 0, "pages leaked past completion"
+        rep.preemptions = sched.preemptions
+        rep.wall_s = time.monotonic() - t_run
+        return rep
+
+
+def _state_bytes(state) -> int:
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(state))
+
+
+# --- static lockstep baseline --------------------------------------------------
+
+
+def run_static(cfg, params, requests: list[Request], *, num_slots: int = 8,
+               greedy: bool = True, temperature: float = 0.8,
+               seed: int = 0) -> EngineReport:
+    """The seed serving path as a measurable baseline: requests are taken
+    in arrival order in fixed batches; each batch prefills together and
+    decodes in lockstep until the *longest* generation in the group
+    finishes. The dense KV cache holds batch x (max prompt + max gen)
+    for the whole group.
+
+    Mixed prompt lengths are left-padded to the group max with no pad
+    masking — pad tokens sit in the cache and real tokens attend to
+    them. That is the naive static path's real behaviour (and one more
+    reason per-slot batching wins); this baseline's metrics are
+    structural (steps/bytes), not a quality reference."""
+    api = get_model(cfg)
+    requests = sorted(requests, key=lambda r: r.arrival)
+    rep = EngineReport(name=f"static/{cfg.name}", num_slots=num_slots)
+
+    prefill_jit = jax.jit(partial(api.prefill, cfg),
+                          static_argnames=("cache_len",))
+    decode_jit = jax.jit(partial(api.decode_step, cfg),
+                         donate_argnums=(1,))
+    sample = make_sampler(np.random.default_rng(seed), greedy, temperature)
+
+    t_run = time.monotonic()
+    step = 0
+    for i in range(0, len(requests), num_slots):
+        group = requests[i:i + num_slots]
+        step = max(step, max(r.arrival for r in group))
+        plen = max(len(r.prompt) for r in group)
+        gen = max(r.max_new_tokens for r in group)
+        cache_len = plen + gen
+        toks = np.zeros((len(group), plen), np.int32)
+        for b, r in enumerate(group):
+            toks[b, plen - len(r.prompt):] = r.prompt   # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        extra_keys = set().union(*(set(r.extras or {}) for r in group))
+        if extra_keys:
+            missing = [r.rid for r in group
+                       if set(r.extras or {}) != extra_keys]
+            assert not missing, \
+                f"requests {missing} lack extras {sorted(extra_keys)} " \
+                "their batch group carries (static groups must be uniform)"
+            batch.update({k: jnp.asarray(
+                np.stack([r.extras[k] for r in group]))
+                for k in extra_keys})
+        logits, state = prefill_jit(params, batch, cache_len=cache_len)
+        logits = np.asarray(logits)
+        for b, r in enumerate(group):
+            r.admitted_step = step
+            r.generated.append(sample(logits[b]))
+        rep.prefill_calls += 1
+        rep.cache_bytes_alloc = max(rep.cache_bytes_alloc,
+                                    _state_bytes(state))
+        for _ in range(gen - 1):        # lockstep drain to the longest
+            tok = jnp.asarray(np.asarray(
+                [r.generated[-1] for r in group], np.int32))
+            t0 = time.monotonic()
+            logits, state = decode_jit(params, state, tok)
+            logits = np.asarray(logits)
+            rep.decode_wall_s += time.monotonic() - t0
+            rep.decode_steps += 1
+            rep.slot_steps += len(group)
+            step += 1
+            for b, r in enumerate(group):
+                if not r.done:
+                    r.generated.append(sample(logits[b]))
+                    rep.useful_slot_steps += 1
+        del state
+        for r in group:
+            r.done_step = step          # results return with the batch
+            rep.completed.append(r)
+    rep.wall_s = time.monotonic() - t_run
+    return rep

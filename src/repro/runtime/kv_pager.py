@@ -1,0 +1,114 @@
+"""Paged KV cache bookkeeping: fixed-size pages, free-list allocation.
+
+The device side is a shared page pool (models.layers.paged_cache_init)
+addressed through int32 page tables; this module is the host side — a
+free-list allocator with per-owner tracking so cache bytes follow *live*
+tokens instead of ``batch x max_len``. This is the serving transplant of
+the paper's packing objective: the dense per-slot cache is the "stacked"
+baseline (worst-case rows held whether occupied or not), the page pool is
+the packed canvas (only occupied blocks exist), and the free list is the
+allocator walking the D_m capacity axis.
+
+Page 0 is reserved as the *trash page*: dead page-table slots point at it
+so scatter/gather indices are always valid, and whatever lands there is
+never read back (attention lengths gate it out).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+TRASH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagerConfig:
+    """Geometry of the page pool.
+
+    num_pages counts the trash page; usable capacity is num_pages - 1.
+    max_pages_per_seq bounds a sequence's page-table row (its max context
+    is ``max_pages_per_seq * page_size`` tokens).
+    """
+    num_pages: int
+    page_size: int
+    max_pages_per_seq: int
+
+    def __post_init__(self):
+        assert self.num_pages >= 2, "need at least one non-trash page"
+        assert self.page_size >= 1 and self.max_pages_per_seq >= 1
+
+    @property
+    def max_context(self) -> int:
+        return self.max_pages_per_seq * self.page_size
+
+    def pages_for(self, tokens: int) -> int:
+        """Pages needed to hold ``tokens`` cache entries."""
+        return -(-tokens // self.page_size)
+
+    def page_bytes(self, cfg, dtype_bytes: int = 2) -> int:
+        """HBM bytes one page holds across all layers, K and V."""
+        return (2 * cfg.num_layers * self.page_size * cfg.num_kv_heads
+                * cfg.head_dim * dtype_bytes)
+
+
+class PageAllocator:
+    """Free-list page allocator with per-owner accounting.
+
+    Invariants (checked by ``check``): the free list and every owner's
+    page list partition ``{1, .., num_pages-1}``; no page is owned twice;
+    the trash page is never handed out.
+    """
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        # LIFO free list: recently freed pages are reused first (warm).
+        self._free: list[int] = list(range(num_pages - 1, 0, -1))
+        self._owned: dict[int, list[int]] = {}
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_count(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def owned(self, owner: int) -> list[int]:
+        return list(self._owned.get(owner, ()))
+
+    def can_alloc(self, n: int) -> bool:
+        return len(self._free) >= n
+
+    def alloc(self, owner: int, n: int) -> list[int] | None:
+        """Hand ``n`` pages to ``owner``; None (and no change) if the pool
+        can't cover the request — the caller preempts or waits."""
+        if n < 0:
+            raise ValueError("negative page count")
+        if len(self._free) < n:
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._owned.setdefault(owner, []).extend(pages)
+        return pages
+
+    def free_owner(self, owner: int) -> int:
+        """Return all of ``owner``'s pages to the free list (slot recycle /
+        preemption). Returns the number of pages released."""
+        pages = self._owned.pop(owner, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    def check(self) -> None:
+        """Assert free-list conservation and ownership disjointness."""
+        seen: set[int] = set()
+        for p in self._free:
+            assert 0 < p < self.num_pages, f"free page {p} out of range"
+            assert p not in seen, f"page {p} double-listed"
+            seen.add(p)
+        for owner, pages in self._owned.items():
+            for p in pages:
+                assert 0 < p < self.num_pages, \
+                    f"owner {owner} holds out-of-range page {p}"
+                assert p not in seen, f"page {p} owned twice"
+                seen.add(p)
+        assert seen == set(range(1, self.num_pages)), \
+            "free list + owners do not partition the pool"

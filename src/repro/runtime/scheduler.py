@@ -1,0 +1,122 @@
+"""Arrival-trace driven scheduling for the continuous-batching engine.
+
+Time is measured in *engine steps* (one batched decode per step), which
+keeps traces deterministic and hardware-independent: a request with
+``arrival=k`` becomes visible once the engine has taken k steps. The
+scheduler is FCFS for admission; on page exhaustion the engine asks for a
+preemption victim and the policy is latest-admitted-first (the youngest
+request has the least sunk prefill work — it re-enters the queue head and
+re-prefills prompt + generated tokens when pages free up).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+    rid: int
+    prompt: np.ndarray                 # (plen,) int32
+    max_new_tokens: int
+    arrival: int = 0                   # engine step at which it exists
+    extras: dict | None = None         # e.g. vlm patch_embeds (P, D)
+
+    # runtime (owned by the engine)
+    generated: list[int] = dataclasses.field(default_factory=list)
+    admitted_step: int = -1
+    done_step: int = -1
+    prefills: int = 0                  # 1 + number of preemption restarts
+    truncated: bool = False            # hit the pager's max context
+
+    @property
+    def context_tokens(self) -> np.ndarray:
+        """Prompt plus everything generated so far — what a re-admission
+        after preemption must prefill (all but the last generated token
+        are cache content; the last one is the pending decode input)."""
+        gen = np.asarray(self.generated[:-1], np.int32) \
+            if len(self.generated) > 1 else np.zeros((0,), np.int32)
+        return np.concatenate([self.prompt.astype(np.int32), gen])
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens or self.truncated
+
+    @property
+    def latency_steps(self) -> int:
+        return self.done_step - self.arrival
+
+
+def poisson_trace(n_requests: int, *, mean_interarrival: float,
+                  prompt_lens: tuple[int, ...], gen_lens: tuple[int, ...],
+                  vocab_size: int, seed: int = 0,
+                  extras_fn=None) -> list[Request]:
+    """Mixed-length Poisson trace: exponential interarrival gaps (in
+    engine steps), prompt/generation lengths drawn uniformly from the
+    given choices. Discrete length choices keep the prefill jit cache
+    small (one trace per bucket)."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += rng.exponential(mean_interarrival)
+        plen = int(rng.choice(prompt_lens))
+        glen = int(rng.choice(gen_lens))
+        prompt = rng.integers(0, vocab_size, size=plen).astype(np.int32)
+        out.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=glen,
+            arrival=int(t), extras=extras_fn(rng) if extras_fn else None))
+    return out
+
+
+class Scheduler:
+    """FCFS admission queue over an arrival trace + preemption policy."""
+
+    def __init__(self, requests: list[Request]):
+        self._pending = deque(sorted(requests, key=lambda r: r.arrival))
+        self._ready: deque[Request] = deque()
+        self.preemptions = 0
+
+    # -- arrival handling ---------------------------------------------------
+
+    def release_arrivals(self, step: int) -> None:
+        while self._pending and self._pending[0].arrival <= step:
+            self._ready.append(self._pending.popleft())
+
+    def next_arrival(self) -> int | None:
+        return self._pending[0].arrival if self._pending else None
+
+    # -- admission ----------------------------------------------------------
+
+    def peek_ready(self) -> Request | None:
+        return self._ready[0] if self._ready else None
+
+    def pop_ready(self) -> Request:
+        return self._ready.popleft()
+
+    def requeue(self, req: Request) -> None:
+        """Preempted request: back to the queue head (it keeps priority)."""
+        self._ready.appendleft(req)
+        self.preemptions += 1
+
+    # -- preemption policy --------------------------------------------------
+
+    @staticmethod
+    def pick_victim(active: list[tuple[int, Request]],
+                    exclude: int | None = None) -> tuple[int, Request] | None:
+        """Latest-admitted active request (slot, request); optionally
+        excluding one slot (the one whose growth triggered the hunt)."""
+        cands = [(s, r) for s, r in active if s != exclude]
+        if not cands:
+            cands = [(s, r) for s, r in active]
+        if not cands:
+            return None
+        return max(cands, key=lambda sr: (sr[1].admitted_step, sr[0]))
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending and not self._ready

@@ -2,6 +2,9 @@
 over randomly generated workloads and architectures."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (LayerSpec, Workload, best_subproduct, d_imc,

@@ -208,3 +208,129 @@ def test_ops_moe_ffn():
     want = ref.grouped_mvm(want, wd)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# --- paged decode attention ----------------------------------------------------------
+
+def _paged_case(key, B, KV, dh, P, page, M, lens, dtype=jnp.float32):
+    """k/v pools in kernel layout (KV, P, page, dh) + table + lengths."""
+    ks = jax.random.split(key, 3)
+    kp = rand(ks[0], (KV, P, page, dh), dtype)
+    vp = rand(ks[1], (KV, P, page, dh), dtype)
+    pt = np.zeros((B, M), np.int32)
+    free = iter(range(1, P))
+    for b in range(B):
+        for i in range(-(-int(lens[b]) // page)):
+            pt[b, i] = next(free)
+    return kp, vp, jnp.asarray(pt), jnp.asarray(np.asarray(lens, np.int32))
+
+
+def _to_model_layout(pages):
+    return jnp.transpose(pages, (1, 2, 0, 3))      # (P, page, KV, dh)
+
+
+@pytest.mark.parametrize("B,KV,G,dh,P,page,M,lens", [
+    (4, 2, 4, 16, 12, 8, 4, [5, 8, 17, 0]),       # partial/full/multi/empty
+    (2, 4, 1, 32, 6, 16, 2, [16, 31]),
+    (3, 1, 6, 64, 16, 128, 4, [1, 512, 129]),     # MHA-style big pages
+])
+def test_paged_decode_attention_oracle(B, KV, G, dh, P, page, M, lens):
+    H = KV * G
+    q = rand(jax.random.PRNGKey(0), (B, H, dh), jnp.float32)
+    kp, vp, pt, lengths = _paged_case(jax.random.PRNGKey(1), B, KV, dh, P,
+                                      page, M, lens)
+    got = ops.paged_decode_attention(q, kp, vp, pt, lengths,
+                                     impl="interpret")
+    want = ref.paged_decode_attention(q, _to_model_layout(kp),
+                                      _to_model_layout(vp), pt, lengths)
+    # acceptance bar: paged kernel matches the jnp oracle to <= 1e-5
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() <= 1e-5
+
+
+def test_paged_matches_dense_decode_attention():
+    """Gathering pages == attending over the contiguous cache."""
+    B, KV, G, dh, P, page, M = 2, 2, 2, 32, 9, 8, 4
+    H = KV * G
+    lens = [19, 26]
+    q = rand(jax.random.PRNGKey(2), (B, H, dh), jnp.float32)
+    kp, vp, pt, lengths = _paged_case(jax.random.PRNGKey(3), B, KV, dh, P,
+                                      page, M, lens)
+    k = _to_model_layout(kp)[pt].reshape(B, M * page, KV, dh)
+    v = _to_model_layout(vp)[pt].reshape(B, M * page, KV, dh)
+    got = ops.paged_decode_attention(q, kp, vp, pt, lengths,
+                                     impl="interpret")
+    want = ref.decode_attention(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_paged_attention_ignores_foreign_pages():
+    """No cross-request leakage: trashing every page sequence 0 does NOT
+    own must leave sequence 0's output untouched."""
+    B, KV, G, dh, P, page, M = 2, 2, 2, 16, 10, 8, 4
+    H = KV * G
+    q = rand(jax.random.PRNGKey(4), (B, H, dh), jnp.float32)
+    kp, vp, pt, lengths = _paged_case(jax.random.PRNGKey(5), B, KV, dh, P,
+                                      page, M, [13, 24])
+    base = np.asarray(ops.paged_decode_attention(q, kp, vp, pt, lengths,
+                                                 impl="ref"))
+    owned0 = set(np.asarray(pt)[0, :2].tolist())
+    foreign = [p for p in range(P) if p not in owned0]
+    kp2 = kp.at[:, jnp.asarray(foreign)].set(99.0)
+    vp2 = vp.at[:, jnp.asarray(foreign)].set(-99.0)
+    poked = np.asarray(ops.paged_decode_attention(q, kp2, vp2, pt, lengths,
+                                                  impl="ref"))
+    np.testing.assert_array_equal(base[0], poked[0])
+    assert np.abs(base[1] - poked[1]).max() > 1.0   # seq 1 did change
+
+
+# --- packed canvas fused epilogue ----------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("activation", ["none", "relu", "silu", "gelu"])
+def test_packed_canvas_epilogue(dtype, activation):
+    R, C, B = 256, 384, 128
+    coords = [(0, 0), (1, 1), (0, 2), (1, 2)]
+    x, wb, meta, wd = _blocks_case(jax.random.PRNGKey(11), R, C, B, dtype,
+                                   coords)
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    bias = rand(ks[0], (C,), dtype)
+    res = rand(ks[1], (B, C), dtype)
+    base = ref.packed_canvas(x, wd).astype(jnp.float32)
+    want = _pc_act(activation)(base + bias.astype(jnp.float32)) \
+        + res.astype(jnp.float32)
+    got = ops.packed_canvas_matmul(x, wb, meta, impl="interpret", bias=bias,
+                                   residual=res, activation=activation)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want.astype(dtype), np.float32),
+                               **TOL[dtype])
+
+
+def _pc_act(name):
+    from repro.kernels.packed_canvas import ACTIVATIONS
+    return ACTIVATIONS[name]
+
+
+def test_packed_canvas_epilogue_partial():
+    """bias-only and residual-only epilogues (others default to identity)."""
+    R, C, B = 256, 256, 128
+    x, wb, meta, wd = _blocks_case(jax.random.PRNGKey(13), R, C, B,
+                                   jnp.float32, [(0, 0), (1, 1), (1, 0)])
+    base = np.asarray(ref.packed_canvas(x, wd))
+    bias = rand(jax.random.PRNGKey(14), (C,), jnp.float32)
+    got_b = ops.packed_canvas_matmul(x, wb, meta, impl="interpret",
+                                     bias=bias)
+    np.testing.assert_allclose(np.asarray(got_b), base + np.asarray(bias),
+                               **TOL[jnp.float32])
+    res = rand(jax.random.PRNGKey(15), (B, C), jnp.float32)
+    got_r = ops.packed_canvas_matmul(x, wb, meta, impl="interpret",
+                                     residual=res)
+    np.testing.assert_allclose(np.asarray(got_r), base + np.asarray(res),
+                               **TOL[jnp.float32])
+
+
+def test_build_block_meta_memoized():
+    blocks = np.asarray([[0, 0], [1, 0], [1, 1]], np.int64)
+    m1, o1 = build_block_meta(blocks)
+    m2, o2 = build_block_meta(np.array(blocks))     # distinct array, same key
+    assert m1 is m2 and o1 is o2
