@@ -11,9 +11,11 @@ from repro.core import (d_imc, flattened_plan, mlperf_tiny_suite, pack,
                         plan_cost, stacked_plan)
 
 
-def run() -> list[dict]:
+def run(workloads: tuple[str, ...] | None = None) -> list[dict]:
     rows = []
     for wl in mlperf_tiny_suite():
+        if workloads is not None and wl.name not in workloads:
+            continue
         budget = pack(wl, d_imc(1, 1), bounded=False).min_D_m
         arch = d_imc(1, budget)
         plans = {

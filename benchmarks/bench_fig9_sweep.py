@@ -31,9 +31,13 @@ def _fit_dh(wl, mk) -> int:
     return 1024
 
 
-def run() -> list[dict]:
+def run(workloads: tuple[str, ...] | None = None) -> list[dict]:
+    """Full sweep by default; ``workloads`` selects a subset (the golden
+    regression test pins the fast workloads without the 30s mobilenet)."""
     rows = []
     for wl in mlperf_tiny_suite():
+        if workloads is not None and wl.name not in workloads:
+            continue
         for mk, mkname in ((d_imc, "D-IMC"), (a_imc, "A-IMC")):
             # blue trace: D_h sweep at D_m=1
             for dh in (1, 2, 4):

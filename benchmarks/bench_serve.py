@@ -13,8 +13,16 @@ and the structural serving metrics are compared:
     dense batch x max_len allocation
   * p50/p95 request latency in engine steps
 
+The ``multi_tenant`` scenario serves three model families from ONE
+shared HBM pool (runtime.ModelPool residency packing) on the same
+interleaved trace under both activation policies; the reload-aware
+scheduler must beat naive round-robin swapping on decode tokens/step AND
+total weight-reload bytes.
+
 A final row checks the paged decode attention kernel (interpret mode)
 against the jnp oracle.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --scenario multi_tenant
 """
 
 from __future__ import annotations
@@ -28,7 +36,9 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.models import get_model
-from repro.runtime import (Engine, EngineConfig, poisson_trace, run_static,
+from repro.runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
+                           PoolEngineConfig, PooledEngine,
+                           multi_tenant_trace, poisson_trace, run_static,
                            vlm_extras_fn)
 
 # one family per cache shape: dense GQA, M-RoPE vlm backbone, constant-
@@ -82,7 +92,7 @@ def _paged_attention_oracle_err() -> float:
     return float(np.abs(np.asarray(got) - np.asarray(want)).max())
 
 
-def run() -> list[dict]:
+def run_engine_vs_static() -> list[dict]:
     rows = []
     for arch in ARCHS:
         cfg = get_config(arch).reduced()
@@ -111,17 +121,118 @@ def run() -> list[dict]:
     return rows
 
 
+# --- multi-tenant pool scenario -------------------------------------------------
+
+# one pool over three cache shapes; dense carries 2x the traffic
+ZOO = (("codeqwen1.5-7b", 2.0), ("qwen2-vl-7b", 1.0), ("rwkv6-7b", 1.0))
+POOL_CFG = PoolConfig(hbm_budget_bytes=960 << 10, slab_frac=0.5,
+                      reload_bytes_per_step=8 << 10, hysteresis_steps=32)
+POOL_N_REQUESTS = 40
+
+
+def _pool_row(rep, plan) -> dict:
+    s = rep.summary()
+    return {
+        "name": f"serve_pool_{rep.policy}",
+        "tokens_per_step": s["tokens_per_step"],
+        "reload_bytes": s["reload_bytes"],
+        "reload_events": s["reload_events"],
+        "stall_steps": s["stall_steps"],
+        "evictions": s["evictions"],
+        "preemptions": s["preemptions"],
+        "wasted_slot_fraction": s["wasted_slot_fraction"],
+        "new_tokens": s["new_tokens"],
+        "model_tokens": s["model_tokens"],
+        "residency": {m: v["residency"]
+                      for m, v in plan.summary()["models"].items()},
+    }
+
+
+def run_multi_tenant() -> list[dict]:
+    cfgs, params, tenants = {}, {}, []
+    for arch, share in ZOO:
+        cfg = get_config(arch).reduced()
+        cfgs[arch] = cfg
+        params[arch] = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
+        tenants.append(dict(
+            model_id=arch, vocab_size=cfg.vocab_size, share=share,
+            extras_fn=vlm_extras_fn(cfg) if cfg.family == "vlm" else None))
+    trace = multi_tenant_trace(
+        tenants, POOL_N_REQUESTS, mean_interarrival=MEAN_INTERARRIVAL,
+        prompt_lens=(8, 16), gen_lens=(4, 8, 24), seed=3)
+
+    rows, reps = [], {}
+    for policy in ("reload_aware", "round_robin"):
+        pool = ModelPool(POOL_CFG)
+        for arch, share in ZOO:
+            pool.register(arch, cfgs[arch], demand=share)
+        plan = pool.pack()
+        ecfg = PoolEngineConfig(
+            num_slots=SLOTS, page_size=8, num_pages=97,
+            max_pages_per_seq=16, prefill_bucket=8,
+            policy=policy, rr_quantum=16)
+        rep = PooledEngine(pool, params, ecfg).run(copy.deepcopy(trace))
+        reps[policy] = rep
+        rows.append(_pool_row(rep, plan))
+    ra, rr = reps["reload_aware"], reps["round_robin"]
+    rows.append({
+        "name": "serve_pool_speedup",
+        "families": len(ZOO),
+        "tokens_per_step_ratio": round(
+            ra.tokens_per_step / rr.tokens_per_step, 3),
+        "reload_bytes_saved": rr.reload_bytes - ra.reload_bytes,
+        "same_tokens": ra.new_tokens == rr.new_tokens,
+    })
+    return rows
+
+
+def run(scenario: str = "all") -> list[dict]:
+    rows = []
+    if scenario in ("all", "engine_vs_static"):
+        rows += run_engine_vs_static()
+    if scenario in ("all", "multi_tenant"):
+        rows += run_multi_tenant()
+    return rows
+
+
 def check(rows) -> None:
-    speedups = [r for r in rows if r["name"].endswith("_speedup")]
-    assert len(speedups) == len(ARCHS)
-    for r in speedups:
-        assert r["tokens_per_step_ratio"] >= 2.0, \
-            f"{r['name']}: engine only {r['tokens_per_step_ratio']}x " \
-            "over static on decode tokens/step"
-        if r["paged"]:
-            assert r["kv_bytes_ratio"] > 1.0, \
-                f"{r['name']}: paged cache not smaller than dense " \
-                f"(ratio {r['kv_bytes_ratio']})"
-    (err,) = [r["max_abs_err"] for r in rows
-              if r["name"] == "paged_attention_oracle"]
-    assert err <= 1e-5, f"paged attention vs oracle: {err}"
+    speedups = [r for r in rows if r["name"].endswith("_speedup")
+                and not r["name"].startswith("serve_pool")]
+    if speedups:                        # engine_vs_static scenario present
+        assert len(speedups) == len(ARCHS)
+        for r in speedups:
+            assert r["tokens_per_step_ratio"] >= 2.0, \
+                f"{r['name']}: engine only {r['tokens_per_step_ratio']}x " \
+                "over static on decode tokens/step"
+            if r["paged"]:
+                assert r["kv_bytes_ratio"] > 1.0, \
+                    f"{r['name']}: paged cache not smaller than dense " \
+                    f"(ratio {r['kv_bytes_ratio']})"
+        (err,) = [r["max_abs_err"] for r in rows
+                  if r["name"] == "paged_attention_oracle"]
+        assert err <= 1e-5, f"paged attention vs oracle: {err}"
+    pool = [r for r in rows if r["name"] == "serve_pool_speedup"]
+    if pool:                            # multi_tenant scenario present
+        (r,) = pool
+        assert r["families"] >= 3, "pool must serve >= 3 model families"
+        assert r["same_tokens"], "policies must generate the same tokens"
+        assert r["tokens_per_step_ratio"] > 1.0, \
+            f"reload-aware not ahead on tokens/step " \
+            f"(ratio {r['tokens_per_step_ratio']})"
+        assert r["reload_bytes_saved"] > 0, \
+            "reload-aware must move strictly fewer weight-reload bytes"
+
+
+if __name__ == "__main__":
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", default="all",
+                    choices=("all", "engine_vs_static", "multi_tenant"))
+    args = ap.parse_args()
+    rows = run(args.scenario)
+    for r in rows:
+        print(json.dumps(r))
+    check(rows)
+    print("ok")

@@ -1,4 +1,4 @@
-"""Serving driver: continuous-batching engine (default) or static batch.
+"""Serving driver: continuous-batching engine, static batch, or model pool.
 
 ``--mode engine`` runs the runtime.Engine — admission queue, per-slot
 request state, paged KV cache, slot recycling — against a mixed-length
@@ -6,7 +6,12 @@ Poisson arrival trace. ``--mode static`` is the seed lockstep path kept
 as the measurable baseline: one batch prefills together, decodes in
 unison, and holds a dense cache_len x batch KV cache. ``--mode auto``
 picks the engine when the model family has a backend (dense / vlm / ssm)
-and falls back to static otherwise.
+and falls back to static otherwise. ``--mode pool`` serves a whole model
+zoo (``--zoo arch[:share],..``) from one shared HBM budget: the
+runtime.ModelPool bin-packs each model's weights as resident / streamed /
+evicted and the PooledEngine charges weight reloads when cold models
+activate (``--policy reload_aware`` or the naive ``round_robin`` swap
+baseline).
 
 Runs reduced configs end-to-end on CPU (1x1 mesh); the pod-mesh serving
 cells are proven by the dry-run.
@@ -27,8 +32,9 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import get_model
-from ..runtime import (ENGINE_FAMILIES, Engine, EngineConfig, poisson_trace,
-                       vlm_extras_fn)
+from ..runtime import (ENGINE_FAMILIES, Engine, EngineConfig, ModelPool,
+                       PoolConfig, PoolEngineConfig, PooledEngine,
+                       multi_tenant_trace, poisson_trace, vlm_extras_fn)
 from . import sharding as sh
 from .mesh import make_host_mesh, make_production_mesh
 from .steps import make_prefill_step, make_serve_step
@@ -109,13 +115,96 @@ def run_engine(cfg, params, args):
     return 0
 
 
+def parse_zoo(spec: str) -> list[tuple[str, float]]:
+    """``arch[:share],arch[:share],..`` -> [(arch_id, traffic share)]."""
+    out = []
+    for item in spec.split(","):
+        arch, _, share = item.strip().partition(":")
+        out.append((arch, float(share) if share else 1.0))
+    return out
+
+
+def run_pool(args):
+    """Multi-tenant serving: a model zoo bin-packed into one HBM pool."""
+    zoo = parse_zoo(args.zoo)
+    cfgs, params, tenants = {}, {}, []
+    for arch, share in zoo:
+        cfg = get_config(arch).reduced() if not args.full \
+            else get_config(arch)
+        cfgs[arch] = cfg
+        params[arch] = get_model(cfg).init_params(
+            cfg, jax.random.PRNGKey(args.seed))
+        tenants.append(dict(
+            model_id=arch, vocab_size=cfg.vocab_size, share=share,
+            extras_fn=vlm_extras_fn(cfg) if cfg.family == "vlm" else None))
+
+    from ..runtime.model_pool import model_weight_bytes
+    weights = {a: model_weight_bytes(c) for a, c in cfgs.items()}
+    # auto budget: pin ~62% of the zoo, slab big enough for the largest
+    # working set (so every registered model stays servable)
+    s = args.slab_frac
+    if not 0.0 < s < 1.0:
+        raise SystemExit("--slab-frac must be in (0, 1)")
+    budget = args.hbm_budget_kib * 1024 or 1024 + int(max(
+        0.62 * sum(weights.values()) / (1.0 - s),
+        max(weights.values()) / s))
+    pcfg = PoolConfig(hbm_budget_bytes=budget, slab_frac=s,
+                      reload_bytes_per_step=args.reload_kib_per_step * 1024,
+                      hysteresis_steps=args.hysteresis)
+    pool = ModelPool(pcfg)
+    for arch, share in zoo:
+        pool.register(arch, cfgs[arch], demand=share)
+    plan = pool.pack()
+    print(json.dumps(plan.summary(), indent=1))
+
+    page = max(8, args.prompt_len // 4)
+    max_len = args.prompt_len + args.gen
+    pages_per_seq = -(-max_len // page) + 1
+    ecfg = PoolEngineConfig(
+        num_slots=args.batch, page_size=page,
+        num_pages=1 + pages_per_seq * args.batch * 2,
+        max_pages_per_seq=pages_per_seq, prefill_bucket=page,
+        greedy=False, temperature=args.temperature, seed=args.seed,
+        policy=args.policy, rr_quantum=args.rr_quantum)
+    trace = multi_tenant_trace(
+        tenants, args.requests, mean_interarrival=args.mean_interarrival,
+        prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+        gen_lens=(max(args.gen // 4, 1), max(args.gen // 2, 1), args.gen),
+        seed=args.seed)
+    rep = PooledEngine(pool, params, ecfg).run(trace)
+    print(f"zoo={args.zoo} mode=pool policy={args.policy} "
+          f"slots={args.batch} requests={args.requests}")
+    print(json.dumps(rep.summary(), indent=1))
+    done = [r for r in rep.completed if not r.truncated]
+    for r in done[:3]:
+        print(f"  req{r.rid} [{r.model_id}]: {r.generated}")
+    assert done, "no requests completed"
+    print("ok")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="codeqwen1.5-7b")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--mesh", default="host", choices=("host", "pod"))
     ap.add_argument("--mode", default="auto",
-                    choices=("auto", "engine", "static"))
+                    choices=("auto", "engine", "static", "pool"))
+    ap.add_argument("--zoo",
+                    default="codeqwen1.5-7b:2,qwen2-vl-7b:1,rwkv6-7b:1",
+                    help="pool mode model-zoo spec: arch[:share],..")
+    ap.add_argument("--policy", default="reload_aware",
+                    choices=("reload_aware", "round_robin"))
+    ap.add_argument("--hbm-budget-kib", type=int, default=0,
+                    help="pool HBM budget (0 -> auto-size from the zoo)")
+    ap.add_argument("--slab-frac", type=float, default=0.5,
+                    help="pool budget fraction reserved for weight swaps")
+    ap.add_argument("--reload-kib-per-step", type=int, default=8,
+                    help="weight-reload bandwidth in KiB per engine step")
+    ap.add_argument("--hysteresis", type=int, default=32,
+                    help="min steps a model stays hot before eviction")
+    ap.add_argument("--rr-quantum", type=int, default=16,
+                    help="round_robin steps per tenant turn")
     ap.add_argument("--batch", type=int, default=4,
                     help="static batch size / engine slot count")
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -133,6 +222,9 @@ def main(argv=None):
 
     mesh = (make_production_mesh if args.mesh == "pod"
             else make_host_mesh)()
+    if args.mode == "pool":
+        with mesh:
+            return run_pool(args)
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()

@@ -1,16 +1,25 @@
 """Serving/runtime subsystems: continuous-batching engine, KV pager,
-arrival-trace scheduler, and the elastic training supervisor."""
+arrival-trace scheduler, multi-tenant model pool, and the elastic
+training supervisor."""
 
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
+                     PoolEngineConfig, PooledEngine, PooledReport,
                      make_sampler, run_static, vlm_extras_fn)
 from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
                               TrainingSupervisor)
 from .kv_pager import TRASH_PAGE, PageAllocator, PagerConfig
-from .scheduler import Request, Scheduler, poisson_trace
+from .model_pool import (ModelEntry, ModelPool, PoolConfig, PoolError,
+                         PoolPlan, model_weight_bytes)
+from .scheduler import (MultiQueueScheduler, Request, Scheduler,
+                        multi_tenant_trace, poisson_trace)
 
 __all__ = ["Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
+           "PooledEngine", "PoolEngineConfig", "PooledReport",
            "run_static", "make_sampler", "vlm_extras_fn",
            "PageAllocator", "PagerConfig", "TRASH_PAGE",
-           "Request", "Scheduler", "poisson_trace",
+           "ModelPool", "ModelEntry", "PoolConfig", "PoolError", "PoolPlan",
+           "model_weight_bytes",
+           "Request", "Scheduler", "MultiQueueScheduler",
+           "poisson_trace", "multi_tenant_trace",
            "ElasticConfig", "RunReport", "StepTimeout",
            "TrainingSupervisor"]

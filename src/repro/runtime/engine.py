@@ -34,7 +34,8 @@ import numpy as np
 
 from ..models import get_model
 from .kv_pager import PageAllocator, PagerConfig, TRASH_PAGE
-from .scheduler import Request, Scheduler
+from .model_pool import ModelPool
+from .scheduler import MultiQueueScheduler, Request, Scheduler
 
 
 @dataclasses.dataclass(frozen=True)
@@ -337,12 +338,9 @@ class Engine:
                     assert len(ctx) >= 1, "empty prompts are not admissible"
                     if paged:
                         n_pages = pgr.pages_for(len(ctx))
-                        # cache at completion holds prompt + max_new - 1
-                        # tokens (the final sampled token is never written)
-                        final_ctx = len(req.prompt) + req.max_new_tokens - 1
-                        if (final_ctx > pgr.max_context
-                                or pgr.pages_for(final_ctx) > e.num_pages - 1
-                                or n_pages > e.num_pages - 1):
+                        if not pgr.can_ever_fit(len(req.prompt),
+                                                req.max_new_tokens,
+                                                len(ctx), e.num_pages):
                             sched.pop_ready()   # can never fit: fail fast
                             req.truncated = True
                             req.done_step = step
@@ -448,6 +446,356 @@ class Engine:
 
 def _state_bytes(state) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(state))
+
+
+# --- multi-tenant pooled engine ------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolEngineConfig(EngineConfig):
+    """EngineConfig plus the multi-tenant activation policy.
+
+    ``reload_aware`` (the paper-derived control loop): all hot models
+    share the slot batch, cold models activate only when the slab has
+    room or a hysteresis-expired idle victim exists, eviction is least
+    value-per-byte first. ``round_robin`` is the naive baseline: one
+    swappable model hot at a time, served in fixed cyclic quanta, with
+    every switch evicting the previous occupant (and preempting its
+    in-flight slots) regardless of reload cost.
+    """
+    policy: str = "reload_aware"       # | "round_robin"
+    rr_quantum: int = 16               # steps per round-robin turn
+
+    def __post_init__(self):
+        super().__post_init__()
+        assert self.policy in ("reload_aware", "round_robin")
+        assert self.rr_quantum >= 1
+
+
+@dataclasses.dataclass
+class PooledReport(EngineReport):
+    """EngineReport plus weight-reload accounting. Reload stalls are
+    serial with compute (§2.2), so they join the throughput denominator:
+    tokens/step counts stalled steps as steps that produced nothing."""
+    policy: str = ""
+    stall_steps: int = 0
+    reload_bytes: int = 0
+    reload_events: int = 0
+    evictions: int = 0
+    deferred_activations: int = 0
+    model_tokens: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.new_tokens / max(self.decode_steps + self.stall_steps, 1)
+
+    def summary(self) -> dict:
+        s = super().summary()
+        s.update({
+            "policy": self.policy,
+            "stall_steps": self.stall_steps,
+            "reload_bytes": self.reload_bytes,
+            "reload_events": self.reload_events,
+            "evictions": self.evictions,
+            "deferred_activations": self.deferred_activations,
+            "model_tokens": dict(sorted(self.model_tokens.items())),
+        })
+        return s
+
+
+class PooledEngine:
+    """Continuous batching for a model zoo sharing one accelerator pool.
+
+    Per-model backends (one jitted prefill/decode pair each) share a
+    single logical page pool: the host-side PageAllocator hands out page
+    ids globally, so a burst on one tenant consumes cache capacity that
+    other tenants then compete for — and one slot array spans all
+    tenants, so batch width is a shared resource too.
+
+    One engine step advances EVERY hot tenant's slots (stationary
+    weights of all hot models sit in HBM at once — the packed-canvas
+    premise at pool scale — so their decodes share the step the way
+    packed layers share the fabric); the step still spans at most
+    ``num_slots`` tokens, so tokens/step is bounded by the slot width
+    for every policy. Weight reloads are serial with compute, charged
+    as stall steps that produce nothing. The naive round-robin baseline
+    keeps a single swappable tenant hot at a time, so it cannot use the
+    shared step — that utilization gap, plus its per-switch reloads, is
+    exactly what the reload-aware policy is measured against.
+    """
+
+    def __init__(self, pool: ModelPool, params: dict,
+                 ecfg: PoolEngineConfig | None = None):
+        if pool.plan is None:
+            pool.pack()
+        self.pool = pool
+        self.ecfg = ecfg or PoolEngineConfig()
+        self.backends = {}
+        for e in pool.plan.entries:
+            backend_cls = ENGINE_FAMILIES.get(e.cfg.family)
+            if backend_cls is None:
+                raise ValueError(
+                    f"family {e.cfg.family!r} has no engine backend "
+                    f"(supported: {sorted(ENGINE_FAMILIES)})")
+            self.backends[e.model_id] = backend_cls(
+                e.cfg, params[e.model_id], self.ecfg)
+        self.rng = np.random.default_rng(self.ecfg.seed)
+        self._sample = make_sampler(self.rng, self.ecfg.greedy,
+                                    self.ecfg.temperature)
+
+    # -- main loop ---------------------------------------------------------
+
+    def run(self, requests: list[Request]) -> PooledReport:
+        e, pgr, pool = self.ecfg, self.ecfg.pager, self.pool
+        B, M, page = e.num_slots, pgr.max_pages_per_seq, pgr.page_size
+        order = list(pool.model_ids)
+        sched = MultiQueueScheduler(requests)
+        alloc = PageAllocator(e.num_pages)
+        pool.reset_runtime()
+
+        slots: list[Request | None] = [None] * B
+        page_table = np.zeros((B, M), np.int32)
+        lengths = np.zeros((B,), np.int32)
+        pending = np.zeros((B,), np.int32)
+
+        paged_bytes = [pgr.page_bytes(self.backends[m].cfg)
+                       for m in order if self.backends[m].paged]
+        rep = PooledReport(
+            name=f"pool/{e.policy}", num_slots=B, policy=e.policy,
+            page_bytes=max(paged_bytes, default=0),
+            cache_bytes_alloc=sum(
+                pgr.page_bytes(b.cfg) * (e.num_pages - 1) if b.paged
+                else _state_bytes(b.state) for b in self.backends.values()),
+            model_tokens={m: 0 for m in order})
+        t_run = time.monotonic()
+        step = 0
+        rr_current: str | None = None
+        rr_left = 0
+
+        def clear_slot(s: int) -> None:
+            req = slots[s]
+            slots[s] = None
+            page_table[s, :] = TRASH_PAGE
+            lengths[s] = 0
+            pending[s] = 0
+            alloc.free_owner(req.rid)   # no-op for non-paged tenants
+            self.backends[req.model_id].release_slot(s)
+
+        def finish(s: int) -> None:
+            slots[s].done_step = step
+            rep.completed.append(slots[s])
+            clear_slot(s)
+
+        def preempt(s: int) -> None:
+            req = slots[s]
+            clear_slot(s)
+            sched.requeue(req)
+
+        def reject(req: Request) -> None:
+            req.truncated = True
+            req.done_step = step
+            rep.completed.append(req)
+
+        def active_models() -> list[str]:
+            got = {r.model_id for r in slots if r is not None}
+            return [m for m in order if m in got]
+
+        while True:
+            sched.release_arrivals(step)
+
+            # -- drain queues no backend can ever serve ------------------
+            for m in sched.ready_models():
+                if m not in self.backends or not pool.servable(m):
+                    while (req := sched.peek_ready([m])) is not None:
+                        reject(sched.pop_ready(req))
+
+            # -- activation policy ---------------------------------------
+            if e.policy == "round_robin":
+                ready = sched.ready_models()
+                switch = (rr_current is None or rr_left <= 0
+                          or (rr_current not in active_models()
+                              and sched.ready_count(rr_current) == 0))
+                if switch and ready:
+                    start = ((order.index(rr_current) + 1) % len(order)
+                             if rr_current is not None else 0)
+                    nxt = next((order[(start + i) % len(order)]
+                                for i in range(len(order))
+                                if order[(start + i) % len(order)] in ready),
+                               None)
+                    if nxt is not None and nxt != rr_current:
+                        # naive swap: drop everything, load the next model
+                        for s in range(B):
+                            if slots[s] is not None:
+                                preempt(s)
+                        for m in list(pool.hot_models()):
+                            pool.evict(m)
+                        stall, _ = pool.try_activate(nxt, step)
+                        rep.stall_steps += stall
+                        step += stall
+                        rr_current, rr_left = nxt, e.rr_quantum
+                    elif nxt is not None:
+                        rr_left = e.rr_quantum
+                serve = [rr_current] if rr_current is not None else []
+            else:
+                cold = [m for m in sched.ready_models()
+                        if not pool.is_hot(m)]
+                if cold:
+                    # highest queued-demand per reload byte activates
+                    # first; if it must wait (hysteresis), a smaller cold
+                    # tenant that fits the free slab may still go
+                    cold.sort(key=lambda m: (
+                        -sched.pending_demand(m)
+                        / max(pool.plan.entry(m).reload_bytes, 1), m))
+                    protected = frozenset(
+                        m for m in pool.hot_models()
+                        if m in active_models()
+                        or sched.ready_count(m) > 0)
+                    for m in cold:
+                        res = pool.try_activate(m, step, protected)
+                        if res is not None:
+                            stall, _ = res
+                            rep.stall_steps += stall
+                            step += stall
+                            break   # one reload per step: stalls serialize
+                serve = pool.hot_models()
+
+            # -- admission into free slots -------------------------------
+            admitting = True
+            for s in range(B):
+                while admitting and slots[s] is None:
+                    req = sched.peek_ready(serve)
+                    if req is None:
+                        admitting = False
+                        break
+                    backend = self.backends[req.model_id]
+                    ctx = req.context_tokens
+                    assert len(ctx) >= 1, "empty prompts are not admissible"
+                    if backend.paged:
+                        n_pages = pgr.pages_for(len(ctx))
+                        if not pgr.can_ever_fit(len(req.prompt),
+                                                req.max_new_tokens,
+                                                len(ctx), e.num_pages):
+                            reject(sched.pop_ready(req))
+                            continue
+                        if not alloc.can_alloc(n_pages):
+                            admitting = False   # FCFS: wait for free pages
+                            break
+                        sched.pop_ready(req)
+                        pages = alloc.alloc(req.rid, n_pages)
+                        page_table[s, :] = TRASH_PAGE
+                        page_table[s, :len(pages)] = pages
+                        logits = backend.prefill(ctx, req.extras, pages)
+                    else:
+                        sched.pop_ready(req)
+                        logits = backend.prefill(ctx, req.extras, s)
+                    rep.prefill_calls += 1
+                    req.prefills += 1
+                    req.admitted_step = step
+                    slots[s] = req
+                    lengths[s] = len(ctx)
+                    if req.generated:   # re-admission after preemption
+                        pending[s] = req.generated[-1]
+                    else:
+                        tok = self._sample(logits)
+                        req.generated.append(tok)
+                        pending[s] = tok
+                        rep.model_tokens[req.model_id] += 1
+                        if req.done:
+                            finish(s)
+
+            # -- one fused decode step over every hot tenant's slots -----
+            # Weights of all hot tenants sit in HBM simultaneously (the
+            # packed-canvas premise at pool scale), so their slots advance
+            # in the same engine step; the naive round-robin baseline only
+            # ever holds one swappable tenant hot, so it cannot use this
+            # concurrency — that utilization gap is the point.
+            if active_models():
+                # page growth / preemption for every paged tenant's slot
+                for s in range(B):
+                    if slots[s] is None:
+                        continue
+                    if not self.backends[slots[s].model_id].paged:
+                        continue
+                    if lengths[s] % page != 0:
+                        continue
+                    pi = lengths[s] // page
+                    if pi >= M:
+                        slots[s].truncated = True
+                        finish(s)
+                        continue
+                    while not alloc.can_alloc(1):
+                        # only page-owning slots are useful victims —
+                        # preempting a recurrent tenant frees no pages
+                        paged_active = [
+                            (v, slots[v]) for v in range(B)
+                            if slots[v] is not None
+                            and self.backends[slots[v].model_id].paged]
+                        victim = Scheduler.pick_victim(paged_active,
+                                                       exclude=s)
+                        if victim is None or victim[0] == s:
+                            preempt(s)
+                            break
+                        preempt(victim[0])
+                    if slots[s] is None:
+                        continue
+                    new = alloc.alloc(slots[s].rid, 1)
+                    page_table[s, pi] = new[0]
+
+                served = 0
+                for m in active_models():
+                    backend = self.backends[m]
+                    m_slots = [s for s in range(B)
+                               if slots[s] is not None
+                               and slots[s].model_id == m]
+                    if not m_slots:
+                        continue
+                    act = np.zeros((B,), bool)
+                    act[m_slots] = True
+                    toks = np.where(act, pending, 0).astype(np.int32)
+                    t0 = time.monotonic()
+                    logits = backend.decode(toks, page_table, lengths, act)
+                    rep.decode_wall_s += time.monotonic() - t0
+                    lengths[m_slots] += 1
+                    served += len(m_slots)
+                    for s in m_slots:
+                        req = slots[s]
+                        tok = self._sample(logits[s])
+                        req.generated.append(tok)
+                        pending[s] = tok
+                        rep.model_tokens[m] += 1
+                        if req.done:
+                            finish(s)
+                if served:
+                    rep.decode_steps += 1
+                    rep.slot_steps += B
+                    rep.useful_slot_steps += served
+                rep.peak_live_pages = max(rep.peak_live_pages,
+                                          alloc.live_count)
+            elif not sched.exhausted:
+                nxt = sched.next_arrival()
+                if nxt is not None and nxt > step \
+                        and not sched.ready_models():
+                    step = nxt          # idle: fast-forward to next arrival
+                    continue
+                # ready work exists but is blocked (deferred activation /
+                # page wait): let time pass so hysteresis can expire
+            else:
+                break
+
+            step += 1
+            rr_left -= 1
+            if step > e.max_steps:
+                raise RuntimeError("pooled engine exceeded max_steps")
+
+        alloc.check()
+        assert alloc.live_count == 0, "pages leaked past completion"
+        rep.preemptions = sched.preemptions
+        rep.reload_bytes = pool.reload_bytes_total
+        rep.reload_events = pool.reload_events
+        rep.evictions = pool.evictions
+        rep.deferred_activations = pool.deferred_activations
+        rep.wall_s = time.monotonic() - t_run
+        return rep
 
 
 # --- static lockstep baseline --------------------------------------------------

@@ -45,6 +45,17 @@ class PagerConfig:
         """Pages needed to hold ``tokens`` cache entries."""
         return -(-tokens // self.page_size)
 
+    def can_ever_fit(self, prompt_len: int, max_new_tokens: int,
+                     context_len: int, num_pages: int) -> bool:
+        """Admission feasibility shared by every engine: the cache at
+        completion holds prompt + max_new - 1 tokens (the final sampled
+        token is never written), and both that and the current context
+        must fit the table row and the pool."""
+        final_ctx = prompt_len + max_new_tokens - 1
+        return (final_ctx <= self.max_context
+                and self.pages_for(final_ctx) <= num_pages - 1
+                and self.pages_for(context_len) <= num_pages - 1)
+
     def page_bytes(self, cfg, dtype_bytes: int = 2) -> int:
         """HBM bytes one page holds across all layers, K and V."""
         return (2 * cfg.num_layers * self.page_size * cfg.num_kv_heads

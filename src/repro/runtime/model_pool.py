@@ -1,0 +1,313 @@
+"""Multi-tenant weight residency: pack a model zoo into one HBM pool.
+
+The paper's packing algorithm decides, offline, which weight tiles live in
+the IMC macros and which stream from DRAM. Serving several model families
+from one accelerator pool poses the same problem one level up — the HBM
+byte budget is the macro capacity, whole models are the layers, and the
+reload of a swapped-out model's weights is the DRAM weight-loading term of
+cost_model.py (energy per byte, latency serial with compute, §2.2).
+
+``ModelPool`` bin-packs the weight inventories (planner.residency) of N
+registered model configs into a shared budget:
+
+  * resident — every tensor pinned in HBM; activation is free;
+  * streamed — the high-value tensors pinned, the remainder fetched into
+    the swap slab on each activation (the §3.4 spill transplant: tensors
+    with the least compute reuse per byte lose the least from streaming);
+  * evicted  — nothing pinned; the full weight set reloads per activation.
+
+A fraction of the budget (``slab_frac``) is reserved as the *swap slab*
+that holds the working sets of whichever streamed/evicted models are
+currently hot. When the slab is full, eviction is least-value-per-byte
+first (the paper's fold-lowest-latency-first heuristic, demand-weighted),
+with hysteresis: a model activated fewer than ``hysteresis_steps`` engine
+steps ago is never evicted, so thrashing traces wait instead of
+ping-ponging weights.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..planner.residency import weight_inventory
+
+KiB = 1 << 10
+
+
+def model_weight_bytes(cfg, param_bytes: int = 2) -> int:
+    """Serving-copy weight footprint of one model (the quantity the pool
+    bin-packs; also what callers should use to size budgets)."""
+    return param_bytes * sum(t.params for t in weight_inventory(cfg))
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    """Byte budget and reload economics of the shared pool.
+
+    ``reload_bytes_per_step`` is the DRAM->HBM bandwidth expressed in
+    engine steps — reloads are serial with compute (§2.2), so activating a
+    cold model stalls the engine ``ceil(reload_bytes / bandwidth)`` steps.
+    """
+    hbm_budget_bytes: int
+    slab_frac: float = 0.35            # budget fraction reserved for swapping
+    reload_bytes_per_step: int = 32 * KiB
+    hysteresis_steps: int = 32
+    param_bytes: int = 2               # bf16 serving copies
+
+    def __post_init__(self):
+        assert self.hbm_budget_bytes >= 0
+        assert 0.0 <= self.slab_frac < 1.0
+        assert self.reload_bytes_per_step >= 1
+        assert self.hysteresis_steps >= 0
+
+    @property
+    def slab_bytes(self) -> int:
+        return int(self.hbm_budget_bytes * self.slab_frac)
+
+    @property
+    def pin_budget_bytes(self) -> int:
+        return self.hbm_budget_bytes - self.slab_bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelEntry:
+    """One registered model's residency verdict.
+
+    ``value_per_byte`` is the demand-weighted stationarity value of the
+    model's average weight byte: demand * (1 + MACs/param). The ``1 +``
+    floor makes a hot model's zero-MAC tensors (embeddings) outrank a cold
+    model's matmuls — every byte costs the same to reload, so demand alone
+    breaks reuse ties.
+    """
+    model_id: str
+    cfg: object
+    demand: float
+    weight_bytes: int
+    pinned_bytes: int
+    value_per_byte: float
+    fits_slab: bool                    # reload working set <= slab
+
+    @property
+    def reload_bytes(self) -> int:
+        """Bytes fetched into the slab on each cold activation."""
+        return self.weight_bytes - self.pinned_bytes
+
+    @property
+    def residency(self) -> str:
+        if self.pinned_bytes >= self.weight_bytes:
+            return "resident"
+        return "streamed" if self.pinned_bytes > 0 else "evicted"
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolPlan:
+    entries: tuple[ModelEntry, ...]
+    pcfg: PoolConfig
+
+    def entry(self, model_id: str) -> ModelEntry:
+        for e in self.entries:
+            if e.model_id == model_id:
+                return e
+        raise KeyError(f"unknown model {model_id!r}")
+
+    @property
+    def pinned_bytes(self) -> int:
+        return sum(e.pinned_bytes for e in self.entries)
+
+    def summary(self) -> dict:
+        return {
+            "budget_KiB": round(self.pcfg.hbm_budget_bytes / KiB, 1),
+            "pin_budget_KiB": round(self.pcfg.pin_budget_bytes / KiB, 1),
+            "slab_KiB": round(self.pcfg.slab_bytes / KiB, 1),
+            "pinned_KiB": round(self.pinned_bytes / KiB, 1),
+            "models": {e.model_id: {
+                "residency": e.residency,
+                "weight_KiB": round(e.weight_bytes / KiB, 1),
+                "pinned_KiB": round(e.pinned_bytes / KiB, 1),
+                "reload_KiB": round(e.reload_bytes / KiB, 1),
+                "value_per_byte": round(e.value_per_byte, 3),
+            } for e in self.entries},
+        }
+
+
+class PoolError(RuntimeError):
+    pass
+
+
+class ModelPool:
+    """Residency packing + runtime hot-set tracking for a model zoo.
+
+    Offline: ``register`` models, then ``pack`` pins tensors into the pin
+    budget in descending value-per-byte order (skip-and-continue greedy —
+    a tensor that doesn't fit is skipped, smaller ones may still pin).
+
+    Online: ``try_activate`` makes a model hot, evicting least-value-first
+    under hysteresis, and returns the reload stall; ``note_eviction``
+    bookkeeping is internal. Resident models are always hot and never
+    evicted.
+    """
+
+    def __init__(self, pcfg: PoolConfig):
+        self.pcfg = pcfg
+        self._specs: dict[str, tuple[object, float]] = {}
+        self.plan: PoolPlan | None = None
+        # runtime state
+        self._hot_since: dict[str, int] = {}   # non-resident hot models
+        self.slab_used = 0
+        self.reload_bytes_total = 0
+        self.reload_events = 0
+        self.deferred_activations = 0
+        self.evictions = 0
+
+    # -- registration / packing --------------------------------------------
+
+    def register(self, model_id: str, cfg, demand: float = 1.0) -> None:
+        if self.plan is not None:
+            raise PoolError("pool already packed")
+        if model_id in self._specs:
+            raise PoolError(f"model {model_id!r} registered twice")
+        assert demand > 0
+        self._specs[model_id] = (cfg, demand)
+
+    @property
+    def model_ids(self) -> tuple[str, ...]:
+        return tuple(sorted(self._specs))
+
+    def pack(self) -> PoolPlan:
+        """Greedy residency packing, highest value-per-byte tensor first."""
+        if not self._specs:
+            raise PoolError("no models registered")
+        pb = self.pcfg.param_bytes
+        candidates = []                # (score, model_id, name, bytes)
+        totals: dict[str, int] = {}
+        values: dict[str, float] = {}
+        for mid in self.model_ids:
+            cfg, demand = self._specs[mid]
+            inv = weight_inventory(cfg)
+            totals[mid] = model_weight_bytes(cfg, pb)
+            values[mid] = demand * sum(
+                t.params * (1.0 + t.reuse) for t in inv) \
+                / max(sum(t.params for t in inv), 1)
+            for t in inv:
+                candidates.append((demand * (1.0 + t.reuse), mid, t.name,
+                                   t.params * pb))
+        candidates.sort(key=lambda c: (-c[0], c[1], c[2]))
+
+        pinned: dict[str, int] = {mid: 0 for mid in self.model_ids}
+        left = self.pcfg.pin_budget_bytes
+        for _score, mid, _name, nbytes in candidates:
+            if nbytes <= left:
+                pinned[mid] += nbytes
+                left -= nbytes
+
+        entries = []
+        for mid in self.model_ids:
+            cfg, demand = self._specs[mid]
+            reload = totals[mid] - pinned[mid]
+            entries.append(ModelEntry(
+                model_id=mid, cfg=cfg, demand=demand,
+                weight_bytes=totals[mid], pinned_bytes=pinned[mid],
+                value_per_byte=values[mid],
+                fits_slab=reload <= self.pcfg.slab_bytes))
+        self.plan = PoolPlan(tuple(entries), self.pcfg)
+        return self.plan
+
+    # -- runtime hot-set ----------------------------------------------------
+
+    def reset_runtime(self) -> None:
+        """Forget the hot set and reload accounting (fresh serving run)."""
+        self._hot_since.clear()
+        self.slab_used = 0
+        self.reload_bytes_total = 0
+        self.reload_events = 0
+        self.deferred_activations = 0
+        self.evictions = 0
+
+    def _entry(self, model_id: str) -> ModelEntry:
+        if self.plan is None:
+            raise PoolError("pack() the pool before serving")
+        return self.plan.entry(model_id)
+
+    def is_hot(self, model_id: str) -> bool:
+        e = self._entry(model_id)
+        return e.residency == "resident" or model_id in self._hot_since
+
+    def hot_models(self) -> list[str]:
+        """Every model whose weights are currently in HBM."""
+        out = [e.model_id for e in self.plan.entries
+               if e.residency == "resident"]
+        out += [m for m in sorted(self._hot_since) if m not in out]
+        return out
+
+    def reload_stall_steps(self, reload_bytes: int) -> int:
+        return -(-reload_bytes // self.pcfg.reload_bytes_per_step)
+
+    def servable(self, model_id: str) -> bool:
+        return self._entry(model_id).fits_slab
+
+    def evictable(self, step: int, protected: frozenset[str] = frozenset()
+                  ) -> list[str]:
+        """Hot non-resident models that may be evicted now, least
+        value-per-byte first (the paper's spill order, demand-weighted)."""
+        out = []
+        for mid, since in self._hot_since.items():
+            if mid in protected:
+                continue
+            if step - since < self.pcfg.hysteresis_steps:
+                continue
+            out.append(mid)
+        out.sort(key=lambda m: (self._entry(m).value_per_byte, m))
+        return out
+
+    def evict(self, model_id: str) -> None:
+        since = self._hot_since.pop(model_id, None)
+        if since is not None:
+            self.slab_used -= self._entry(model_id).reload_bytes
+            self.evictions += 1
+
+    def try_activate(self, model_id: str, step: int,
+                     protected: frozenset[str] = frozenset(),
+                     ) -> tuple[int, list[str]] | None:
+        """Make ``model_id`` hot, evicting by policy if the slab is full.
+
+        Returns (stall_steps, evicted_model_ids), or None when activation
+        must wait (every eviction candidate is protected or inside its
+        hysteresis window). Already-hot models activate for free.
+        """
+        e = self._entry(model_id)
+        if self.is_hot(model_id):
+            return 0, []
+        if not e.fits_slab:
+            raise PoolError(
+                f"{model_id}: reload working set {e.reload_bytes}B exceeds "
+                f"the swap slab ({self.pcfg.slab_bytes}B)")
+        evicted: list[str] = []
+        need = self.slab_used + e.reload_bytes - self.pcfg.slab_bytes
+        if need > 0:                   # pick victims before touching state
+            freed = 0
+            for v in self.evictable(step, protected):
+                if freed >= need:
+                    break
+                evicted.append(v)
+                freed += self._entry(v).reload_bytes
+            if freed < need:
+                self.deferred_activations += 1
+                return None
+            for v in evicted:
+                self.evict(v)
+        self._hot_since[model_id] = step
+        self.slab_used += e.reload_bytes
+        if e.reload_bytes:
+            self.reload_bytes_total += e.reload_bytes
+            self.reload_events += 1
+        return self.reload_stall_steps(e.reload_bytes), evicted
+
+    def summary(self) -> dict:
+        return {
+            "reload_bytes_total": self.reload_bytes_total,
+            "reload_events": self.reload_events,
+            "evictions": self.evictions,
+            "deferred_activations": self.deferred_activations,
+            "slab_used_KiB": round(self.slab_used / KiB, 1),
+            "hot": self.hot_models(),
+        }

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Sequence
 
 import numpy as np
 
@@ -25,6 +26,7 @@ class Request:
     max_new_tokens: int
     arrival: int = 0                   # engine step at which it exists
     extras: dict | None = None         # e.g. vlm patch_embeds (P, D)
+    model_id: str = "default"          # pool routing tag (multi-tenant)
 
     # runtime (owned by the engine)
     generated: list[int] = dataclasses.field(default_factory=list)
@@ -53,8 +55,8 @@ class Request:
 
 def poisson_trace(n_requests: int, *, mean_interarrival: float,
                   prompt_lens: tuple[int, ...], gen_lens: tuple[int, ...],
-                  vocab_size: int, seed: int = 0,
-                  extras_fn=None) -> list[Request]:
+                  vocab_size: int, seed: int = 0, extras_fn=None,
+                  model_id: str = "default") -> list[Request]:
     """Mixed-length Poisson trace: exponential interarrival gaps (in
     engine steps), prompt/generation lengths drawn uniformly from the
     given choices. Discrete length choices keep the prefill jit cache
@@ -68,8 +70,42 @@ def poisson_trace(n_requests: int, *, mean_interarrival: float,
         glen = int(rng.choice(gen_lens))
         prompt = rng.integers(0, vocab_size, size=plen).astype(np.int32)
         out.append(Request(
-            rid=rid, prompt=prompt, max_new_tokens=glen,
-            arrival=int(t), extras=extras_fn(rng) if extras_fn else None))
+            rid=rid, prompt=prompt, max_new_tokens=glen, arrival=int(t),
+            extras=extras_fn(rng) if extras_fn else None,
+            model_id=model_id))
+    return out
+
+
+def multi_tenant_trace(tenants: Sequence[dict], n_requests: int, *,
+                       mean_interarrival: float,
+                       prompt_lens: tuple[int, ...],
+                       gen_lens: tuple[int, ...],
+                       seed: int = 0) -> list[Request]:
+    """One interleaved Poisson arrival process over several tenants.
+
+    ``tenants`` is a list of dicts with keys ``model_id``, ``vocab_size``,
+    optional ``share`` (relative traffic weight, default 1.0) and optional
+    ``extras_fn``. Each arrival is assigned to a tenant categorically by
+    share, so traffic from different models interleaves — the trace shape
+    that makes naive weight swapping thrash.
+    """
+    rng = np.random.default_rng(seed)
+    shares = np.asarray([float(t.get("share", 1.0)) for t in tenants])
+    probs = shares / shares.sum()
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += rng.exponential(mean_interarrival)
+        ten = tenants[int(rng.choice(len(tenants), p=probs))]
+        plen = int(rng.choice(prompt_lens))
+        glen = int(rng.choice(gen_lens))
+        prompt = rng.integers(0, ten["vocab_size"], size=plen) \
+            .astype(np.int32)
+        extras_fn = ten.get("extras_fn")
+        out.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=glen, arrival=int(t),
+            extras=extras_fn(rng) if extras_fn else None,
+            model_id=ten["model_id"]))
     return out
 
 
@@ -120,3 +156,66 @@ class Scheduler:
     @property
     def exhausted(self) -> bool:
         return not self._pending and not self._ready
+
+
+class MultiQueueScheduler:
+    """Per-model FCFS queues over one merged arrival trace.
+
+    Admission stays FCFS *within* a model; across models the pool engine
+    chooses which queues are servable (their weights are hot) and this
+    scheduler hands out the earliest-arrived ready request among them.
+    Preempted requests go back to their model's queue head.
+    """
+
+    def __init__(self, requests: list[Request]):
+        self._pending = deque(sorted(requests,
+                                     key=lambda r: (r.arrival, r.rid)))
+        self._ready: dict[str, deque[Request]] = {}
+        self.preemptions = 0
+
+    # -- arrival handling ---------------------------------------------------
+
+    def release_arrivals(self, step: int) -> None:
+        while self._pending and self._pending[0].arrival <= step:
+            r = self._pending.popleft()
+            self._ready.setdefault(r.model_id, deque()).append(r)
+
+    def next_arrival(self) -> int | None:
+        return self._pending[0].arrival if self._pending else None
+
+    # -- admission ----------------------------------------------------------
+
+    def ready_models(self) -> list[str]:
+        return sorted(m for m, q in self._ready.items() if q)
+
+    def ready_count(self, model_id: str) -> int:
+        return len(self._ready.get(model_id, ()))
+
+    def pending_demand(self, model_id: str) -> int:
+        """Decode tokens queued behind ``model_id`` — the activation-value
+        numerator for reload-aware admission (tokens bought per reload)."""
+        return sum(r.max_new_tokens - len(r.generated)
+                   for r in self._ready.get(model_id, ()))
+
+    def peek_ready(self, allowed: Sequence[str]) -> Request | None:
+        """Earliest-arrival ready request among the allowed models."""
+        allowed = set(allowed)
+        heads = [q[0] for m, q in self._ready.items()
+                 if q and m in allowed]
+        if not heads:
+            return None
+        return min(heads, key=lambda r: (r.arrival, r.rid))
+
+    def pop_ready(self, req: Request) -> Request:
+        got = self._ready[req.model_id].popleft()
+        assert got is req, "pop must follow peek"
+        return got
+
+    def requeue(self, req: Request) -> None:
+        """Preempted request: back to its model's queue head."""
+        self._ready.setdefault(req.model_id, deque()).appendleft(req)
+        self.preemptions += 1
+
+    @property
+    def exhausted(self) -> bool:
+        return not self._pending and not any(self._ready.values())

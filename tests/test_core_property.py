@@ -102,11 +102,78 @@ def test_pack_random_workloads(data):
 def test_bounded_pack_never_exceeds_capacity(data):
     wl = _layers(data.draw)
     dm = data.draw(st.sampled_from([1, 4, 16, 256]))
-    arch = d_imc(D_h=1, D_m=dm)
+    dh = data.draw(st.sampled_from([1, 2, 4]))
+    arch = d_imc(D_h=dh, D_m=dm)
     plan = pack(wl, arch, bounded=True)
+    assert plan.min_D_m <= dm
     for cols in plan.allocation.macros:
         assert sum(c.height for c in cols) <= dm
     # all layers accounted for: on-chip + streamed
     on_chip = {l.name for l in plan.on_chip_layers}
     assert on_chip | set(plan.streamed_layers) == \
         {l.name for l in wl.layers}
+
+
+def _placed_volumes(plan):
+    """(per-layer placed weight volume, multiset of (layer, copy) keys)."""
+    placed: dict[str, int] = {}
+    keys: list[tuple[str, int]] = []
+    for cols in plan.allocation.macros:
+        for col in cols:
+            for p in col.placements:
+                for m in p.supertile.members:
+                    placed[m.layer_name] = placed.get(m.layer_name, 0) \
+                        + m.tile.volume
+                    keys.append(m.key)
+    return placed, keys
+
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_every_layer_allocated_exactly_once_or_streamed(data):
+    """Conservation: a layer's full weight volume is placed exactly once
+    (all T_h copies, no copy duplicated or dropped) XOR the layer is in
+    streamed_layers with no placements at all."""
+    wl = _layers(data.draw)
+    dm = data.draw(st.sampled_from([1, 2, 8, 64]))
+    dh = data.draw(st.sampled_from([1, 2, 4]))
+    plan = pack(wl, d_imc(D_h=dh, D_m=dm), bounded=True)
+    placed, keys = _placed_volumes(plan)
+    assert len(keys) == len(set(keys)), "a tile copy was placed twice"
+    for layer in wl.layers:
+        if layer.name in plan.streamed_layers:
+            assert layer.name not in placed, \
+                f"{layer.name} is streamed but also placed on-chip"
+        else:
+            t = plan.tiles[layer.name]
+            copies = {c for (n, c) in keys if n == layer.name}
+            assert copies == set(range(t.T_h)), \
+                f"{layer.name}: copies {copies} != T_h={t.T_h}"
+            assert placed[layer.name] == layer.weight_volume, \
+                f"{layer.name}: placed {placed[layer.name]} != " \
+                f"volume {layer.weight_volume}"
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_folding_never_increases_min_dm(data):
+    """§3.4 folding is capacity-driven demotion: whenever the bounded
+    packer fits the whole workload on-chip (possibly by folding), the
+    resulting min_D_m never exceeds what the *unfolded* tile pool needs
+    (folds only happen when the unfolded pool overflows the bound, and
+    then the folded plan sits below the bound by construction)."""
+    wl = _layers(data.draw)
+    dm = data.draw(st.sampled_from([2, 8, 64, 512]))
+    arch = d_imc(D_h=data.draw(st.sampled_from([1, 2])), D_m=dm)
+    bounded = pack(wl, arch, bounded=True)
+    if bounded.streamed_layers:
+        return  # spilled: min_D_m covers a different layer set
+    unfolded = pack(wl, d_imc(D_h=arch.D_h, D_m=1), bounded=False)
+    assert bounded.min_D_m <= max(unfolded.min_D_m, dm)
+    folds = sum(t.folds for t in bounded.tiles.values())
+    if folds == 0:
+        assert bounded.min_D_m <= unfolded.min_D_m
+    else:
+        # folding only fires past the bound, and lands back under it
+        assert unfolded.min_D_m > dm
+        assert bounded.min_D_m <= dm < unfolded.min_D_m

@@ -1,0 +1,66 @@
+"""Golden regression: the paper's headline EDP numbers are pinned.
+
+``tests/golden/*.json`` hold committed outputs of the Fig. 8 mapping
+comparison (all four MLPerf Tiny workloads) and the Fig. 9 (D_h, D_m)
+sweep (the fast workloads — mobilenet's 30s sweep is covered by the
+benchmark harness, not tier-1). Cost-model or packer refactors that move
+any EDP / energy / latency number, any min_D_m, or a fold/stream count
+fail here instead of silently drifting the reproduction.
+
+Regenerate intentionally (after a reviewed change in semantics) with:
+
+    PYTHONPATH=src python - <<'PY'
+    import json, pathlib
+    from benchmarks import bench_fig8_mapping as f8, bench_fig9_sweep as f9
+    g = pathlib.Path("tests/golden")
+    g.joinpath("bench_fig8_mapping.json").write_text(
+        json.dumps(f8.run(), indent=1) + "\n")
+    g.joinpath("bench_fig9_sweep.json").write_text(
+        json.dumps(f9.run(workloads=("resnet8", "ds_cnn", "autoencoder")),
+                   indent=1) + "\n")
+    PY
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+GOLD = pathlib.Path(__file__).parent / "golden"
+REPO = pathlib.Path(__file__).resolve().parent.parent
+RTOL = 1e-6            # float tolerance: platform libm jitter, not drift
+
+sys.path.insert(0, str(REPO))          # benchmarks/ package lives at root
+
+FIG9_WORKLOADS = ("resnet8", "ds_cnn", "autoencoder")
+
+
+def _compare(got_rows: list[dict], want_rows: list[dict]) -> None:
+    got = {r["name"]: r for r in got_rows}
+    want = {r["name"]: r for r in want_rows}
+    assert sorted(got) == sorted(want), "benchmark row set changed"
+    for name, w in want.items():
+        g = got[name]
+        assert sorted(g) == sorted(w), f"{name}: field set changed"
+        for k, wv in w.items():
+            gv = g[k]
+            if isinstance(wv, float) and isinstance(gv, (int, float)):
+                assert gv == pytest.approx(wv, rel=RTOL, abs=1e-12), \
+                    f"{name}.{k}: {gv} != golden {wv}"
+            else:
+                assert gv == wv, f"{name}.{k}: {gv} != golden {wv}"
+
+
+def test_fig8_mapping_edp_pinned():
+    from benchmarks import bench_fig8_mapping as f8
+    want = json.loads((GOLD / "bench_fig8_mapping.json").read_text())
+    _compare(f8.run(), want)
+
+
+def test_fig9_sweep_edp_pinned():
+    from benchmarks import bench_fig9_sweep as f9
+    want = json.loads((GOLD / "bench_fig9_sweep.json").read_text())
+    _compare(f9.run(workloads=FIG9_WORKLOADS), want)
+    assert {n.split("/")[1] for n in (r["name"] for r in want)} == \
+        set(FIG9_WORKLOADS)

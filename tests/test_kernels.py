@@ -264,6 +264,37 @@ def test_paged_matches_dense_decode_attention():
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("B,KV,G,dh,P,page,M,lens", [
+    # context lengths exactly at page boundaries (incl. a full table row)
+    (3, 2, 2, 16, 14, 8, 4, [8, 16, 32]),
+    # single-token contexts (first page barely occupied)
+    (3, 2, 2, 16, 6, 8, 4, [1, 1, 1]),
+    # all slots dead: no valid keys anywhere, output must be exactly zero
+    (4, 2, 2, 16, 5, 8, 4, [0, 0, 0, 0]),
+    # non-power-of-two page-table geometry (M=3, P=7) and page size 12
+    (2, 2, 2, 16, 7, 12, 3, [13, 30]),
+    # mixed: boundary + dead + single in one batch, odd table width
+    (5, 1, 4, 32, 16, 8, 5, [24, 0, 1, 33, 40]),
+])
+def test_paged_decode_attention_edge_shapes(B, KV, G, dh, P, page, M, lens):
+    """Differential check at the shapes the engine actually produces:
+    page-boundary lengths, single-token contexts, fully dead batches, and
+    non-power-of-two table geometry must all match the jnp oracle."""
+    H = KV * G
+    q = rand(jax.random.PRNGKey(6), (B, H, dh), jnp.float32)
+    kp, vp, pt, lengths = _paged_case(jax.random.PRNGKey(7), B, KV, dh, P,
+                                      page, M, lens)
+    got = ops.paged_decode_attention(q, kp, vp, pt, lengths,
+                                     impl="interpret")
+    want = ref.paged_decode_attention(q, _to_model_layout(kp),
+                                      _to_model_layout(vp), pt, lengths)
+    assert np.abs(np.asarray(got) - np.asarray(want)).max() <= 1e-5
+    dead = np.asarray(lengths) == 0
+    if dead.any():
+        assert np.all(np.asarray(got)[dead] == 0.0), \
+            "dead slots must produce exactly zero output"
+
+
 def test_paged_attention_ignores_foreign_pages():
     """No cross-request leakage: trashing every page sequence 0 does NOT
     own must leave sequence 0's output untouched."""

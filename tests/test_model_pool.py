@@ -1,0 +1,347 @@
+"""Multi-tenant model pool: residency packing, eviction order, hysteresis,
+and the pooled engine end-to-end (CPU reduced configs)."""
+
+import copy
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import get_model
+from repro.planner.residency import weight_inventory
+from repro.runtime import (ModelPool, MultiQueueScheduler, PoolConfig,
+                           PoolEngineConfig, PoolError, PooledEngine,
+                           Request, multi_tenant_trace, poisson_trace,
+                           vlm_extras_fn)
+
+KiB = 1 << 10
+
+ZOO = ("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b")
+
+
+def _cfgs():
+    return {a: get_config(a).reduced() for a in ZOO}
+
+
+def _weight_bytes(cfg) -> int:
+    return 2 * sum(t.params for t in weight_inventory(cfg))
+
+
+def _pool(pcfg, demands=None):
+    pool = ModelPool(pcfg)
+    for a, cfg in _cfgs().items():
+        pool.register(a, cfg, demand=(demands or {}).get(a, 1.0))
+    pool.pack()
+    return pool
+
+
+# --- residency packing -----------------------------------------------------------
+
+
+def test_pack_all_resident_when_budget_is_ample():
+    pool = _pool(PoolConfig(hbm_budget_bytes=2 << 20, slab_frac=0.25))
+    for e in pool.plan.entries:
+        assert e.residency == "resident"
+        assert e.reload_bytes == 0
+        assert e.fits_slab
+    assert pool.plan.pinned_bytes == sum(
+        _weight_bytes(c) for c in _cfgs().values())
+
+
+def test_pack_demand_weighting_orders_residency():
+    """The demand-2 dense model pins fully before the demand-1 tenants;
+    pinned bytes never exceed the pin budget."""
+    pcfg = PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5)
+    pool = _pool(pcfg, demands={"codeqwen1.5-7b": 2.0})
+    plan = pool.plan
+    assert plan.entry("codeqwen1.5-7b").residency == "resident"
+    assert plan.entry("qwen2-vl-7b").residency == "streamed"
+    assert plan.entry("rwkv6-7b").residency == "streamed"
+    assert plan.pinned_bytes <= pcfg.pin_budget_bytes
+    # every model either fully pinned or its remainder fits the slab
+    for e in plan.entries:
+        assert 0 <= e.pinned_bytes <= e.weight_bytes
+        assert e.fits_slab
+
+
+def test_pack_everything_evicted_under_tiny_pin_budget():
+    pcfg = PoolConfig(hbm_budget_bytes=400 * KiB, slab_frac=0.999)
+    pool = _pool(pcfg)
+    for e in pool.plan.entries:
+        assert e.residency == "evicted"
+        assert e.reload_bytes == e.weight_bytes
+        assert e.fits_slab          # slab ~400 KiB > largest model
+
+
+def test_pack_flags_unservable_models():
+    """A model whose working set exceeds the slab is marked and refused."""
+    pcfg = PoolConfig(hbm_budget_bytes=300 * KiB, slab_frac=0.3)
+    pool = _pool(pcfg)
+    e = pool.plan.entry("rwkv6-7b")   # 352 KiB model, 90 KiB slab
+    assert not e.fits_slab
+    with pytest.raises(PoolError, match="exceeds the swap slab"):
+        pool.try_activate("rwkv6-7b", step=0)
+
+
+def test_pack_is_deterministic():
+    mk = lambda: _pool(PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5),
+                       demands={"codeqwen1.5-7b": 2.0})
+    assert mk().plan.summary() == mk().plan.summary()
+
+
+# --- activation / eviction / hysteresis -----------------------------------------
+
+
+def _all_evicted_pool(demands):
+    """Pool where every tenant is evicted; slab holds exactly two of the
+    transformer working sets (208.6 KiB each) but not all three models."""
+    pcfg = PoolConfig(hbm_budget_bytes=500 * KiB, slab_frac=0.999,
+                      reload_bytes_per_step=32 * KiB, hysteresis_steps=16)
+    return _pool(pcfg, demands)
+
+
+def test_activation_accounting_and_stalls():
+    pool = _all_evicted_pool({})
+    e = pool.plan.entry("codeqwen1.5-7b")
+    stall, evicted = pool.try_activate("codeqwen1.5-7b", step=0)
+    assert evicted == []
+    assert stall == -(-e.reload_bytes // (32 * KiB))
+    assert pool.reload_bytes_total == e.reload_bytes
+    assert pool.reload_events == 1
+    assert pool.is_hot("codeqwen1.5-7b")
+    # re-activating a hot model is free
+    assert pool.try_activate("codeqwen1.5-7b", step=5) == (0, [])
+    assert pool.reload_events == 1
+
+
+def test_eviction_order_is_least_value_per_byte_first():
+    """rwkv6 (demand 3) outranks qwen2-vl (demand 1) outranks codeqwen
+    (demand 0.5): making room evicts the cheapest-to-lose model first."""
+    pool = _all_evicted_pool({"codeqwen1.5-7b": 0.5, "rwkv6-7b": 3.0})
+    vals = {e.model_id: e.value_per_byte for e in pool.plan.entries}
+    assert vals["codeqwen1.5-7b"] < vals["qwen2-vl-7b"] < vals["rwkv6-7b"]
+    pool.try_activate("codeqwen1.5-7b", step=0)
+    pool.try_activate("qwen2-vl-7b", step=0)
+    # slab now holds 2 x 208.6 KiB; rwkv (352 KiB) needs both gone
+    stall, evicted = pool.try_activate("rwkv6-7b", step=20)
+    assert evicted == ["codeqwen1.5-7b", "qwen2-vl-7b"]
+    assert pool.evictions == 2
+    assert pool.hot_models() == ["rwkv6-7b"]
+    # evicted model reloads (and pays) again on its next activation
+    pool.try_activate("codeqwen1.5-7b", step=40)
+    assert pool.reload_events == 4
+
+
+def test_hysteresis_defers_thrashing_evictions():
+    pool = _all_evicted_pool({"codeqwen1.5-7b": 0.5, "rwkv6-7b": 3.0})
+    pool.try_activate("codeqwen1.5-7b", step=0)
+    pool.try_activate("qwen2-vl-7b", step=10)
+    # step 12: codeqwen's window (16) has not expired -> activation waits
+    assert pool.try_activate("rwkv6-7b", step=12) is None
+    assert pool.deferred_activations == 1
+    assert sorted(pool.hot_models()) == ["codeqwen1.5-7b", "qwen2-vl-7b"]
+    # step 20: codeqwen is evictable but qwen2-vl (hot since 10) is not,
+    # and rwkv needs both slots -> still deferred
+    assert pool.try_activate("rwkv6-7b", step=20) is None
+    # step 26: both windows expired -> eviction proceeds in value order
+    stall, evicted = pool.try_activate("rwkv6-7b", step=26)
+    assert evicted == ["codeqwen1.5-7b", "qwen2-vl-7b"]
+
+
+def test_protected_models_are_never_evicted():
+    pool = _all_evicted_pool({"codeqwen1.5-7b": 0.5, "rwkv6-7b": 3.0})
+    pool.try_activate("codeqwen1.5-7b", step=0)
+    pool.try_activate("qwen2-vl-7b", step=0)
+    got = pool.try_activate("rwkv6-7b", step=100,
+                            protected=frozenset({"codeqwen1.5-7b"}))
+    assert got is None                  # qwen2-vl alone frees too little
+    assert pool.is_hot("codeqwen1.5-7b")
+
+
+def test_register_after_pack_and_duplicates_rejected():
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=1 << 20))
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    pool.register("m", cfg)
+    with pytest.raises(PoolError, match="twice"):
+        pool.register("m", cfg)
+    pool.pack()
+    with pytest.raises(PoolError, match="already packed"):
+        pool.register("m2", cfg)
+
+
+# --- multi-queue scheduler -------------------------------------------------------
+
+
+def test_multi_queue_scheduler_fcfs_across_models():
+    reqs = [Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=4,
+                    arrival=2, model_id="a"),
+            Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=6,
+                    arrival=0, model_id="b"),
+            Request(rid=2, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                    arrival=1, model_id="a")]
+    s = MultiQueueScheduler(reqs)
+    s.release_arrivals(0)
+    assert s.ready_models() == ["b"]
+    assert s.peek_ready(["a"]) is None
+    s.release_arrivals(2)
+    assert s.ready_models() == ["a", "b"]
+    assert s.pending_demand("a") == 6 and s.pending_demand("b") == 6
+    # earliest arrival among the allowed set wins
+    r = s.peek_ready(["a", "b"])
+    assert r.rid == 1
+    s.pop_ready(r)
+    r = s.peek_ready(["a", "b"])
+    assert r.rid == 2                   # a's queue stays FCFS
+    s.pop_ready(r)
+    s.requeue(r)                        # preemption: back to queue head
+    assert s.peek_ready(["a"]).rid == 2
+    assert s.preemptions == 1
+    assert not s.exhausted
+
+
+def test_multi_tenant_trace_shares_and_determinism():
+    tenants = [dict(model_id="x", vocab_size=64, share=3.0),
+               dict(model_id="y", vocab_size=32, share=1.0)]
+    t1 = multi_tenant_trace(tenants, 200, mean_interarrival=0.5,
+                            prompt_lens=(4, 8), gen_lens=(2, 4), seed=7)
+    t2 = multi_tenant_trace(tenants, 200, mean_interarrival=0.5,
+                            prompt_lens=(4, 8), gen_lens=(2, 4), seed=7)
+    assert [(r.model_id, r.arrival, r.prompt.tolist()) for r in t1] == \
+        [(r.model_id, r.arrival, r.prompt.tolist()) for r in t2]
+    n_x = sum(1 for r in t1 if r.model_id == "x")
+    assert 200 * 0.55 < n_x < 200 * 0.95       # ~75% expected
+    assert all(r.prompt.max() < 64 for r in t1)
+    assert all(r.prompt.max() < 32 for r in t1 if r.model_id == "y")
+
+
+# --- pooled engine ---------------------------------------------------------------
+
+
+POOL_ECFG = PoolEngineConfig(num_slots=4, page_size=8, num_pages=49,
+                             max_pages_per_seq=8, prefill_bucket=8)
+
+
+def _zoo_setup(archs=("codeqwen1.5-7b", "rwkv6-7b")):
+    cfgs = {a: get_config(a).reduced() for a in archs}
+    params = {a: get_model(c).init_params(c, jax.random.PRNGKey(0))
+              for a, c in cfgs.items()}
+    tenants = [dict(model_id=a, vocab_size=c.vocab_size,
+                    extras_fn=vlm_extras_fn(c) if c.family == "vlm"
+                    else None)
+               for a, c in cfgs.items()]
+    return cfgs, params, tenants
+
+
+def test_pooled_engine_completes_all_tenants():
+    cfgs, params, tenants = _zoo_setup()
+    pcfg = PoolConfig(hbm_budget_bytes=700 * KiB, slab_frac=0.55,
+                      reload_bytes_per_step=32 * KiB, hysteresis_steps=8)
+    pool = ModelPool(pcfg)
+    for a, c in cfgs.items():
+        pool.register(a, c)
+    trace = multi_tenant_trace(tenants, 10, mean_interarrival=0.5,
+                               prompt_lens=(6, 10), gen_lens=(3, 6),
+                               seed=0)
+    rep = PooledEngine(pool, params, POOL_ECFG).run(copy.deepcopy(trace))
+    assert len(rep.completed) == 10
+    by_rid = {r.rid: r for r in rep.completed}
+    for want in trace:
+        got = by_rid[want.rid]
+        assert not got.truncated
+        assert got.model_id == want.model_id
+        assert len(got.generated) == want.max_new_tokens
+    assert sum(rep.model_tokens.values()) == rep.new_tokens
+    assert all(v > 0 for v in rep.model_tokens.values())
+
+
+def test_pooled_engine_deterministic_replay():
+    cfgs, params, tenants = _zoo_setup()
+    pcfg = PoolConfig(hbm_budget_bytes=700 * KiB, slab_frac=0.55,
+                      reload_bytes_per_step=32 * KiB, hysteresis_steps=8)
+    trace = multi_tenant_trace(tenants, 8, mean_interarrival=0.4,
+                               prompt_lens=(6, 10), gen_lens=(3, 6),
+                               seed=1)
+
+    def go():
+        pool = ModelPool(pcfg)
+        for a, c in cfgs.items():
+            pool.register(a, c)
+        ecfg = PoolEngineConfig(num_slots=4, page_size=8, num_pages=49,
+                                max_pages_per_seq=8, prefill_bucket=8,
+                                greedy=False, temperature=0.8, seed=3)
+        rep = PooledEngine(pool, params, ecfg).run(copy.deepcopy(trace))
+        s = rep.summary()
+        s.pop("wall_s"), s.pop("tokens_per_s")
+        return s, {r.rid: r.generated for r in rep.completed}
+
+    assert go() == go()
+
+
+def test_pooled_engine_charges_and_beats_naive_swapping():
+    """The acceptance invariant at unit scale: on one interleaved trace
+    the reload-aware policy is strictly ahead of round-robin swapping on
+    decode tokens/step AND total weight-reload bytes."""
+    cfgs, params, tenants = _zoo_setup()
+    # slab (512 KiB) holds both working sets at once: reload-aware pays
+    # each tenant's reload exactly once, naive swapping pays per switch
+    pcfg = PoolConfig(hbm_budget_bytes=640 * KiB, slab_frac=0.8,
+                      reload_bytes_per_step=8 * KiB, hysteresis_steps=16)
+    trace = multi_tenant_trace(tenants, 14, mean_interarrival=0.3,
+                               prompt_lens=(6, 10), gen_lens=(4, 8, 16),
+                               seed=2)
+    reps = {}
+    for policy in ("reload_aware", "round_robin"):
+        pool = ModelPool(pcfg)
+        for a, c in cfgs.items():
+            pool.register(a, c)
+        ecfg = PoolEngineConfig(num_slots=4, page_size=8, num_pages=49,
+                                max_pages_per_seq=8, prefill_bucket=8,
+                                policy=policy, rr_quantum=8)
+        reps[policy] = PooledEngine(pool, params, ecfg).run(
+            copy.deepcopy(trace))
+    ra, rr = reps["reload_aware"], reps["round_robin"]
+    assert ra.new_tokens == rr.new_tokens
+    assert ra.reload_bytes > 0          # reloads are really charged
+    assert rr.reload_bytes > ra.reload_bytes
+    assert ra.tokens_per_step > rr.tokens_per_step
+
+
+def test_pooled_engine_rejects_unknown_model_id():
+    """A request tagged with a model the pool never registered is failed
+    fast instead of crashing the serving loop."""
+    cfgs, params, _ = _zoo_setup(archs=("codeqwen1.5-7b",))
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=1 << 20))
+    pool.register("codeqwen1.5-7b", cfgs["codeqwen1.5-7b"])
+    reqs = [Request(rid=0, prompt=np.zeros(6, np.int32), max_new_tokens=3,
+                    model_id="codeqwen1.5-7b"),
+            Request(rid=1, prompt=np.zeros(6, np.int32), max_new_tokens=3,
+                    model_id="not-a-model")]
+    rep = PooledEngine(pool, params, POOL_ECFG).run(reqs)
+    got = {r.rid: r.truncated for r in rep.completed}
+    assert got == {0: False, 1: True}
+
+
+def test_pooled_engine_rejects_unservable_tenant():
+    """Requests for a model whose working set cannot fit the slab are
+    failed fast; the other tenants are unaffected."""
+    cfgs, params, tenants = _zoo_setup()
+    # slab 90 KiB: rwkv (352 KiB, evicted) cannot ever activate
+    pcfg = PoolConfig(hbm_budget_bytes=300 * KiB, slab_frac=0.3,
+                      reload_bytes_per_step=32 * KiB)
+    pool = ModelPool(pcfg)
+    for a, c in cfgs.items():
+        pool.register(a, c)
+    pool.pack()
+    assert pool.plan.entry("codeqwen1.5-7b").fits_slab
+    assert not pool.plan.entry("rwkv6-7b").fits_slab
+    trace = multi_tenant_trace(tenants, 8, mean_interarrival=0.5,
+                               prompt_lens=(6,), gen_lens=(3, 6), seed=4)
+    rep = PooledEngine(pool, params, POOL_ECFG).run(copy.deepcopy(trace))
+    assert len(rep.completed) == 8
+    for r in rep.completed:
+        if r.model_id == "rwkv6-7b":
+            assert r.truncated and not r.generated
+        else:
+            assert not r.truncated
+            assert len(r.generated) == r.max_new_tokens

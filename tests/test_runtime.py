@@ -208,6 +208,38 @@ def test_paged_decode_matches_dense_decode():
         live += 1
 
 
+def test_engine_deterministic_replay_with_preemptions():
+    """Replaying the same Poisson trace with the same seed yields an
+    identical EngineReport.summary() (wall-clock fields excluded) and
+    identical per-request token streams — including through the
+    preemption/requeue path, which a page-starved config forces."""
+    cfg, params = _dense_setup()
+    trace = poisson_trace(8, mean_interarrival=0.2, prompt_lens=(8, 16),
+                          gen_lens=(24, 40), vocab_size=cfg.vocab_size,
+                          seed=1)
+    tiny = EngineConfig(num_slots=4, page_size=8, num_pages=17,
+                        max_pages_per_seq=8, prefill_bucket=8,
+                        greedy=False, temperature=0.8, seed=3)
+
+    def go():
+        rep = Engine(cfg, params, tiny).run(copy.deepcopy(trace))
+        s = rep.summary()
+        del s["wall_s"], s["tokens_per_s"]          # timing, not behaviour
+        return rep, s
+
+    rep1, s1 = go()
+    rep2, s2 = go()
+    assert rep1.preemptions > 0, "trace must exercise the requeue path"
+    assert s1 == s2
+    toks1 = {r.rid: r.generated for r in rep1.completed}
+    toks2 = {r.rid: r.generated for r in rep2.completed}
+    assert toks1 == toks2
+    assert [(r.rid, r.admitted_step, r.done_step, r.prefills)
+            for r in rep1.completed] == \
+        [(r.rid, r.admitted_step, r.done_step, r.prefills)
+         for r in rep2.completed]
+
+
 def test_engine_vs_static_structural_win():
     """Mixed-length trace: the engine strictly beats lockstep batching on
     tokens/step and peak KV bytes (full acceptance margin is bench_serve's
