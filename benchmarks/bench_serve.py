@@ -15,9 +15,19 @@ and the structural serving metrics are compared:
 
 The ``multi_tenant`` scenario serves three model families from ONE
 shared HBM pool (runtime.ModelPool residency packing) on the same
-interleaved trace under both activation policies; the reload-aware
-scheduler must beat naive round-robin swapping on decode tokens/step AND
-total weight-reload bytes.
+interleaved trace, on the roofline-calibrated DMA clock:
+
+  * activation policies — the reload-aware scheduler must beat naive
+    round-robin swapping on tokens/step AND total weight-reload bytes;
+  * streaming granularity — layer-granular overlapped streaming
+    (double-buffered prefetch behind compute) must strictly reduce stall
+    steps vs model-granular streaming at equal HBM budget, for >= 2 of
+    the 3 families, and improve the family-resolved tokens/step (each
+    family's tokens over shared steps plus its own attributed stalls)
+    for >= 2 families;
+  * a budget x slab-fraction sweep emits the residency-vs-throughput
+    frontier (Fig. 9's yellow trace at serving scale) to the bench JSON
+    (``--frontier smoke`` keeps one sweep point for CI).
 
 A final row checks the paged decode attention kernel (interpret mode)
 against the jnp oracle.
@@ -38,6 +48,7 @@ from repro.kernels import ops, ref
 from repro.models import get_model
 from repro.runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
                            PoolEngineConfig, PooledEngine,
+                           calibrated_reload_bytes_per_step,
                            multi_tenant_trace, poisson_trace, run_static,
                            vlm_extras_fn)
 
@@ -60,6 +71,8 @@ def _row(rep, family):
     return {
         "name": f"serve_{family}_{rep.name.split('/')[0]}",
         "tokens_per_step": s["tokens_per_step"],
+        "decode_tokens_per_step": s["decode_tokens_per_step"],
+        "prefill_tokens": s["prefill_tokens"],
         "wasted_slot_fraction": s["wasted_slot_fraction"],
         "kv_bytes_peak": s["kv_bytes_peak"],
         "p50_steps": s["p50"],
@@ -112,6 +125,8 @@ def run_engine_vs_static() -> list[dict]:
             "arch": cfg.name,
             "tokens_per_step_ratio": round(
                 eng.tokens_per_step / sta.tokens_per_step, 3),
+            "decode_tokens_per_step_ratio": round(
+                eng.decode_tokens_per_step / sta.decode_tokens_per_step, 3),
             "kv_bytes_ratio": round(
                 sta.kv_bytes_peak / max(eng.kv_bytes_peak, 1), 3),
             "paged": eng.page_bytes > 0,
@@ -125,19 +140,39 @@ def run_engine_vs_static() -> list[dict]:
 
 # one pool over three cache shapes; dense carries 2x the traffic
 ZOO = (("codeqwen1.5-7b", 2.0), ("qwen2-vl-7b", 1.0), ("rwkv6-7b", 1.0))
-POOL_CFG = PoolConfig(hbm_budget_bytes=960 << 10, slab_frac=0.5,
-                      reload_bytes_per_step=8 << 10, hysteresis_steps=32)
+POOL_BUDGET_KIB = 960
+POOL_SLAB_FRAC = 0.5
 POOL_N_REQUESTS = 40
 
+# budget x slab-fraction frontier (Fig. 9's yellow trace at serving
+# scale); the smoke variant keeps the single middle point for CI
+FRONTIER_BUDGETS_KIB = (832, 960, 1152)
+FRONTIER_SLABS = (0.4, 0.55)
+SMOKE_BUDGETS_KIB = (960,)
+SMOKE_SLABS = (0.55,)
 
-def _pool_row(rep, plan) -> dict:
+
+def _pool_cfg(budget_kib: int, slab_frac: float, reload_bps: int
+              ) -> PoolConfig:
+    return PoolConfig(hbm_budget_bytes=budget_kib << 10,
+                      slab_frac=slab_frac,
+                      reload_bytes_per_step=reload_bps,
+                      hysteresis_steps=32)
+
+
+def _pool_row(rep, plan, name: str) -> dict:
     s = rep.summary()
     return {
-        "name": f"serve_pool_{rep.policy}",
+        "name": name,
+        "policy": s["policy"],
+        "stream": s["stream"],
         "tokens_per_step": s["tokens_per_step"],
+        "decode_tokens_per_step": s["decode_tokens_per_step"],
+        "prefill_tokens": s["prefill_tokens"],
         "reload_bytes": s["reload_bytes"],
         "reload_events": s["reload_events"],
         "stall_steps": s["stall_steps"],
+        "stall_steps_by_model": s["stall_steps_by_model"],
         "evictions": s["evictions"],
         "preemptions": s["preemptions"],
         "wasted_slot_fraction": s["wasted_slot_fraction"],
@@ -148,7 +183,7 @@ def _pool_row(rep, plan) -> dict:
     }
 
 
-def run_multi_tenant() -> list[dict]:
+def _zoo():
     cfgs, params, tenants = {}, {}, []
     for arch, share in ZOO:
         cfg = get_config(arch).reduced()
@@ -157,23 +192,43 @@ def run_multi_tenant() -> list[dict]:
         tenants.append(dict(
             model_id=arch, vocab_size=cfg.vocab_size, share=share,
             extras_fn=vlm_extras_fn(cfg) if cfg.family == "vlm" else None))
+    return cfgs, params, tenants
+
+
+def _run_pool(cfgs, params, trace, pcfg, policy, stream):
+    pool = ModelPool(pcfg)
+    for arch, share in ZOO:
+        pool.register(arch, cfgs[arch], demand=share)
+    plan = pool.pack()
+    ecfg = PoolEngineConfig(
+        num_slots=SLOTS, page_size=8, num_pages=97,
+        max_pages_per_seq=16, prefill_bucket=8,
+        policy=policy, rr_quantum=16, stream=stream)
+    rep = PooledEngine(pool, params, ecfg).run(copy.deepcopy(trace))
+    return rep, plan
+
+
+def run_multi_tenant(frontier: str = "full") -> list[dict]:
+    cfgs, params, tenants = _zoo()
     trace = multi_tenant_trace(
         tenants, POOL_N_REQUESTS, mean_interarrival=MEAN_INTERARRIVAL,
         prompt_lens=(8, 16), gen_lens=(4, 8, 24), seed=3)
+    # one clock with the kernel benches: the roofline decode-cell lower
+    # bound times the off-chip DMA bandwidth, scaled to the reduced zoo
+    reload_bps = calibrated_reload_bytes_per_step(
+        (a, cfgs[a]) for a, _ in ZOO)
+    base_cfg = _pool_cfg(POOL_BUDGET_KIB, POOL_SLAB_FRAC, reload_bps)
 
-    rows, reps = [], {}
+    rows = [{"name": "serve_pool_reload_clock",
+             "reload_bytes_per_step": reload_bps}]
+
+    # -- activation policy comparison (PR-2 claim, model-granular) -------
+    reps = {}
     for policy in ("reload_aware", "round_robin"):
-        pool = ModelPool(POOL_CFG)
-        for arch, share in ZOO:
-            pool.register(arch, cfgs[arch], demand=share)
-        plan = pool.pack()
-        ecfg = PoolEngineConfig(
-            num_slots=SLOTS, page_size=8, num_pages=97,
-            max_pages_per_seq=16, prefill_bucket=8,
-            policy=policy, rr_quantum=16)
-        rep = PooledEngine(pool, params, ecfg).run(copy.deepcopy(trace))
+        rep, plan = _run_pool(cfgs, params, trace, base_cfg, policy,
+                              "model")
         reps[policy] = rep
-        rows.append(_pool_row(rep, plan))
+        rows.append(_pool_row(rep, plan, f"serve_pool_{policy}"))
     ra, rr = reps["reload_aware"], reps["round_robin"]
     rows.append({
         "name": "serve_pool_speedup",
@@ -183,15 +238,65 @@ def run_multi_tenant() -> list[dict]:
         "reload_bytes_saved": rr.reload_bytes - ra.reload_bytes,
         "same_tokens": ra.new_tokens == rr.new_tokens,
     })
+
+    # -- streaming granularity at equal HBM budget -----------------------
+    sreps = {}
+    for stream in ("model", "layer"):
+        rep, plan = _run_pool(cfgs, params, trace, base_cfg,
+                              "reload_aware", stream)
+        sreps[stream] = rep
+        rows.append(_pool_row(rep, plan, f"serve_pool_stream_{stream}"))
+    lay, mod = sreps["layer"], sreps["model"]
+    fam = {arch: cfgs[arch].family for arch, _ in ZOO}
+
+    def fam_tps(rep, arch):
+        """Family-resolved tokens/step: a family's tokens over the steps
+        it cannot avoid — the shared decode+prefill denominator plus the
+        stalls ATTRIBUTED to its own activations (so one family's
+        regression is visible even when the global totals improve)."""
+        denom = (rep.decode_steps + rep.prefill_equiv_steps
+                 + rep.stall_steps_by_model[arch])
+        return rep.model_tokens[arch] / max(denom, 1e-9)
+
+    rows.append({
+        "name": "serve_pool_overlap",
+        "same_tokens": lay.new_tokens == mod.new_tokens,
+        "stall_steps_layer": lay.stall_steps,
+        "stall_steps_model": mod.stall_steps,
+        "tokens_per_step_ratio": round(
+            lay.tokens_per_step / mod.tokens_per_step, 3),
+        "families_with_fewer_stalls": sorted(
+            fam[a] for a, _ in ZOO
+            if lay.stall_steps_by_model[a] < mod.stall_steps_by_model[a]),
+        "families_with_better_tokens_per_step": sorted(
+            fam[a] for a, _ in ZOO if fam_tps(lay, a) > fam_tps(mod, a)),
+    })
+
+    # -- budget x slab frontier ------------------------------------------
+    budgets = SMOKE_BUDGETS_KIB if frontier == "smoke" \
+        else FRONTIER_BUDGETS_KIB
+    slabs = SMOKE_SLABS if frontier == "smoke" else FRONTIER_SLABS
+    for budget_kib in budgets:
+        for slab in slabs:
+            for stream in ("model", "layer"):
+                rep, plan = _run_pool(
+                    cfgs, params, trace,
+                    _pool_cfg(budget_kib, slab, reload_bps),
+                    "reload_aware", stream)
+                row = _pool_row(
+                    rep, plan,
+                    f"serve_pool_frontier/b{budget_kib}_s{slab}_{stream}")
+                row.update(budget_kib=budget_kib, slab_frac=slab)
+                rows.append(row)
     return rows
 
 
-def run(scenario: str = "all") -> list[dict]:
+def run(scenario: str = "all", frontier: str = "full") -> list[dict]:
     rows = []
     if scenario in ("all", "engine_vs_static"):
         rows += run_engine_vs_static()
     if scenario in ("all", "multi_tenant"):
-        rows += run_multi_tenant()
+        rows += run_multi_tenant(frontier)
     return rows
 
 
@@ -201,9 +306,13 @@ def check(rows) -> None:
     if speedups:                        # engine_vs_static scenario present
         assert len(speedups) == len(ARCHS)
         for r in speedups:
-            assert r["tokens_per_step_ratio"] >= 2.0, \
-                f"{r['name']}: engine only {r['tokens_per_step_ratio']}x " \
-                "over static on decode tokens/step"
+            assert r["decode_tokens_per_step_ratio"] >= 2.0, \
+                f"{r['name']}: engine only " \
+                f"{r['decode_tokens_per_step_ratio']}x over static on " \
+                "decode tokens/step"
+            assert r["tokens_per_step_ratio"] > 1.0, \
+                f"{r['name']}: engine not ahead once prefill compute " \
+                f"is priced (ratio {r['tokens_per_step_ratio']})"
             if r["paged"]:
                 assert r["kv_bytes_ratio"] > 1.0, \
                     f"{r['name']}: paged cache not smaller than dense " \
@@ -221,6 +330,29 @@ def check(rows) -> None:
             f"(ratio {r['tokens_per_step_ratio']})"
         assert r["reload_bytes_saved"] > 0, \
             "reload-aware must move strictly fewer weight-reload bytes"
+        # layer-granular overlapped streaming at equal HBM budget
+        (ov,) = [x for x in rows if x["name"] == "serve_pool_overlap"]
+        assert ov["same_tokens"], "streams must generate the same tokens"
+        assert ov["stall_steps_layer"] < ov["stall_steps_model"], \
+            "overlapped streaming must strictly reduce stall steps"
+        assert ov["tokens_per_step_ratio"] > 1.0, \
+            f"overlapped streaming not ahead on tokens/step " \
+            f"(ratio {ov['tokens_per_step_ratio']})"
+        assert len(ov["families_with_fewer_stalls"]) >= 2, \
+            f"stall reduction only in {ov['families_with_fewer_stalls']}"
+        assert len(ov["families_with_better_tokens_per_step"]) >= 2, \
+            "tokens/step gain must cover >= 2 families"
+        frontier = [x for x in rows
+                    if x["name"].startswith("serve_pool_frontier/")]
+        assert frontier, "budget x slab frontier rows missing"
+        for f in frontier:              # overlap never loses stall steps
+            twin = next(x for x in frontier
+                        if x["budget_kib"] == f["budget_kib"]
+                        and x["slab_frac"] == f["slab_frac"]
+                        and x["stream"] != f["stream"])
+            if f["stream"] == "layer":
+                assert f["stall_steps"] <= twin["stall_steps"], \
+                    f"{f['name']}: layer streaming stalled more"
 
 
 if __name__ == "__main__":
@@ -230,8 +362,12 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all",
                     choices=("all", "engine_vs_static", "multi_tenant"))
+    ap.add_argument("--frontier", default="full",
+                    choices=("full", "smoke"),
+                    help="budget x slab sweep size (smoke: one point, "
+                         "for CI)")
     args = ap.parse_args()
-    rows = run(args.scenario)
+    rows = run(args.scenario, args.frontier)
     for r in rows:
         print(json.dumps(r))
     check(rows)

@@ -9,8 +9,11 @@ backend yet and runs through the static lockstep path for contrast.
 
 The finale packs all three engine families into ONE shared HBM pool
 (runtime.ModelPool): weights are bin-packed resident/streamed/evicted,
-and the same interleaved trace is served reload-aware vs naive
-round-robin swapping to show the scheduling economics.
+and the same interleaved trace is served three ways — reload-aware with
+layer-granular overlapped streaming (per-layer schedule prefetched
+behind compute, stalls only on prefetch misses), reload-aware with
+model-granular serial reloads, and naive round-robin swapping — to show
+the scheduling economics.
 
     python examples/serve_decode.py        (installed via pyproject)
     PYTHONPATH=src python examples/serve_decode.py
@@ -79,20 +82,22 @@ def main():
     trace = multi_tenant_trace(tenants, 24, mean_interarrival=0.3,
                                prompt_lens=(8, 16), gen_lens=(4, 8, 24),
                                seed=0)
-    for policy in ("reload_aware", "round_robin"):
+    for policy, stream in (("reload_aware", "layer"),
+                           ("reload_aware", "model"),
+                           ("round_robin", "model")):
         pool = ModelPool(pcfg)
         for arch in ENGINE_ARCHS:
             pool.register(arch, cfgs[arch],
                           demand=2.0 if cfgs[arch].family == "dense" else 1.0)
         plan = pool.pack()
-        if policy == "reload_aware":
+        if (policy, stream) == ("reload_aware", "layer"):
             print(json.dumps(plan.summary(), indent=1))
         ecfg = PoolEngineConfig(num_slots=6, page_size=8, num_pages=65,
                                 max_pages_per_seq=8, prefill_bucket=8,
-                                policy=policy)
+                                policy=policy, stream=stream)
         rep = PooledEngine(pool, params, ecfg).run(copy.deepcopy(trace))
         s = rep.summary()
-        print(f"{policy}: tokens/step={s['tokens_per_step']} "
+        print(f"{policy}/{stream}: tokens/step={s['tokens_per_step']} "
               f"reload_bytes={s['reload_bytes']} "
               f"stalls={s['stall_steps']} evictions={s['evictions']}")
     return 0

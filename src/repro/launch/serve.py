@@ -11,7 +11,11 @@ zoo (``--zoo arch[:share],..``) from one shared HBM budget: the
 runtime.ModelPool bin-packs each model's weights as resident / streamed /
 evicted and the PooledEngine charges weight reloads when cold models
 activate (``--policy reload_aware`` or the naive ``round_robin`` swap
-baseline).
+baseline). ``--stream layer`` (default) streams a cold model's per-layer
+schedule behind other tenants' decode steps — double-buffered prefetch,
+stalls only on prefetch misses — while ``--stream model`` charges the
+whole reload serially up front; the reload clock defaults to the
+roofline-calibrated DMA bandwidth (``--reload-kib-per-step 0``).
 
 Runs reduced configs end-to-end on CPU (1x1 mesh); the pod-mesh serving
 cells are proven by the dry-run.
@@ -34,7 +38,8 @@ from ..configs import get_config
 from ..models import get_model
 from ..runtime import (ENGINE_FAMILIES, Engine, EngineConfig, ModelPool,
                        PoolConfig, PoolEngineConfig, PooledEngine,
-                       multi_tenant_trace, poisson_trace, vlm_extras_fn)
+                       calibrated_reload_bytes_per_step, multi_tenant_trace,
+                       poisson_trace, vlm_extras_fn)
 from . import sharding as sh
 from .mesh import make_host_mesh, make_production_mesh
 from .steps import make_prefill_step, make_serve_step
@@ -148,8 +153,21 @@ def run_pool(args):
     budget = args.hbm_budget_kib * 1024 or 1024 + int(max(
         0.62 * sum(weights.values()) / (1.0 - s),
         max(weights.values()) / s))
+    # 0 -> the roofline-calibrated DMA clock (one clock with the kernel
+    # benches: an engine step is a decode step, reloads cross the slow
+    # DRAM->HBM interface); fallback=0 distinguishes "no roofline
+    # artifacts found" from a genuine calibration
+    reload_bps, label = args.reload_kib_per_step * 1024, ""
+    if not reload_bps:
+        reload_bps = calibrated_reload_bytes_per_step(cfgs.items(),
+                                                      fallback=0)
+        label = " (roofline-calibrated)"
+        if not reload_bps:
+            reload_bps = 8 * 1024
+            label = " (uncalibrated default: no roofline artifacts found)"
+    print(f"reload clock: {reload_bps} B/step{label}")
     pcfg = PoolConfig(hbm_budget_bytes=budget, slab_frac=s,
-                      reload_bytes_per_step=args.reload_kib_per_step * 1024,
+                      reload_bytes_per_step=reload_bps,
                       hysteresis_steps=args.hysteresis)
     pool = ModelPool(pcfg)
     for arch, share in zoo:
@@ -165,7 +183,8 @@ def run_pool(args):
         num_pages=1 + pages_per_seq * args.batch * 2,
         max_pages_per_seq=pages_per_seq, prefill_bucket=page,
         greedy=False, temperature=args.temperature, seed=args.seed,
-        policy=args.policy, rr_quantum=args.rr_quantum)
+        policy=args.policy, rr_quantum=args.rr_quantum,
+        stream=args.stream)
     trace = multi_tenant_trace(
         tenants, args.requests, mean_interarrival=args.mean_interarrival,
         prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
@@ -173,7 +192,8 @@ def run_pool(args):
         seed=args.seed)
     rep = PooledEngine(pool, params, ecfg).run(trace)
     print(f"zoo={args.zoo} mode=pool policy={args.policy} "
-          f"slots={args.batch} requests={args.requests}")
+          f"stream={args.stream} slots={args.batch} "
+          f"requests={args.requests}")
     print(json.dumps(rep.summary(), indent=1))
     done = [r for r in rep.completed if not r.truncated]
     for r in done[:3]:
@@ -195,12 +215,18 @@ def main(argv=None):
                     help="pool mode model-zoo spec: arch[:share],..")
     ap.add_argument("--policy", default="reload_aware",
                     choices=("reload_aware", "round_robin"))
+    ap.add_argument("--stream", default="layer",
+                    choices=("layer", "model"),
+                    help="reload granularity: 'layer' overlaps the "
+                         "per-layer schedule behind compute, 'model' "
+                         "charges the whole reload as serial stalls")
     ap.add_argument("--hbm-budget-kib", type=int, default=0,
                     help="pool HBM budget (0 -> auto-size from the zoo)")
     ap.add_argument("--slab-frac", type=float, default=0.5,
                     help="pool budget fraction reserved for weight swaps")
-    ap.add_argument("--reload-kib-per-step", type=int, default=8,
-                    help="weight-reload bandwidth in KiB per engine step")
+    ap.add_argument("--reload-kib-per-step", type=int, default=0,
+                    help="weight-reload bandwidth in KiB per engine step "
+                         "(0 -> calibrate from the roofline decode cells)")
     ap.add_argument("--hysteresis", type=int, default=32,
                     help="min steps a model stays hot before eviction")
     ap.add_argument("--rr-quantum", type=int, default=16,

@@ -2,9 +2,9 @@
 
 from .mxu_pack import (ChunkPlacement, PackedLayout, WeightMatrix,
                        pack_canvas)
-from .residency import (Decision, ParamTensor, ResidencyPlan, plan_residency,
-                        weight_inventory)
+from .residency import (Decision, LayerSlice, ParamTensor, ResidencyPlan,
+                        layer_schedule, plan_residency, weight_inventory)
 
 __all__ = ["ChunkPlacement", "PackedLayout", "WeightMatrix", "pack_canvas",
-           "Decision", "ParamTensor", "ResidencyPlan", "plan_residency",
-           "weight_inventory"]
+           "Decision", "LayerSlice", "ParamTensor", "ResidencyPlan",
+           "layer_schedule", "plan_residency", "weight_inventory"]

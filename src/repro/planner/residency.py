@@ -94,6 +94,50 @@ def weight_inventory(cfg) -> list[ParamTensor]:
 
 
 @dataclasses.dataclass(frozen=True)
+class LayerSlice:
+    """One forward-order slice of a model's serving weight copy — the unit
+    of layer-granular streaming (fetch slice k+1 while slice k computes,
+    the paper's folded-tile pipelining at serving scale)."""
+    name: str
+    nbytes: int
+
+
+def layer_schedule(cfg, param_bytes: int = 2,
+                   include: frozenset[str] | set[str] | None = None,
+                   ) -> tuple[LayerSlice, ...]:
+    """Ordered per-layer byte schedule of the serving weight copy.
+
+    The schedule always has ``2 + cfg.num_layers`` slices — a leading
+    ``embed`` slice (embedding table, plus the encoder stack for enc-dec
+    models: both are consumed before the first decode layer), one slice
+    per decode layer (every layer-stacked tensor split evenly, remainder
+    bytes spread over the leading layers so totals conserve exactly),
+    and a trailing ``head`` slice (untied lm_head). ``include`` restricts
+    the schedule to a subset of ``weight_inventory`` tensor names while
+    keeping the slice structure aligned, so a pinned-tensor subset can be
+    subtracted slice-by-slice from the full schedule.
+    """
+    inv = weight_inventory(cfg)
+    if include is not None:
+        inv = [t for t in inv if t.name in include]
+    L = cfg.num_layers
+    lead = tail = per_layer = 0
+    for t in inv:
+        b = param_bytes * t.params
+        if t.name in ("embed", "encoder"):
+            lead += b
+        elif t.name == "lm_head":
+            tail += b
+        else:
+            per_layer += b
+    base, rem = divmod(per_layer, L)
+    return (LayerSlice("embed", lead),
+            *(LayerSlice(f"layer{i:02d}", base + (1 if i < rem else 0))
+              for i in range(L)),
+            LayerSlice("head", tail))
+
+
+@dataclasses.dataclass(frozen=True)
 class Decision:
     tensor: ParamTensor
     mode: str                       # "resident" | "streamed"

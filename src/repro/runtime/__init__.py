@@ -4,21 +4,23 @@ training supervisor."""
 
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
                      PoolEngineConfig, PooledEngine, PooledReport,
-                     make_sampler, run_static, vlm_extras_fn)
+                     make_sampler, partition_pages, run_static,
+                     vlm_extras_fn)
 from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
                               TrainingSupervisor)
 from .kv_pager import TRASH_PAGE, PageAllocator, PagerConfig
 from .model_pool import (ModelEntry, ModelPool, PoolConfig, PoolError,
-                         PoolPlan, model_weight_bytes)
+                         PoolPlan, calibrated_reload_bytes_per_step,
+                         model_weight_bytes)
 from .scheduler import (MultiQueueScheduler, Request, Scheduler,
                         multi_tenant_trace, poisson_trace)
 
 __all__ = ["Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
            "PooledEngine", "PoolEngineConfig", "PooledReport",
            "run_static", "make_sampler", "vlm_extras_fn",
-           "PageAllocator", "PagerConfig", "TRASH_PAGE",
+           "PageAllocator", "PagerConfig", "TRASH_PAGE", "partition_pages",
            "ModelPool", "ModelEntry", "PoolConfig", "PoolError", "PoolPlan",
-           "model_weight_bytes",
+           "model_weight_bytes", "calibrated_reload_bytes_per_step",
            "Request", "Scheduler", "MultiQueueScheduler",
            "poisson_trace", "multi_tenant_trace",
            "ElasticConfig", "RunReport", "StepTimeout",

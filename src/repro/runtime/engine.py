@@ -92,6 +92,7 @@ class EngineReport:
     slot_steps: int = 0                # actual batch width summed per step
     useful_slot_steps: int = 0
     prefill_calls: int = 0
+    prefill_tokens: int = 0            # computed (padded) prefill tokens
     preemptions: int = 0
     completed: list[Request] = dataclasses.field(default_factory=list)
     peak_live_pages: int = 0
@@ -105,11 +106,27 @@ class EngineReport:
         return sum(len(r.generated) for r in self.completed)
 
     @property
-    def tokens_per_step(self) -> float:
-        """Decode utilization: generated tokens per batched decode step.
-        The structural throughput metric — wall-clock tokens/s is this
-        times steps/s, and steps cost the same for engine and baseline."""
+    def prefill_equiv_steps(self) -> float:
+        """Prefill compute in decode-step units: a decode step advances up
+        to ``num_slots`` tokens on the same fabric, so T computed prefill
+        tokens occupy ~T/num_slots steps. Re-prefill after preemption
+        counts again — restarted work is priced, not free."""
+        return self.prefill_tokens / max(self.num_slots, 1)
+
+    @property
+    def decode_tokens_per_step(self) -> float:
+        """Decode-only utilization: generated tokens per batched decode
+        step (the PR-1 slot-recycling claim is stated on this metric)."""
         return self.new_tokens / max(self.decode_steps, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        """Structural throughput: generated tokens per decode-equivalent
+        step of fabric time, prefill compute included in the denominator
+        (see prefill_equiv_steps). Wall-clock tokens/s is this times
+        steps/s, and steps cost the same for engine and baseline."""
+        return self.new_tokens / max(
+            self.decode_steps + self.prefill_equiv_steps, 1.0)
 
     @property
     def wasted_slot_fraction(self) -> float:
@@ -133,7 +150,9 @@ class EngineReport:
             "requests": len(self.completed),
             "new_tokens": self.new_tokens,
             "decode_steps": self.decode_steps,
+            "prefill_tokens": self.prefill_tokens,
             "tokens_per_step": round(self.tokens_per_step, 3),
+            "decode_tokens_per_step": round(self.decode_tokens_per_step, 3),
             "wasted_slot_fraction": round(self.wasted_slot_fraction, 3),
             "kv_bytes_peak": self.kv_bytes_peak,
             "preemptions": self.preemptions,
@@ -358,6 +377,9 @@ class Engine:
                         sched.pop_ready()
                         logits = self.backend.prefill(ctx, req.extras, s)
                     rep.prefill_calls += 1
+                    rep.prefill_tokens += (
+                        -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
+                        if paged else len(ctx))
                     req.prefills += 1
                     req.admitted_step = step
                     slots[s] = req
@@ -462,38 +484,60 @@ class PoolEngineConfig(EngineConfig):
     swappable model hot at a time, served in fixed cyclic quanta, with
     every switch evicting the previous occupant (and preempting its
     in-flight slots) regardless of reload cost.
+
+    ``stream`` picks the reload granularity for reload_aware activations:
+    ``model`` charges the whole reload as serial stall steps up front
+    (the PR-2 behaviour); ``layer`` streams the per-layer schedule behind
+    compute (ModelPool.begin_stream — the paper's folded-tile pipelining
+    at serving scale), charging a stall step only when the engine has no
+    decode work to hide the DMA behind. round_robin is model-granular by
+    definition (every switch drops the previous occupant whole).
     """
     policy: str = "reload_aware"       # | "round_robin"
     rr_quantum: int = 16               # steps per round-robin turn
+    stream: str = "model"              # | "layer"
 
     def __post_init__(self):
         super().__post_init__()
         assert self.policy in ("reload_aware", "round_robin")
         assert self.rr_quantum >= 1
+        assert self.stream in ("model", "layer")
 
 
 @dataclasses.dataclass
 class PooledReport(EngineReport):
     """EngineReport plus weight-reload accounting. Reload stalls are
-    serial with compute (§2.2), so they join the throughput denominator:
-    tokens/step counts stalled steps as steps that produced nothing."""
+    serial with compute (§2.2), so they join the throughput denominator
+    alongside prefill-equivalent steps: tokens/step counts stalled steps
+    as steps that produced nothing."""
     policy: str = ""
+    stream: str = ""
     stall_steps: int = 0
     reload_bytes: int = 0
     reload_events: int = 0
     evictions: int = 0
     deferred_activations: int = 0
     model_tokens: dict = dataclasses.field(default_factory=dict)
+    stall_steps_by_model: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def decode_tokens_per_step(self) -> float:
+        return self.new_tokens / max(self.decode_steps + self.stall_steps, 1)
 
     @property
     def tokens_per_step(self) -> float:
-        return self.new_tokens / max(self.decode_steps + self.stall_steps, 1)
+        return self.new_tokens / max(
+            self.decode_steps + self.stall_steps + self.prefill_equiv_steps,
+            1.0)
 
     def summary(self) -> dict:
         s = super().summary()
         s.update({
             "policy": self.policy,
+            "stream": self.stream,
             "stall_steps": self.stall_steps,
+            "stall_steps_by_model": dict(
+                sorted(self.stall_steps_by_model.items())),
             "reload_bytes": self.reload_bytes,
             "reload_events": self.reload_events,
             "evictions": self.evictions,
@@ -503,14 +547,55 @@ class PooledReport(EngineReport):
         return s
 
 
+def partition_pages(num_pages: int, shares: dict[str, float]
+                    ) -> dict[str, int]:
+    """Split a shared page budget into per-tenant sub-ranges.
+
+    ``num_pages`` is the modeled pool budget (counting ONE trash page per
+    paged tenant, since each tenant's device pool carries its own);
+    ``shares`` maps paged tenant id -> demand weight. Returns usable
+    (non-trash) pages per tenant, proportional to demand with the
+    remainder going to the largest fractional parts (ties broken by id
+    for determinism), every tenant getting at least one page. The
+    invariant callers rely on: sum(result[t] + 1) <= num_pages, i.e. the
+    physical device pools never exceed the modeled shared budget.
+    """
+    ids = sorted(shares)
+    usable = num_pages - len(ids)      # one trash page per tenant
+    assert usable >= len(ids), \
+        f"page budget {num_pages} cannot back {len(ids)} paged tenants"
+    total = sum(shares[t] for t in ids)
+    exact = {t: usable * shares[t] / total for t in ids}
+    out = {t: int(exact[t]) for t in ids}
+    left = usable - sum(out.values())
+    # hand leftover pages to the largest fractional remainders
+    for t in sorted(ids, key=lambda t: (-(exact[t] - int(exact[t])), t)):
+        if left <= 0:
+            break
+        out[t] += 1
+        left -= 1
+    # a starved tenant takes its minimum page from the largest holder
+    for t in ids:
+        while out[t] < 1:
+            donor = max(ids, key=lambda d: (out[d], d))
+            assert out[donor] > 1, "unreachable: usable >= len(ids)"
+            out[donor] -= 1
+            out[t] += 1
+    assert sum(v + 1 for v in out.values()) <= num_pages
+    return out
+
+
 class PooledEngine:
     """Continuous batching for a model zoo sharing one accelerator pool.
 
-    Per-model backends (one jitted prefill/decode pair each) share a
-    single logical page pool: the host-side PageAllocator hands out page
-    ids globally, so a burst on one tenant consumes cache capacity that
-    other tenants then compete for — and one slot array spans all
-    tenants, so batch width is a shared resource too.
+    Per-model backends (one jitted prefill/decode pair each) split one
+    modeled page budget: the page-id space is PARTITIONED into per-tenant
+    proportional sub-ranges (partition_pages), each backed by its own
+    device pool and host-side PageAllocator, so the physical backing
+    matches the modeled shared budget instead of every tenant allocating
+    the full pool. Page pressure is tenant-local (a burst on one tenant
+    preempts its own requests, not its neighbours'), while one slot array
+    spans all tenants, so batch width stays a shared resource.
 
     One engine step advances EVERY hot tenant's slots (stationary
     weights of all hot models sit in HBM at once — the packed-canvas
@@ -530,15 +615,30 @@ class PooledEngine:
             pool.pack()
         self.pool = pool
         self.ecfg = ecfg or PoolEngineConfig()
+        paged_shares = {
+            e.model_id: e.demand for e in pool.plan.entries
+            if getattr(ENGINE_FAMILIES.get(e.cfg.family), "paged", False)}
+        self.page_split = (partition_pages(self.ecfg.num_pages, paged_shares)
+                           if paged_shares else {})
         self.backends = {}
+        self._pgr = {}                 # per-tenant pager geometry
         for e in pool.plan.entries:
             backend_cls = ENGINE_FAMILIES.get(e.cfg.family)
             if backend_cls is None:
                 raise ValueError(
                     f"family {e.cfg.family!r} has no engine backend "
                     f"(supported: {sorted(ENGINE_FAMILIES)})")
+            ecfg_t = self.ecfg
+            if e.model_id in self.page_split:
+                # tenant's device pool backs only its sub-range (+ its
+                # own trash page) — physical bytes track the partition
+                ecfg_t = dataclasses.replace(
+                    self.ecfg, num_pages=self.page_split[e.model_id] + 1)
+            self._pgr[e.model_id] = ecfg_t.pager
             self.backends[e.model_id] = backend_cls(
-                e.cfg, params[e.model_id], self.ecfg)
+                e.cfg, params[e.model_id], ecfg_t)
+        assert sum(n + 1 for n in self.page_split.values()) \
+            <= self.ecfg.num_pages, "physical pages exceed the pool budget"
         self.rng = np.random.default_rng(self.ecfg.seed)
         self._sample = make_sampler(self.rng, self.ecfg.greedy,
                                     self.ecfg.temperature)
@@ -546,11 +646,13 @@ class PooledEngine:
     # -- main loop ---------------------------------------------------------
 
     def run(self, requests: list[Request]) -> PooledReport:
-        e, pgr, pool = self.ecfg, self.ecfg.pager, self.pool
-        B, M, page = e.num_slots, pgr.max_pages_per_seq, pgr.page_size
+        e, pool = self.ecfg, self.pool
+        B, M, page = e.num_slots, e.pager.max_pages_per_seq, e.pager.page_size
         order = list(pool.model_ids)
         sched = MultiQueueScheduler(requests)
-        alloc = PageAllocator(e.num_pages)
+        # one allocator per paged tenant, sized to its partition sub-range
+        allocs = {m: PageAllocator(n + 1)
+                  for m, n in self.page_split.items()}
         pool.reset_runtime()
 
         slots: list[Request | None] = [None] * B
@@ -558,15 +660,18 @@ class PooledEngine:
         lengths = np.zeros((B,), np.int32)
         pending = np.zeros((B,), np.int32)
 
-        paged_bytes = [pgr.page_bytes(self.backends[m].cfg)
-                       for m in order if self.backends[m].paged]
         rep = PooledReport(
             name=f"pool/{e.policy}", num_slots=B, policy=e.policy,
-            page_bytes=max(paged_bytes, default=0),
+            stream=e.stream,
+            page_bytes=max(
+                (self._pgr[m].page_bytes(self.backends[m].cfg)
+                 for m in self.page_split), default=0),
             cache_bytes_alloc=sum(
-                pgr.page_bytes(b.cfg) * (e.num_pages - 1) if b.paged
-                else _state_bytes(b.state) for b in self.backends.values()),
-            model_tokens={m: 0 for m in order})
+                self._pgr[m].page_bytes(b.cfg) * self.page_split[m]
+                if b.paged else _state_bytes(b.state)
+                for m, b in self.backends.items()),
+            model_tokens={m: 0 for m in order},
+            stall_steps_by_model={m: 0 for m in order})
         t_run = time.monotonic()
         step = 0
         rr_current: str | None = None
@@ -578,7 +683,8 @@ class PooledEngine:
             page_table[s, :] = TRASH_PAGE
             lengths[s] = 0
             pending[s] = 0
-            alloc.free_owner(req.rid)   # no-op for non-paged tenants
+            if req.model_id in allocs:
+                allocs[req.model_id].free_owner(req.rid)
             self.backends[req.model_id].release_slot(s)
 
         def finish(s: int) -> None:
@@ -599,6 +705,28 @@ class PooledEngine:
         def active_models() -> list[str]:
             got = {r.model_id for r in slots if r is not None}
             return [m for m in order if m in got]
+
+        def pick_admissible(serve: list[str]) -> Request | None:
+            """Earliest ready head whose tenant can admit now. Page
+            pressure is tenant-local (partitioned sub-ranges), so a
+            page-starved tenant waits without blocking its neighbours;
+            heads that can never fit are failed fast along the way."""
+            while True:
+                for req in sched.ready_heads(serve):
+                    if not self.backends[req.model_id].paged:
+                        return req
+                    pgr_t = self._pgr[req.model_id]
+                    ctx_len = len(req.context_tokens)
+                    if not pgr_t.can_ever_fit(len(req.prompt),
+                                              req.max_new_tokens,
+                                              ctx_len, pgr_t.num_pages):
+                        reject(sched.pop_ready(req))
+                        break           # queues changed: rescan heads
+                    if allocs[req.model_id].can_alloc(
+                            pgr_t.pages_for(ctx_len)):
+                        return req
+                else:
+                    return None
 
         while True:
             sched.release_arrivals(step)
@@ -631,6 +759,7 @@ class PooledEngine:
                             pool.evict(m)
                         stall, _ = pool.try_activate(nxt, step)
                         rep.stall_steps += stall
+                        rep.stall_steps_by_model[nxt] += stall
                         step += stall
                         rr_current, rr_left = nxt, e.rr_quantum
                     elif nxt is not None:
@@ -651,19 +780,36 @@ class PooledEngine:
                         if m in active_models()
                         or sched.ready_count(m) > 0)
                     for m in cold:
-                        res = pool.try_activate(m, step, protected)
-                        if res is not None:
-                            stall, _ = res
-                            rep.stall_steps += stall
-                            step += stall
-                            break   # one reload per step: stalls serialize
-                serve = pool.hot_models()
+                        if e.stream == "layer":
+                            # layer-granular: reserve the slab, then let
+                            # the per-layer schedule stream behind compute
+                            # (stalls only surface as prefetch misses,
+                            # charged after the decode section)
+                            if pool.begin_stream(m, step, protected) \
+                                    is not None:
+                                break   # the DMA issues one stream at once
+                        else:
+                            res = pool.try_activate(m, step, protected)
+                            if res is not None:
+                                stall, _ = res
+                                rep.stall_steps += stall
+                                rep.stall_steps_by_model[m] += stall
+                                step += stall
+                                break   # one reload/step: stalls serialize
+                if e.stream == "layer":
+                    # a mid-stream model joins once it heads the serial
+                    # DMA queue and the un-streamed tail fits inside its
+                    # first decode step's own layer walk
+                    serve = [m for m in pool.hot_models()
+                             if pool.decode_ready(m)]
+                else:
+                    serve = pool.hot_models()
 
             # -- admission into free slots -------------------------------
             admitting = True
             for s in range(B):
                 while admitting and slots[s] is None:
-                    req = sched.peek_ready(serve)
+                    req = pick_admissible(serve)
                     if req is None:
                         admitting = False
                         break
@@ -671,17 +817,10 @@ class PooledEngine:
                     ctx = req.context_tokens
                     assert len(ctx) >= 1, "empty prompts are not admissible"
                     if backend.paged:
-                        n_pages = pgr.pages_for(len(ctx))
-                        if not pgr.can_ever_fit(len(req.prompt),
-                                                req.max_new_tokens,
-                                                len(ctx), e.num_pages):
-                            reject(sched.pop_ready(req))
-                            continue
-                        if not alloc.can_alloc(n_pages):
-                            admitting = False   # FCFS: wait for free pages
-                            break
                         sched.pop_ready(req)
-                        pages = alloc.alloc(req.rid, n_pages)
+                        pages = allocs[req.model_id].alloc(
+                            req.rid,
+                            self._pgr[req.model_id].pages_for(len(ctx)))
                         page_table[s, :] = TRASH_PAGE
                         page_table[s, :len(pages)] = pages
                         logits = backend.prefill(ctx, req.extras, pages)
@@ -689,6 +828,9 @@ class PooledEngine:
                         sched.pop_ready(req)
                         logits = backend.prefill(ctx, req.extras, s)
                     rep.prefill_calls += 1
+                    rep.prefill_tokens += (
+                        -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
+                        if backend.paged else len(ctx))
                     req.prefills += 1
                     req.admitted_step = step
                     slots[s] = req
@@ -709,12 +851,14 @@ class PooledEngine:
             # in the same engine step; the naive round-robin baseline only
             # ever holds one swappable tenant hot, so it cannot use this
             # concurrency — that utilization gap is the point.
+            did_compute = False
             if active_models():
                 # page growth / preemption for every paged tenant's slot
                 for s in range(B):
                     if slots[s] is None:
                         continue
-                    if not self.backends[slots[s].model_id].paged:
+                    mid = slots[s].model_id
+                    if not self.backends[mid].paged:
                         continue
                     if lengths[s] % page != 0:
                         continue
@@ -723,14 +867,16 @@ class PooledEngine:
                         slots[s].truncated = True
                         finish(s)
                         continue
-                    while not alloc.can_alloc(1):
-                        # only page-owning slots are useful victims —
-                        # preempting a recurrent tenant frees no pages
-                        paged_active = [
+                    a = allocs[mid]
+                    while not a.can_alloc(1):
+                        # only same-tenant slots are useful victims — the
+                        # page-id space is partitioned, so a neighbour's
+                        # pages can never back this tenant's growth
+                        tenant_active = [
                             (v, slots[v]) for v in range(B)
                             if slots[v] is not None
-                            and self.backends[slots[v].model_id].paged]
-                        victim = Scheduler.pick_victim(paged_active,
+                            and slots[v].model_id == mid]
+                        victim = Scheduler.pick_victim(tenant_active,
                                                        exclude=s)
                         if victim is None or victim[0] == s:
                             preempt(s)
@@ -738,7 +884,7 @@ class PooledEngine:
                         preempt(victim[0])
                     if slots[s] is None:
                         continue
-                    new = alloc.alloc(slots[s].rid, 1)
+                    new = a.alloc(slots[s].rid, 1)
                     page_table[s, pi] = new[0]
 
                 served = 0
@@ -752,8 +898,12 @@ class PooledEngine:
                     act = np.zeros((B,), bool)
                     act[m_slots] = True
                     toks = np.where(act, pending, 0).astype(np.int32)
+                    # page ids are tenant-local: blank out other tenants'
+                    # rows so this backend never gathers past its pool
+                    pt_m = np.where(act[:, None], page_table, TRASH_PAGE)
+                    len_m = np.where(act, lengths, 0).astype(np.int32)
                     t0 = time.monotonic()
-                    logits = backend.decode(toks, page_table, lengths, act)
+                    logits = backend.decode(toks, pt_m, len_m, act)
                     rep.decode_wall_s += time.monotonic() - t0
                     lengths[m_slots] += 1
                     served += len(m_slots)
@@ -766,11 +916,13 @@ class PooledEngine:
                         if req.done:
                             finish(s)
                 if served:
+                    did_compute = True
                     rep.decode_steps += 1
                     rep.slot_steps += B
                     rep.useful_slot_steps += served
-                rep.peak_live_pages = max(rep.peak_live_pages,
-                                          alloc.live_count)
+                rep.peak_live_pages = max(
+                    rep.peak_live_pages,
+                    sum(a.live_count for a in allocs.values()))
             elif not sched.exhausted:
                 nxt = sched.next_arrival()
                 if nxt is not None and nxt > step \
@@ -778,17 +930,28 @@ class PooledEngine:
                     step = nxt          # idle: fast-forward to next arrival
                     continue
                 # ready work exists but is blocked (deferred activation /
-                # page wait): let time pass so hysteresis can expire
+                # page wait / an in-flight layer stream): let time pass
             else:
                 break
+
+            # -- layer-stream progress: one step of DMA bandwidth --------
+            if e.stream == "layer" and pool.streaming:
+                if not did_compute:
+                    # prefetch miss: no decode work hides the DMA, so the
+                    # engine idles a step waiting on the stream head
+                    head = pool.stream_head
+                    rep.stall_steps += 1
+                    rep.stall_steps_by_model[head] += 1
+                pool.stream_tick(pool.pcfg.reload_bytes_per_step)
 
             step += 1
             rr_left -= 1
             if step > e.max_steps:
                 raise RuntimeError("pooled engine exceeded max_steps")
 
-        alloc.check()
-        assert alloc.live_count == 0, "pages leaked past completion"
+        for a in allocs.values():
+            a.check()
+            assert a.live_count == 0, "pages leaked past completion"
         rep.preemptions = sched.preemptions
         rep.reload_bytes = pool.reload_bytes_total
         rep.reload_events = pool.reload_events
@@ -853,6 +1016,7 @@ def run_static(cfg, params, requests: list[Request], *, num_slots: int = 8,
             r.admitted_step = step
             r.generated.append(sample(logits[b]))
         rep.prefill_calls += 1
+        rep.prefill_tokens += plen * len(group)   # padded compute is paid
         rep.cache_bytes_alloc = max(rep.cache_bytes_alloc,
                                     _state_bytes(state))
         for _ in range(gen - 1):        # lockstep drain to the longest

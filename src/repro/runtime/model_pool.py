@@ -28,16 +28,76 @@ ping-ponging weights.
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import statistics
 
-from ..planner.residency import weight_inventory
+from ..planner.residency import layer_schedule, weight_inventory
 
 KiB = 1 << 10
+
+#: DRAM->HBM weight-reload path in bytes/s — deliberately the *off-chip*
+#: clock (bench_roofline.LINK_BW), not HBM bandwidth: reloading a swapped
+#: model crosses the slow interface, which is exactly the §2.2 DRAM
+#: weight-loading term the paper pipelines away.
+DMA_BW_BYTES_PER_S = 50e9
+
+_ROOFLINE_DIR = "benchmarks/artifacts/roofline"
 
 
 def model_weight_bytes(cfg, param_bytes: int = 2) -> int:
     """Serving-copy weight footprint of one model (the quantity the pool
     bin-packs; also what callers should use to size budgets)."""
     return param_bytes * sum(t.params for t in weight_inventory(cfg))
+
+
+def _roofline_decode_step_s(arch_id: str, artifact_dir: str) -> float | None:
+    path = os.path.join(artifact_dir, f"{arch_id}__decode_32k.json")
+    try:
+        with open(path) as f:
+            return float(json.load(f)["step_lower_bound_s"])
+    except (OSError, KeyError, ValueError):
+        return None
+
+
+def calibrated_reload_bytes_per_step(zoo, *, artifact_dir: str | None = None,
+                                     dma_bw: float = DMA_BW_BYTES_PER_S,
+                                     param_bytes: int = 2,
+                                     fallback: int = 8 * KiB) -> int:
+    """One clock for kernel-level and pool-level results.
+
+    An engine step *is* a decode step, whose duration is the roofline
+    lower bound of that arch's decode cell (``bench_roofline``, committed
+    under ``benchmarks/artifacts/roofline``). On that clock the full-size
+    model reloads in ``full_weight_bytes / (dma_bw * step_s)`` engine
+    steps; the serving copy in ``zoo`` (usually a ``.reduced()`` config)
+    is given the *same steps-to-reload*, i.e. its bytes-per-step is
+    ``serving_weight_bytes / steps_full``. The median across the zoo is
+    returned so one DMA clock serves the whole pool; archs without a
+    roofline artifact are skipped, and ``fallback`` is returned when no
+    artifact is found at all.
+
+    ``zoo`` is an iterable of ``(arch_id, serving_cfg)`` pairs.
+    """
+    from ..configs import get_config
+
+    dirs = [artifact_dir] if artifact_dir else [
+        _ROOFLINE_DIR,
+        os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                     "..", "..", "..", _ROOFLINE_DIR)]
+    per_arch = []
+    for arch_id, serving_cfg in zoo:
+        step_s = next((s for d in dirs
+                       if (s := _roofline_decode_step_s(arch_id, d))), None)
+        if step_s is None:
+            continue
+        full_bytes = model_weight_bytes(get_config(arch_id), param_bytes)
+        steps_full = full_bytes / (dma_bw * step_s)
+        per_arch.append(
+            model_weight_bytes(serving_cfg, param_bytes) / steps_full)
+    if not per_arch:
+        return fallback
+    return max(1, int(statistics.median(per_arch)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,11 +146,34 @@ class ModelEntry:
     pinned_bytes: int
     value_per_byte: float
     fits_slab: bool                    # reload working set <= slab
+    layer_bytes: tuple[int, ...] = ()  # full forward-order slice schedule
+    pinned_layer_bytes: tuple[int, ...] = ()   # pinned share per slice
 
     @property
     def reload_bytes(self) -> int:
         """Bytes fetched into the slab on each cold activation."""
         return self.weight_bytes - self.pinned_bytes
+
+    @property
+    def reload_schedule(self) -> tuple[int, ...]:
+        """Per-slice reload bytes in forward order — what a layer-granular
+        activation streams, slice by slice, behind compute."""
+        return tuple(f - p for f, p in zip(self.layer_bytes,
+                                           self.pinned_layer_bytes))
+
+    def hideable_bytes(self, reload_bytes_per_step: int) -> int:
+        """Reload bytes the double-buffered prefetch can hide inside this
+        model's own first decode step: while slice k computes (1/n of a
+        step, worth ``reload_bytes_per_step / n`` DMA bytes), slice k+1
+        streams into the other buffer. Slice 0 can never hide — nothing
+        computes ahead of it — so it is excluded; a slice whose reload
+        exceeds the per-slice compute budget is a prefetch miss and only
+        the covered fraction hides."""
+        sched = self.reload_schedule
+        if not sched:
+            return 0
+        budget = reload_bytes_per_step // len(sched)
+        return sum(min(b, budget) for b in sched[1:])
 
     @property
     def residency(self) -> str:
@@ -153,6 +236,8 @@ class ModelPool:
         self.plan: PoolPlan | None = None
         # runtime state
         self._hot_since: dict[str, int] = {}   # non-resident hot models
+        self._stream_q: list[str] = []         # serial DMA: FIFO of streams
+        self._stream_left: dict[str, int] = {}
         self.slab_used = 0
         self.reload_bytes_total = 0
         self.reload_events = 0
@@ -194,21 +279,30 @@ class ModelPool:
         candidates.sort(key=lambda c: (-c[0], c[1], c[2]))
 
         pinned: dict[str, int] = {mid: 0 for mid in self.model_ids}
+        pinned_names: dict[str, set[str]] = {mid: set()
+                                             for mid in self.model_ids}
         left = self.pcfg.pin_budget_bytes
-        for _score, mid, _name, nbytes in candidates:
+        for _score, mid, name, nbytes in candidates:
             if nbytes <= left:
                 pinned[mid] += nbytes
+                pinned_names[mid].add(name)
                 left -= nbytes
 
         entries = []
         for mid in self.model_ids:
             cfg, demand = self._specs[mid]
             reload = totals[mid] - pinned[mid]
+            full_sched = tuple(s.nbytes for s in layer_schedule(cfg, pb))
+            pin_sched = tuple(s.nbytes for s in layer_schedule(
+                cfg, pb, include=pinned_names[mid]))
+            assert sum(full_sched) == totals[mid]
+            assert sum(pin_sched) == pinned[mid]
             entries.append(ModelEntry(
                 model_id=mid, cfg=cfg, demand=demand,
                 weight_bytes=totals[mid], pinned_bytes=pinned[mid],
                 value_per_byte=values[mid],
-                fits_slab=reload <= self.pcfg.slab_bytes))
+                fits_slab=reload <= self.pcfg.slab_bytes,
+                layer_bytes=full_sched, pinned_layer_bytes=pin_sched))
         self.plan = PoolPlan(tuple(entries), self.pcfg)
         return self.plan
 
@@ -217,6 +311,8 @@ class ModelPool:
     def reset_runtime(self) -> None:
         """Forget the hot set and reload accounting (fresh serving run)."""
         self._hot_since.clear()
+        self._stream_q.clear()
+        self._stream_left.clear()
         self.slab_used = 0
         self.reload_bytes_total = 0
         self.reload_events = 0
@@ -251,8 +347,8 @@ class ModelPool:
         value-per-byte first (the paper's spill order, demand-weighted)."""
         out = []
         for mid, since in self._hot_since.items():
-            if mid in protected:
-                continue
+            if mid in protected or mid in self._stream_left:
+                continue               # never evict a mid-stream reload
             if step - since < self.pcfg.hysteresis_steps:
                 continue
             out.append(mid)
@@ -264,23 +360,19 @@ class ModelPool:
         if since is not None:
             self.slab_used -= self._entry(model_id).reload_bytes
             self.evictions += 1
+        if model_id in self._stream_left:
+            self._stream_q.remove(model_id)
+            del self._stream_left[model_id]
 
-    def try_activate(self, model_id: str, step: int,
-                     protected: frozenset[str] = frozenset(),
-                     ) -> tuple[int, list[str]] | None:
-        """Make ``model_id`` hot, evicting by policy if the slab is full.
-
-        Returns (stall_steps, evicted_model_ids), or None when activation
-        must wait (every eviction candidate is protected or inside its
-        hysteresis window). Already-hot models activate for free.
-        """
-        e = self._entry(model_id)
-        if self.is_hot(model_id):
-            return 0, []
+    def _admit(self, e: ModelEntry, step: int, protected: frozenset[str],
+               ) -> list[str] | None:
+        """Shared activation path: make room (evicting by policy), mark
+        hot, reserve slab space and account the reload bytes. Returns the
+        evicted model ids, or None when activation must wait."""
         if not e.fits_slab:
             raise PoolError(
-                f"{model_id}: reload working set {e.reload_bytes}B exceeds "
-                f"the swap slab ({self.pcfg.slab_bytes}B)")
+                f"{e.model_id}: reload working set {e.reload_bytes}B "
+                f"exceeds the swap slab ({self.pcfg.slab_bytes}B)")
         evicted: list[str] = []
         need = self.slab_used + e.reload_bytes - self.pcfg.slab_bytes
         if need > 0:                   # pick victims before touching state
@@ -295,12 +387,101 @@ class ModelPool:
                 return None
             for v in evicted:
                 self.evict(v)
-        self._hot_since[model_id] = step
+        self._hot_since[e.model_id] = step
         self.slab_used += e.reload_bytes
         if e.reload_bytes:
             self.reload_bytes_total += e.reload_bytes
             self.reload_events += 1
+        return evicted
+
+    def try_activate(self, model_id: str, step: int,
+                     protected: frozenset[str] = frozenset(),
+                     ) -> tuple[int, list[str]] | None:
+        """Model-granular activation: make ``model_id`` hot, evicting by
+        policy if the slab is full; the whole reload is serial with
+        compute. Returns (stall_steps, evicted_model_ids), or None when
+        activation must wait (every eviction candidate is protected or
+        inside its hysteresis window). Already-hot models are free.
+        """
+        e = self._entry(model_id)
+        if self.is_hot(model_id):
+            return 0, []
+        evicted = self._admit(e, step, protected)
+        if evicted is None:
+            return None
         return self.reload_stall_steps(e.reload_bytes), evicted
+
+    # -- layer-granular streaming -------------------------------------------
+
+    def begin_stream(self, model_id: str, step: int,
+                     protected: frozenset[str] = frozenset(),
+                     ) -> list[str] | None:
+        """Layer-granular activation: reserve slab space for the reload
+        working set exactly like ``try_activate``, but charge no up-front
+        stall — the layer slices stream in forward order behind compute
+        (``stream_tick``), and the engine charges a stall step only when
+        it has nothing to overlap the DMA with. The model is hot at once
+        but ``decode_ready`` only when the un-streamed tail fits inside
+        what its own first forward walk can hide (double-buffered
+        prefetch: slice k+1 loads while slice k computes). Returns the
+        evicted model ids, or None when activation must wait."""
+        e = self._entry(model_id)
+        if self.is_hot(model_id):
+            return []
+        evicted = self._admit(e, step, protected)
+        if evicted is None:
+            return None
+        if e.reload_bytes:
+            self._stream_q.append(model_id)
+            self._stream_left[model_id] = e.reload_bytes
+        return evicted
+
+    @property
+    def streaming(self) -> tuple[str, ...]:
+        """In-flight layer streams, FIFO order (the DMA is serial)."""
+        return tuple(self._stream_q)
+
+    @property
+    def stream_head(self) -> str | None:
+        return self._stream_q[0] if self._stream_q else None
+
+    def stream_remaining(self, model_id: str) -> int:
+        return self._stream_left.get(model_id, 0)
+
+    def stream_tick(self, nbytes: int) -> int:
+        """Advance the serial DMA by ``nbytes`` (one engine step's worth
+        of reload bandwidth), head-of-queue first; finished streams are
+        retired. Returns the bytes actually consumed."""
+        used = 0
+        while self._stream_q and nbytes > 0:
+            m = self._stream_q[0]
+            take = min(self._stream_left[m], nbytes)
+            self._stream_left[m] -= take
+            nbytes -= take
+            used += take
+            if self._stream_left[m] == 0:
+                self._stream_q.pop(0)
+                del self._stream_left[m]
+        return used
+
+    def decode_ready(self, model_id: str) -> bool:
+        """Hot AND either fully streamed, or at the HEAD of the serial
+        DMA queue with a tail small enough that the first decode step's
+        own layer walk hides it (slice k's compute covers slice k+1's
+        fetch). A queued stream behind another model's reload can hide
+        nothing — the DMA is busy — so it must wait its turn; the
+        hideable tail itself is still charged by the next stream_tick
+        (hideable < one step of bandwidth by construction), keeping the
+        byte accounting strictly one DMA quantum per engine step."""
+        if not self.is_hot(model_id):
+            return False
+        left = self._stream_left.get(model_id, 0)
+        if left == 0:
+            return True
+        if self._stream_q[0] != model_id:
+            return False
+        e = self._entry(model_id)
+        return left <= e.hideable_bytes(self.pcfg.reload_bytes_per_step)
 
     def summary(self) -> dict:
         return {
@@ -310,4 +491,5 @@ class ModelPool:
             "deferred_activations": self.deferred_activations,
             "slab_used_KiB": round(self.slab_used / KiB, 1),
             "hot": self.hot_models(),
+            "streaming": {m: self._stream_left[m] for m in self._stream_q},
         }

@@ -197,14 +197,20 @@ class MultiQueueScheduler:
         return sum(r.max_new_tokens - len(r.generated)
                    for r in self._ready.get(model_id, ()))
 
-    def peek_ready(self, allowed: Sequence[str]) -> Request | None:
-        """Earliest-arrival ready request among the allowed models."""
+    def ready_heads(self, allowed: Sequence[str]) -> list[Request]:
+        """Queue heads of the allowed models, earliest arrival first.
+        Admission walks this list so a tenant waiting on its own page
+        sub-range does not block its neighbours (FCFS stays per-model)."""
         allowed = set(allowed)
         heads = [q[0] for m, q in self._ready.items()
                  if q and m in allowed]
-        if not heads:
-            return None
-        return min(heads, key=lambda r: (r.arrival, r.rid))
+        heads.sort(key=lambda r: (r.arrival, r.rid))
+        return heads
+
+    def peek_ready(self, allowed: Sequence[str]) -> Request | None:
+        """Earliest-arrival ready request among the allowed models."""
+        heads = self.ready_heads(allowed)
+        return heads[0] if heads else None
 
     def pop_ready(self, req: Request) -> Request:
         got = self._ready[req.model_id].popleft()

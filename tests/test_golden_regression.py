@@ -2,10 +2,11 @@
 
 ``tests/golden/*.json`` hold committed outputs of the Fig. 8 mapping
 comparison (all four MLPerf Tiny workloads) and the Fig. 9 (D_h, D_m)
-sweep (the fast workloads — mobilenet's 30s sweep is covered by the
-benchmark harness, not tier-1). Cost-model or packer refactors that move
-any EDP / energy / latency number, any min_D_m, or a fold/stream count
-fail here instead of silently drifting the reproduction.
+sweep — the fast workloads in one pin, mobilenet's ~1 min sweep in its
+own file (the slowest tier-1 test; every workload is now pinned).
+Cost-model or packer refactors that move any EDP / energy / latency
+number, any min_D_m, or a fold/stream count fail here instead of
+silently drifting the reproduction.
 
 Regenerate intentionally (after a reviewed change in semantics) with:
 
@@ -17,6 +18,9 @@ Regenerate intentionally (after a reviewed change in semantics) with:
         json.dumps(f8.run(), indent=1) + "\n")
     g.joinpath("bench_fig9_sweep.json").write_text(
         json.dumps(f9.run(workloads=("resnet8", "ds_cnn", "autoencoder")),
+                   indent=1) + "\n")
+    g.joinpath("bench_fig9_mobilenet.json").write_text(
+        json.dumps(f9.run(workloads=("mobilenet_v1_025",)),
                    indent=1) + "\n")
     PY
 """
@@ -64,3 +68,13 @@ def test_fig9_sweep_edp_pinned():
     _compare(f9.run(workloads=FIG9_WORKLOADS), want)
     assert {n.split("/")[1] for n in (r["name"] for r in want)} == \
         set(FIG9_WORKLOADS)
+
+
+def test_fig9_mobilenet_sweep_edp_pinned():
+    """mobilenet's sweep was only guarded by the bench harness check;
+    its EDP / energy / latency numbers are now pinned like the rest."""
+    from benchmarks import bench_fig9_sweep as f9
+    want = json.loads((GOLD / "bench_fig9_mobilenet.json").read_text())
+    _compare(f9.run(workloads=("mobilenet_v1_025",)), want)
+    assert all("/mobilenet_v1_025/" in r["name"] for r in want)
+    assert want, "mobilenet pin must not be empty"

@@ -9,11 +9,11 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.planner.residency import weight_inventory
+from repro.planner.residency import layer_schedule, weight_inventory
 from repro.runtime import (ModelPool, MultiQueueScheduler, PoolConfig,
                            PoolEngineConfig, PoolError, PooledEngine,
-                           Request, multi_tenant_trace, poisson_trace,
-                           vlm_extras_fn)
+                           Request, multi_tenant_trace, partition_pages,
+                           poisson_trace, vlm_extras_fn)
 
 KiB = 1 << 10
 
@@ -88,6 +88,58 @@ def test_pack_is_deterministic():
     mk = lambda: _pool(PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5),
                        demands={"codeqwen1.5-7b": 2.0})
     assert mk().plan.summary() == mk().plan.summary()
+
+
+# --- layer schedule --------------------------------------------------------------
+
+
+def test_layer_schedule_conserves_bytes_and_shape():
+    """The forward-order slice schedule partitions the serving weight
+    copy exactly: embed slice + one slice per decode layer + head slice,
+    byte-conserving for every family (including the remainder spread)."""
+    for arch in ("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b",
+                 "olmoe-1b-7b", "recurrentgemma-9b", "whisper-tiny"):
+        cfg = get_config(arch)
+        sched = layer_schedule(cfg)
+        assert len(sched) == 2 + cfg.num_layers, arch
+        assert sched[0].name == "embed" and sched[-1].name == "head"
+        total = 2 * sum(t.params for t in weight_inventory(cfg))
+        assert sum(s.nbytes for s in sched) == total, arch
+        assert all(s.nbytes >= 0 for s in sched)
+        # layer slices are even up to the remainder spread
+        layer_b = [s.nbytes for s in sched[1:-1]]
+        assert max(layer_b) - min(layer_b) <= 1, arch
+
+
+def test_layer_schedule_include_subset_aligns():
+    """A tensor-name subset keeps the slice structure aligned so pinned
+    bytes can be subtracted slice-by-slice from the full schedule."""
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    full = layer_schedule(cfg)
+    sub = layer_schedule(cfg, include={"embed", "attn"})
+    assert [s.name for s in sub] == [s.name for s in full]
+    assert all(a.nbytes <= b.nbytes for a, b in zip(sub, full))
+    inv = {t.name: t.params for t in weight_inventory(cfg)}
+    assert sum(s.nbytes for s in sub) == 2 * (inv["embed"] + inv["attn"])
+    assert sub[0].nbytes == 2 * inv["embed"]    # embed leads the forward
+    assert sub[-1].nbytes == 0                  # lm_head not included
+
+
+def test_pack_builds_aligned_reload_schedules():
+    """Every packed entry carries a per-slice schedule whose pinned part
+    and streamed remainder both conserve the tensor-level accounting."""
+    pool = _pool(PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5),
+                 demands={"codeqwen1.5-7b": 2.0})
+    for e in pool.plan.entries:
+        assert sum(e.layer_bytes) == e.weight_bytes
+        assert sum(e.pinned_layer_bytes) == e.pinned_bytes
+        assert sum(e.reload_schedule) == e.reload_bytes
+        assert all(0 <= p <= f for p, f in zip(e.pinned_layer_bytes,
+                                               e.layer_bytes))
+        # the hideable window never covers the slice-0 lead
+        bw = pool.pcfg.reload_bytes_per_step
+        assert e.hideable_bytes(bw) <= max(
+            e.reload_bytes - e.reload_schedule[0], 0)
 
 
 # --- activation / eviction / hysteresis -----------------------------------------
@@ -320,6 +372,139 @@ def test_pooled_engine_rejects_unknown_model_id():
     rep = PooledEngine(pool, params, POOL_ECFG).run(reqs)
     got = {r.rid: r.truncated for r in rep.completed}
     assert got == {0: False, 1: True}
+
+
+# --- layer-granular streaming ----------------------------------------------------
+
+
+def test_begin_stream_reserves_slab_and_ticks_to_ready():
+    """begin_stream reserves the working set like try_activate but charges
+    no up-front stall: the model is hot yet not decode-ready until the
+    serial DMA has streamed all but the hideable tail."""
+    pool = _all_evicted_pool({})
+    bw = pool.pcfg.reload_bytes_per_step
+    e = pool.plan.entry("codeqwen1.5-7b")
+    assert pool.begin_stream("codeqwen1.5-7b", step=0) == []
+    assert pool.is_hot("codeqwen1.5-7b")
+    assert pool.slab_used == e.reload_bytes
+    assert pool.reload_bytes_total == e.reload_bytes
+    assert pool.stream_head == "codeqwen1.5-7b"
+    assert not pool.decode_ready("codeqwen1.5-7b")
+    ticks = 0
+    while not pool.decode_ready("codeqwen1.5-7b"):
+        assert pool.stream_tick(bw) > 0
+        ticks += 1
+    # never slower than the model-granular serial stall
+    assert ticks <= pool.reload_stall_steps(e.reload_bytes)
+    # the hideable tail is below one step of bandwidth by construction,
+    # so the decode step's own tick retires the stream
+    assert pool.stream_remaining("codeqwen1.5-7b") <= bw
+    pool.stream_tick(bw)
+    assert pool.stream_head is None
+    # re-activating a hot model is free and registers no new stream
+    assert pool.begin_stream("codeqwen1.5-7b", step=5) == []
+    assert not pool.streaming
+
+
+def test_streams_are_serial_and_streaming_models_not_evictable():
+    pool = _all_evicted_pool({})
+    bw = pool.pcfg.reload_bytes_per_step
+    assert pool.begin_stream("codeqwen1.5-7b", step=0) == []
+    assert pool.begin_stream("qwen2-vl-7b", step=0) == []
+    assert pool.streaming == ("codeqwen1.5-7b", "qwen2-vl-7b")
+    before = pool.stream_remaining("qwen2-vl-7b")
+    pool.stream_tick(bw)
+    # serial DMA: the queued stream makes no progress behind the head,
+    # and can never be decode-ready while the DMA serves another model
+    assert pool.stream_remaining("qwen2-vl-7b") == before
+    assert pool.stream_remaining("codeqwen1.5-7b") < \
+        pool.plan.entry("codeqwen1.5-7b").reload_bytes
+    assert not pool.decode_ready("qwen2-vl-7b")
+    # mid-stream models are never eviction victims, even past hysteresis
+    assert pool.evictable(step=10_000) == []
+    # evicting explicitly clears the stream state
+    pool.evict("qwen2-vl-7b")
+    assert pool.streaming == ("codeqwen1.5-7b",)
+    assert pool.stream_remaining("qwen2-vl-7b") == 0
+
+
+def test_pooled_engine_overlap_never_more_stalls_and_wins_contended():
+    """Acceptance regression: on the same trace, layer-granular overlapped
+    streaming never reports MORE stall steps than model-granular, and
+    under multi-tenant contention it strictly reduces them and improves
+    tokens/step."""
+    cfgs, params, tenants = _zoo_setup(
+        archs=("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b"))
+    pcfg = PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5,
+                      reload_bytes_per_step=16 * KiB, hysteresis_steps=32)
+    trace = multi_tenant_trace(tenants, 16, mean_interarrival=0.3,
+                               prompt_lens=(6, 10), gen_lens=(4, 8, 16),
+                               seed=5)
+    reps = {}
+    for stream in ("model", "layer"):
+        pool = ModelPool(pcfg)
+        for a, c in cfgs.items():
+            pool.register(a, c, demand=2.0 if c.family == "dense" else 1.0)
+        ecfg = PoolEngineConfig(num_slots=6, page_size=8, num_pages=65,
+                                max_pages_per_seq=8, prefill_bucket=8,
+                                stream=stream)
+        reps[stream] = PooledEngine(pool, params, ecfg).run(
+            copy.deepcopy(trace))
+    lay, mod = reps["layer"], reps["model"]
+    assert lay.new_tokens == mod.new_tokens
+    assert mod.stall_steps > 0, "trace must exercise cold activations"
+    assert lay.stall_steps <= mod.stall_steps
+    assert lay.stall_steps < mod.stall_steps
+    assert lay.tokens_per_step > mod.tokens_per_step
+    for m in mod.stall_steps_by_model:
+        assert lay.stall_steps_by_model[m] <= mod.stall_steps_by_model[m]
+
+
+# --- per-tenant page partition ---------------------------------------------------
+
+
+def test_partition_pages_proportional_and_within_budget():
+    got = partition_pages(97, {"a": 2.0, "b": 1.0})
+    assert sum(n + 1 for n in got.values()) <= 97
+    assert got["a"] > got["b"] >= 1
+    # single tenant takes the whole budget minus its trash page
+    assert partition_pages(33, {"solo": 1.0}) == {"solo": 32}
+    # everyone gets at least one usable page
+    tiny = partition_pages(7, {"a": 100.0, "b": 1.0, "c": 1.0})
+    assert all(n >= 1 for n in tiny.values())
+    assert sum(n + 1 for n in tiny.values()) <= 7
+
+
+def test_pooled_engine_physical_pages_match_modeled_budget():
+    """The PR-2 bug: every paged tenant allocated a full num_pages device
+    pool. Partitioned sub-ranges must keep the total physical backing
+    (incl. per-tenant trash pages) within the modeled shared budget."""
+    cfgs, params, tenants = _zoo_setup(
+        archs=("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b"))
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=2 << 20, slab_frac=0.25))
+    for a, c in cfgs.items():
+        pool.register(a, c, demand=2.0 if c.family == "dense" else 1.0)
+    ecfg = PoolEngineConfig(num_slots=4, page_size=8, num_pages=49,
+                            max_pages_per_seq=8, prefill_bucket=8)
+    eng = PooledEngine(pool, params, ecfg)
+    phys = 0
+    for m, b in eng.backends.items():
+        if not b.paged:
+            continue
+        pool_pages = b.state.k_pages.shape[2]     # (L, KV, P, page, dh)
+        assert pool_pages == eng.page_split[m] + 1
+        phys += pool_pages
+    assert phys <= ecfg.num_pages, \
+        f"physical pages {phys} exceed modeled budget {ecfg.num_pages}"
+    # demand-proportional: the demand-2 dense tenant gets the larger range
+    assert eng.page_split["codeqwen1.5-7b"] > eng.page_split["qwen2-vl-7b"]
+    # and the partitioned engine still serves every tenant to completion
+    trace = multi_tenant_trace(tenants, 9, mean_interarrival=0.5,
+                               prompt_lens=(6, 10), gen_lens=(3, 6), seed=6)
+    rep = eng.run(copy.deepcopy(trace))
+    assert len(rep.completed) == 9
+    assert all(not r.truncated for r in rep.completed)
+    assert rep.peak_live_pages <= sum(eng.page_split.values())
 
 
 def test_pooled_engine_rejects_unservable_tenant():

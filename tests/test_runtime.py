@@ -252,8 +252,46 @@ def test_engine_vs_static_structural_win():
     sta = run_static(cfg, params, copy.deepcopy(trace), num_slots=4)
     assert eng.new_tokens == sta.new_tokens
     assert eng.tokens_per_step > sta.tokens_per_step
+    assert eng.decode_tokens_per_step > sta.decode_tokens_per_step
     assert eng.kv_bytes_peak < sta.kv_bytes_peak
     assert eng.wasted_slot_fraction < sta.wasted_slot_fraction
+
+
+def test_tokens_per_step_prices_prefill_compute():
+    """The corrected structural metric folds prefill compute into the
+    denominator at decode-equivalent throughput, so the decode-only
+    metric strictly upper-bounds it whenever any prefill ran."""
+    cfg, params = _dense_setup()
+    trace = poisson_trace(8, mean_interarrival=0.4, prompt_lens=(6, 10),
+                          gen_lens=(3, 6), vocab_size=cfg.vocab_size,
+                          seed=4)
+    rep = Engine(cfg, params, ECFG).run(copy.deepcopy(trace))
+    # paged prefill computes bucket-padded tokens, once per admission
+    min_bucketed = sum(-(-len(r.prompt) // ECFG.prefill_bucket)
+                       * ECFG.prefill_bucket for r in trace)
+    assert rep.prefill_tokens >= min_bucketed
+    assert rep.prefill_equiv_steps == pytest.approx(
+        rep.prefill_tokens / ECFG.num_slots)
+    assert rep.tokens_per_step == pytest.approx(
+        rep.new_tokens / (rep.decode_steps + rep.prefill_equiv_steps))
+    assert rep.tokens_per_step < rep.decode_tokens_per_step
+
+
+def test_preemption_reprefill_is_priced():
+    """Re-prefill after preemption must enlarge the prefill-token
+    denominator: restarted work is paid for, not free."""
+    cfg, params = _dense_setup()
+    trace = poisson_trace(8, mean_interarrival=0.2, prompt_lens=(8, 16),
+                          gen_lens=(24, 40), vocab_size=cfg.vocab_size,
+                          seed=1)
+    tiny = EngineConfig(num_slots=4, page_size=8, num_pages=17,
+                        max_pages_per_seq=8, prefill_bucket=8)
+    rep = Engine(cfg, params, tiny).run(copy.deepcopy(trace))
+    assert rep.preemptions > 0
+    first_pass = sum(-(-len(r.prompt) // tiny.prefill_bucket)
+                     * tiny.prefill_bucket for r in trace)
+    assert rep.prefill_calls > len(trace)
+    assert rep.prefill_tokens > first_pass
 
 
 def test_engine_recurrent_backend():
