@@ -13,16 +13,19 @@ and the structural serving metrics are compared:
     dense batch x max_len allocation
   * p50/p95 request latency in engine steps
 
-The ``multi_tenant`` scenario serves three model families from ONE
-shared HBM pool (runtime.ModelPool residency packing) on the same
-interleaved trace, on the roofline-calibrated DMA clock:
+The ``multi_tenant`` scenario serves FIVE model families (dense, vlm,
+ssm, hybrid, MLA-MoE — every pooled cache shape) from ONE shared HBM
+pool (runtime.ModelPool residency packing) on the same interleaved
+trace, on the roofline-calibrated DMA clock:
 
   * activation policies — the reload-aware scheduler must beat naive
-    round-robin swapping on tokens/step AND total weight-reload bytes;
+    round-robin swapping on tokens/step AND total weight-reload bytes,
+    with the hybrid and MoE tenants served through the pooled engine
+    (no static fallback);
   * streaming granularity — layer-granular overlapped streaming
     (double-buffered prefetch behind compute) must strictly reduce stall
-    steps vs model-granular streaming at equal HBM budget, for >= 2 of
-    the 3 families, and improve the family-resolved tokens/step (each
+    steps vs model-granular streaming at equal HBM budget, for >= 2
+    families, and improve the family-resolved tokens/step (each
     family's tokens over shared steps plus its own attributed stalls)
     for >= 2 families;
   * a budget x slab-fraction sweep emits the residency-vs-throughput
@@ -53,8 +56,10 @@ from repro.runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
                            vlm_extras_fn)
 
 # one family per cache shape: dense GQA, M-RoPE vlm backbone, constant-
-# state recurrence
-ARCHS = ("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b")
+# state recurrence, hybrid window ring + recurrence, MoE with an MLA
+# latent-compressed cache
+ARCHS = ("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b",
+         "recurrentgemma-9b", "deepseek-v2-lite-16b")
 
 SLOTS = 8
 N_REQUESTS = 40
@@ -120,7 +125,7 @@ def run_engine_vs_static() -> list[dict]:
                          num_slots=SLOTS)
         rows.append(_row(eng, cfg.family))
         rows.append(_row(sta, cfg.family))
-        rows.append({
+        row = {
             "name": f"serve_{cfg.family}_speedup",
             "arch": cfg.name,
             "tokens_per_step_ratio": round(
@@ -130,7 +135,18 @@ def run_engine_vs_static() -> list[dict]:
             "kv_bytes_ratio": round(
                 sta.kv_bytes_peak / max(eng.kv_bytes_peak, 1), 3),
             "paged": eng.page_bytes > 0,
-        })
+        }
+        if cfg.family == "hybrid":
+            # the hybrid static baseline's ring cache is ALREADY
+            # O(window), so "paged < dense" is not the claim here; the
+            # claim is boundedness — the page ring never exceeds
+            # ring_rows pages/slot no matter how long requests run
+            from repro.models.griffin import ring_rows
+            bound = (SLOTS * ring_rows(cfg.recurrent.window,
+                                       ENGINE_CFG.page_size)
+                     * eng.page_bytes + eng.slot_state_bytes)
+            row["window_bounded"] = eng.kv_bytes_peak <= bound
+        rows.append(row)
     rows.append({"name": "paged_attention_oracle",
                  "max_abs_err": _paged_attention_oracle_err()})
     return rows
@@ -138,17 +154,19 @@ def run_engine_vs_static() -> list[dict]:
 
 # --- multi-tenant pool scenario -------------------------------------------------
 
-# one pool over three cache shapes; dense carries 2x the traffic
-ZOO = (("codeqwen1.5-7b", 2.0), ("qwen2-vl-7b", 1.0), ("rwkv6-7b", 1.0))
-POOL_BUDGET_KIB = 960
+# one pool over all five pooled cache shapes (zoo weights ~1298 KiB at
+# smoke scale); dense carries 2x the traffic
+ZOO = (("codeqwen1.5-7b", 2.0), ("qwen2-vl-7b", 1.0), ("rwkv6-7b", 1.0),
+       ("recurrentgemma-9b", 1.0), ("deepseek-v2-lite-16b", 1.0))
+POOL_BUDGET_KIB = 1600
 POOL_SLAB_FRAC = 0.5
 POOL_N_REQUESTS = 40
 
 # budget x slab-fraction frontier (Fig. 9's yellow trace at serving
 # scale); the smoke variant keeps the single middle point for CI
-FRONTIER_BUDGETS_KIB = (832, 960, 1152)
+FRONTIER_BUDGETS_KIB = (1408, 1600, 1920)
 FRONTIER_SLABS = (0.4, 0.55)
-SMOKE_BUDGETS_KIB = (960,)
+SMOKE_BUDGETS_KIB = (1600,)
 SMOKE_SLABS = (0.55,)
 
 
@@ -313,7 +331,12 @@ def check(rows) -> None:
             assert r["tokens_per_step_ratio"] > 1.0, \
                 f"{r['name']}: engine not ahead once prefill compute " \
                 f"is priced (ratio {r['tokens_per_step_ratio']})"
-            if r["paged"]:
+            if r["paged"] and "window_bounded" in r:
+                # hybrid: the static ring is already O(window); the
+                # paged claim is boundedness, not fewer bytes
+                assert r["window_bounded"], \
+                    f"{r['name']}: window ring exceeded its page bound"
+            elif r["paged"]:
                 assert r["kv_bytes_ratio"] > 1.0, \
                     f"{r['name']}: paged cache not smaller than dense " \
                     f"(ratio {r['kv_bytes_ratio']})"
@@ -323,8 +346,14 @@ def check(rows) -> None:
     pool = [r for r in rows if r["name"] == "serve_pool_speedup"]
     if pool:                            # multi_tenant scenario present
         (r,) = pool
-        assert r["families"] >= 3, "pool must serve >= 3 model families"
+        assert r["families"] >= 5, "pool must serve >= 5 model families"
         assert r["same_tokens"], "policies must generate the same tokens"
+        # hybrid + MoE tenants really flow through the pooled engine
+        (ra_row,) = [x for x in rows
+                     if x["name"] == "serve_pool_reload_aware"]
+        for arch in ("recurrentgemma-9b", "deepseek-v2-lite-16b"):
+            assert ra_row["model_tokens"].get(arch, 0) > 0, \
+                f"{arch} generated no pooled tokens (static fallback?)"
         assert r["tokens_per_step_ratio"] > 1.0, \
             f"reload-aware not ahead on tokens/step " \
             f"(ratio {r['tokens_per_step_ratio']})"

@@ -1,13 +1,14 @@
 """Continuous-batching serving example with a staggered-arrival trace.
 
-Drives runtime.Engine directly across three cache shapes — dense GQA,
-the M-RoPE vlm backbone, and RWKV constant-state recurrence — with
-requests arriving mid-flight, so slots recycle, the paged KV cache
-grows and shrinks with live tokens, and short requests finish without
-waiting for long ones. The MoE+MLA latent-cache family has no engine
-backend yet and runs through the static lockstep path for contrast.
+Drives runtime.Engine directly across five cache shapes — dense GQA,
+the M-RoPE vlm backbone, RWKV constant-state recurrence, the
+recurrentgemma hybrid (window-ring KV + per-slot recurrence) and the
+deepseek MLA latent cache — with requests arriving mid-flight, so slots
+recycle, the paged KV cache grows and shrinks with live tokens, and
+short requests finish without waiting for long ones. GQA-MoE (olmoe)
+has no engine backend and runs the static lockstep path for contrast.
 
-The finale packs all three engine families into ONE shared HBM pool
+The finale packs all five engine families into ONE shared HBM pool
 (runtime.ModelPool): weights are bin-packed resident/streamed/evicted,
 and the same interleaved trace is served three ways — reload-aware with
 layer-granular overlapped streaming (per-layer schedule prefetched
@@ -34,10 +35,11 @@ from repro.runtime import (Engine, EngineConfig, ModelPool,  # noqa: E402
                            multi_tenant_trace, poisson_trace,
                            vlm_extras_fn)
 
-ENGINE_ARCHS = ["codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b"]
-# families without an engine backend keep the static path (MoE + MLA
-# latent cache; RG-LRU + windowed-attention hybrid)
-STATIC_ARCHS = ["deepseek-v2-lite-16b", "recurrentgemma-9b"]
+ENGINE_ARCHS = ["codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b",
+                "recurrentgemma-9b", "deepseek-v2-lite-16b"]
+# families without an engine backend keep the static path (GQA-MoE:
+# per-head KV, not latent-compressed)
+STATIC_ARCHS = ["olmoe-1b-7b"]
 
 
 def main():
@@ -67,7 +69,7 @@ def main():
 
     # -- multi-tenant: the whole zoo from one HBM pool -----------------
     print("\n" + "=" * 60)
-    print("model pool — 3 families, one HBM budget, reload-aware vs naive")
+    print("model pool — 5 families, one HBM budget, reload-aware vs naive")
     cfgs, params, tenants = {}, {}, []
     for arch in ENGINE_ARCHS:
         cfg = get_config(arch).reduced()
@@ -77,7 +79,7 @@ def main():
             model_id=arch, vocab_size=cfg.vocab_size,
             share=2.0 if cfg.family == "dense" else 1.0,
             extras_fn=vlm_extras_fn(cfg) if cfg.family == "vlm" else None))
-    pcfg = PoolConfig(hbm_budget_bytes=960 << 10, slab_frac=0.5,
+    pcfg = PoolConfig(hbm_budget_bytes=1600 << 10, slab_frac=0.5,
                       reload_bytes_per_step=8 << 10, hysteresis_steps=32)
     trace = multi_tenant_trace(tenants, 24, mean_interarrival=0.3,
                                prompt_lens=(8, 16), gen_lens=(4, 8, 24),

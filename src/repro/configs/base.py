@@ -135,10 +135,14 @@ class ModelConfig:
         return int(total - all_experts + active)
 
     def reduced(self) -> "ModelConfig":
-        """Tiny same-family config for CPU smoke tests."""
+        """Tiny same-family config for CPU smoke tests.
+
+        Hybrid archs keep one full (rec, rec, attn) pattern period so the
+        windowed-attention path (and its serving cache) is exercised —
+        two layers would reduce to a pure-recurrence stack."""
         kw: dict = dict(
             name=self.name + "-smoke", family=self.family,
-            num_layers=2, d_model=64,
+            num_layers=3 if self.family == "hybrid" else 2, d_model=64,
             num_heads=4, num_kv_heads=max(1, min(self.num_kv_heads, 2)),
             head_dim=16, d_ff=128, vocab_size=256, norm=self.norm,
             use_bias=self.use_bias, qkv_bias=self.qkv_bias,

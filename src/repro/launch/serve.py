@@ -5,8 +5,9 @@ request state, paged KV cache, slot recycling — against a mixed-length
 Poisson arrival trace. ``--mode static`` is the seed lockstep path kept
 as the measurable baseline: one batch prefills together, decodes in
 unison, and holds a dense cache_len x batch KV cache. ``--mode auto``
-picks the engine when the model family has a backend (dense / vlm / ssm)
-and falls back to static otherwise. ``--mode pool`` serves a whole model
+picks the engine when the model config has a backend (dense / vlm / ssm /
+hybrid / MLA-MoE) and falls back to static otherwise (whisper's enc-dec,
+and GQA-MoE olmoe whose cache is not latent-compressed). ``--mode pool`` serves a whole model
 zoo (``--zoo arch[:share],..``) from one shared HBM budget: the
 runtime.ModelPool bin-packs each model's weights as resident / streamed /
 evicted and the PooledEngine charges weight reloads when cold models
@@ -36,10 +37,10 @@ import numpy as np
 
 from ..configs import get_config
 from ..models import get_model
-from ..runtime import (ENGINE_FAMILIES, Engine, EngineConfig, ModelPool,
-                       PoolConfig, PoolEngineConfig, PooledEngine,
-                       calibrated_reload_bytes_per_step, multi_tenant_trace,
-                       poisson_trace, vlm_extras_fn)
+from ..runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
+                       PoolEngineConfig, PooledEngine,
+                       calibrated_reload_bytes_per_step, engine_backend,
+                       multi_tenant_trace, poisson_trace, vlm_extras_fn)
 from . import sharding as sh
 from .mesh import make_host_mesh, make_production_mesh
 from .steps import make_prefill_step, make_serve_step
@@ -211,7 +212,8 @@ def main(argv=None):
     ap.add_argument("--mode", default="auto",
                     choices=("auto", "engine", "static", "pool"))
     ap.add_argument("--zoo",
-                    default="codeqwen1.5-7b:2,qwen2-vl-7b:1,rwkv6-7b:1",
+                    default="codeqwen1.5-7b:2,qwen2-vl-7b:1,rwkv6-7b:1,"
+                            "recurrentgemma-9b:1,deepseek-v2-lite-16b:1",
                     help="pool mode model-zoo spec: arch[:share],..")
     ap.add_argument("--policy", default="reload_aware",
                     choices=("reload_aware", "round_robin"))
@@ -256,7 +258,7 @@ def main(argv=None):
         cfg = cfg.reduced()
     mode = args.mode
     if mode == "auto":
-        mode = "engine" if cfg.family in ENGINE_FAMILIES else "static"
+        mode = "engine" if engine_backend(cfg) else "static"
 
     with mesh:
         api = get_model(cfg)

@@ -102,24 +102,38 @@ def init_params(cfg, key):
 
 # --- RG-LRU recurrent block ----------------------------------------------------------
 
-def _causal_conv(x, w, b, conv_state):
+def _causal_conv(x, w, b, conv_state, length=None):
     """Depthwise causal conv1d. x: (B,S,W); w: (cw,W); conv_state: (B,cw-1,W)
-    holds the trailing inputs of the previous chunk."""
+    holds the trailing inputs of the previous chunk. ``length`` (traced
+    scalar) gates padded prompts: the carried state is then the window
+    ending at position length-1, not at the padded end."""
     cw = w.shape[0]
     xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
     out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
-    new_state = xp[:, -(cw - 1):] if cw > 1 else conv_state
+    if cw > 1:
+        if length is None:
+            new_state = xp[:, -(cw - 1):]
+        else:       # xp index j holds x position j - (cw-1)
+            new_state = lax.dynamic_slice_in_dim(xp, length, cw - 1, axis=1)
+    else:
+        new_state = conv_state
     return out + b, new_state
 
 
-def _rglru(x, r_gate, i_gate, lam, h0):
-    """RG-LRU scan. x, gates: (B,S,W); h0: (B,W) f32."""
+def _rglru(x, r_gate, i_gate, lam, h0, length=None):
+    """RG-LRU scan. x, gates: (B,S,W); h0: (B,W) f32. ``length`` gates
+    padded positions to identity updates (a=1, input 0), so the carried
+    hidden is the state after exactly ``length`` live tokens."""
     a_log = -LRU_C * jax.nn.softplus(lam.astype(jnp.float32)) \
         * jax.nn.sigmoid(r_gate.astype(jnp.float32))            # (B,S,W) <= 0
     a = jnp.exp(a_log)
     gated = (jax.nn.sigmoid(i_gate.astype(jnp.float32))
              * x.astype(jnp.float32))
     scaled = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * gated
+    if length is not None:
+        live = (jnp.arange(x.shape[1]) < length)[None, :, None]
+        a = jnp.where(live, a, 1.0)
+        scaled = jnp.where(live, scaled, 0.0)
 
     def step(h, xs):
         a_t, s_t = xs
@@ -131,17 +145,19 @@ def _rglru(x, r_gate, i_gate, lam, h0):
     return jnp.moveaxis(hs, 0, 1).astype(x.dtype), h_last
 
 
-def _rec_block(cfg, p, x, state):
+def _rec_block(cfg, p, x, state, length=None):
     """state: dict(conv (B,cw-1,W), h (B,W))."""
     cd = L.COMPUTE_DTYPE
     h_in = L.rmsnorm(x, p["ln"]).astype(cd)
     branch = jax.nn.gelu(h_in @ p["w_branch"].astype(cd))
     xr = h_in @ p["w_x"].astype(cd)
     xr, conv_state = _causal_conv(xr, p["conv_w"].astype(cd),
-                                  p["conv_b"].astype(cd), state["conv"])
+                                  p["conv_b"].astype(cd), state["conv"],
+                                  length=length)
     r_gate = xr @ p["w_r"].astype(cd) + p["b_r"].astype(cd)
     i_gate = xr @ p["w_i"].astype(cd) + p["b_i"].astype(cd)
-    hseq, h_last = _rglru(xr, r_gate, i_gate, p["lam"], state["h"])
+    hseq, h_last = _rglru(xr, r_gate, i_gate, p["lam"], state["h"],
+                          length=length)
     out = (branch * hseq) @ p["w_out"].astype(cd)
     y = x + out.astype(x.dtype)
     y = y + _mlp(p, y).astype(y.dtype)
@@ -257,8 +273,14 @@ def init_decode_state(cfg, batch_size: int, cache_len: int = 0,
 # --- forward (train / prefill) ----------------------------------------------------------
 
 def _super_scan(cfg, params, x, positions, state: GriffinState,
-                *, remat=False, constrain=None, collect_kv=False):
-    """Scan the (rec, rec, attn) super-blocks, then the rec tail."""
+                *, remat=False, constrain=None, collect_kv=False,
+                length=None):
+    """Scan the (rec, rec, attn) super-blocks, then the rec tail.
+
+    ``length`` (traced scalar) gates the recurrent state updates past the
+    live prompt so bucket-padded prefill carries the state at position
+    length-1 (pad keys/values are masked or overwritten by the reader).
+    """
     n_super, n_tail = _counts(cfg)
     B, S, D = x.shape
 
@@ -266,8 +288,9 @@ def _super_scan(cfg, params, x, positions, state: GriffinState,
         xc = carry
         p, conv1, h1, conv2, h2 = xs
         y, st1 = _rec_block(cfg, p["rec1"], xc,
-                            {"conv": conv1, "h": h1})
-        y, st2 = _rec_block(cfg, p["rec2"], y, {"conv": conv2, "h": h2})
+                            {"conv": conv1, "h": h1}, length=length)
+        y, st2 = _rec_block(cfg, p["rec2"], y, {"conv": conv2, "h": h2},
+                            length=length)
         y, kv = _attn_block_full(cfg, p["attn"], y, positions)
         if constrain is not None:
             y = constrain(y)
@@ -287,7 +310,8 @@ def _super_scan(cfg, params, x, positions, state: GriffinState,
     if n_tail:
         def tail_body(carry, xs):
             p, conv, h = xs
-            y, st = _rec_block(cfg, p, carry, {"conv": conv, "h": h})
+            y, st = _rec_block(cfg, p, carry, {"conv": conv, "h": h},
+                               length=length)
             if constrain is not None:
                 y = constrain(y)
             return y, (st["conv"], st["h"])
@@ -411,3 +435,204 @@ def decode_step(cfg, params, state: GriffinState, tokens, *, constrain=None):
     new_state = GriffinState(conv=conv_new, h=h_new, k=k_new, v=v_new,
                              kpos=kp_new, pos=pos + 1)
     return logits, new_state
+
+
+# --- paged-window decode (continuous batching) ------------------------------------
+# The hybrid serving shape: recurrent state is constant per slot (conv +
+# LRU hidden), while the window KV lives in a SHARED page pool addressed
+# through a page-granular ring — token t sits at page (t // page), ring
+# row (t // page) % R with R = ceil(window/page) + 1, so a slot holds at
+# most R pages no matter how long the request runs and the engine
+# recycles the page that falls out of the window on every wrap.
+
+
+def ring_rows(window: int, page_size: int) -> int:
+    """Table rows of the page-granular window ring. R*page covers window
+    + one page of slack, so the page evicted on wrap is always fully out
+    of the attention window (the in-window tail of the oldest page is
+    masked by position arithmetic, not by eviction)."""
+    return -(-window // page_size) + 1
+
+
+@dataclasses.dataclass
+class GriffinPagedState:
+    conv: jax.Array       # (n_rec, B, cw-1, W)
+    h: jax.Array          # (n_rec, B, W) f32
+    k_pages: jax.Array    # (n_attn, KV, P, page, dh); page 0 = trash
+    v_pages: jax.Array
+
+
+jax.tree_util.register_dataclass(
+    GriffinPagedState, data_fields=["conv", "h", "k_pages", "v_pages"],
+    meta_fields=[])
+
+
+def init_paged_decode_state(cfg, num_slots: int, num_pages: int,
+                            page_size: int,
+                            dtype=L.COMPUTE_DTYPE) -> GriffinPagedState:
+    n_rec, n_attn = _state_counts(cfg)
+    W = cfg.recurrent.lru_width or cfg.d_model
+    cw = cfg.recurrent.conv_width
+    k, v = L.paged_cache_init(n_attn, num_pages, page_size,
+                              cfg.num_kv_heads, cfg.head_dim, dtype)
+    return GriffinPagedState(
+        conv=jnp.zeros((n_rec, num_slots, cw - 1, W), dtype),
+        h=jnp.zeros((n_rec, num_slots, W), jnp.float32),
+        k_pages=k, v_pages=v)
+
+
+def paged_prefill(cfg, params, batch, length, *, constrain=None):
+    """Forward a (bucket-padded) B=1 prompt; return the last live token's
+    logits, the raw per-position attention KV for page scatter, and the
+    recurrent state AT ``length`` (gated — pad tokens past the live
+    prompt leave conv/h untouched; their KV is masked or overwritten by
+    the paged reader)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens]
+    state = init_decode_state(cfg, B)
+    x, conv_new, h_new, kvs = _super_scan(cfg, params, x, positions, state,
+                                          constrain=constrain,
+                                          length=length)
+    k_all, v_all = kvs                          # (n_attn, B, S, KV, dh)
+    hx = L.rmsnorm(x, params["ln_f"].astype(L.COMPUTE_DTYPE))
+    logits = (hx @ params["lm_head"].astype(L.COMPUTE_DTYPE)) \
+        .astype(jnp.float32)
+    last = lax.dynamic_index_in_dim(logits, length - 1, axis=1,
+                                    keepdims=False)
+    return last, (k_all.astype(L.COMPUTE_DTYPE),
+                  v_all.astype(L.COMPUTE_DTYPE)), conv_new, h_new
+
+
+def write_prefill_state(cfg, state: GriffinPagedState, kv, conv, h,
+                        page_ids, slot) -> GriffinPagedState:
+    """Scatter one prefilled request's window KV into its pages and its
+    recurrent state into batch slot ``slot`` (int or traced scalar — a
+    traced slot keeps the jit cache keyed on the prompt bucket alone).
+    kv: (k, v) each (n_attn, S, KV, dh) with S a page multiple; page_ids
+    (S/page,) int32 — entries for out-of-window or pad pages point at
+    the trash page."""
+    k, v = kv
+    return GriffinPagedState(
+        conv=state.conv.at[:, slot].set(conv[:, 0].astype(state.conv.dtype)),
+        h=state.h.at[:, slot].set(h[:, 0]),
+        k_pages=L.paged_cache_write_prompt(state.k_pages, k, page_ids),
+        v_pages=L.paged_cache_write_prompt(state.v_pages, v, page_ids))
+
+
+def _attn_block_paged(cfg, p, x, kp, vp, pt, pos, active):
+    """One-token windowed MQA against the shared page pool, S == 1.
+
+    kp/vp: (KV, P, page, dh) for this layer; pt: (B, R) ring rows of the
+    page table; pos: (B,) int32 absolute position of the token being
+    decoded. The absolute position of ring entry (row, offset) is
+    reconstructed from pos — the page in row r is the largest page number
+    n ≡ r (mod R) with n <= pos // page — so no kpos array is stored and
+    the in-window mask is exact (matching `_attn_block_decode`)."""
+    cd = L.COMPUTE_DTYPE
+    B = x.shape[0]
+    dh = cfg.head_dim
+    win = cfg.recurrent.window
+    kve, _, page, _ = kp.shape
+    R = pt.shape[1]
+    h = L.rmsnorm(x, p["ln"]).astype(cd)
+    positions = pos[:, None]
+    q = (h @ p["wq"].astype(cd)).reshape(B, 1, cfg.num_heads, dh)
+    k = (h @ p["wk"].astype(cd)).reshape(B, 1, cfg.num_kv_heads, dh)
+    v = (h @ p["wv"].astype(cd)).reshape(B, 1, cfg.num_kv_heads, dh)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    k = L.expand_kv(k, kve // cfg.num_kv_heads)
+    v = L.expand_kv(v, kve // cfg.num_kv_heads)
+
+    cp = pos // page                            # current page number
+    row = cp % R
+    page_ids = jnp.take_along_axis(pt, row[:, None], axis=1)[:, 0]
+    page_ids = jnp.where(active, page_ids, 0)   # inactive -> trash page
+    offsets = jnp.where(active, pos % page, 0)
+    kp = L.paged_cache_append(kp, k[:, 0], page_ids, offsets)
+    vp = L.paged_cache_append(vp, v[:, 0], page_ids, offsets)
+
+    gk = kp[:, pt].transpose(1, 2, 3, 0, 4).reshape(B, R * page, kve, dh)
+    gv = vp[:, pt].transpose(1, 2, 3, 0, 4).reshape(B, R * page, kve, dh)
+    r_idx = jnp.arange(R, dtype=jnp.int32)
+    n = cp[:, None] - ((cp[:, None] - r_idx[None, :]) % R)      # (B, R)
+    absp = (n[:, :, None] * page
+            + jnp.arange(page, dtype=jnp.int32)[None, None, :]) \
+        .reshape(B, R * page)
+    valid = (absp >= 0) & (absp <= pos[:, None]) \
+        & (absp > pos[:, None] - win)
+    valid &= jnp.repeat(pt != 0, page, axis=1)  # empty ring rows (trash)
+    # inactive slots attend to a single (garbage, finite) entry so the
+    # softmax stays defined; their outputs are discarded by the engine
+    valid = jnp.where(active[:, None], valid,
+                      jnp.arange(R * page)[None, :] == 0)
+    attn = L.gqa_attention(q, gk.astype(cd), gv.astype(cd),
+                           mask=valid[:, None, None, None, :])
+    y = x + (attn.reshape(B, 1, cfg.q_dim)
+             @ p["wo"].astype(cd)).astype(x.dtype)
+    y = y + _mlp(p, y).astype(y.dtype)
+    return y, kp, vp
+
+
+def paged_decode_step(cfg, params, state: GriffinPagedState, tokens,
+                      page_table, lengths, active, *, constrain=None):
+    """One token per slot: per-slot recurrent state + paged window KV.
+
+    tokens (B,) int32; page_table (B, M) int32 whose first R rows are the
+    window ring; lengths (B,) the decoding position per slot; active (B,)
+    bool — inactive slots write to the trash page and freeze their
+    recurrent state. Lengths advance host-side (the engine owns them)."""
+    del constrain
+    B = tokens.shape[0]
+    n_super, n_tail = _counts(cfg)
+    page = state.k_pages.shape[3]
+    R = ring_rows(cfg.recurrent.window, page)
+    pt = page_table[:, :R]
+    pos = jnp.where(active, lengths.astype(jnp.int32), 0)
+    x = params["embed"].astype(L.COMPUTE_DTYPE)[tokens[:, None]]
+
+    def freeze(st, old):
+        keep = active[:, None, None]
+        return (jnp.where(keep, st["conv"], old["conv"]),
+                jnp.where(active[:, None], st["h"], old["h"]))
+
+    def sb_body(carry, xs):
+        xc = carry
+        p, conv1, h1, conv2, h2, kp, vp = xs
+        y, st1 = _rec_block(cfg, p["rec1"], xc, {"conv": conv1, "h": h1})
+        y, st2 = _rec_block(cfg, p["rec2"], y, {"conv": conv2, "h": h2})
+        y, kp, vp = _attn_block_paged(cfg, p["attn"], y, kp, vp, pt, pos,
+                                      active)
+        c1, hh1 = freeze(st1, {"conv": conv1, "h": h1})
+        c2, hh2 = freeze(st2, {"conv": conv2, "h": h2})
+        return y, (c1, hh1, c2, hh2, kp, vp)
+
+    conv_r, h_r = state.conv, state.h
+    xs = (params["super"], conv_r[0:2 * n_super:2], h_r[0:2 * n_super:2],
+          conv_r[1:2 * n_super:2], h_r[1:2 * n_super:2],
+          state.k_pages, state.v_pages)
+    x, (c1, h1, c2, h2, kp_new, vp_new) = lax.scan(sb_body, x, xs)
+
+    conv_new = jnp.zeros_like(conv_r).at[0:2 * n_super:2].set(c1) \
+        .at[1:2 * n_super:2].set(c2)
+    h_new = jnp.zeros_like(h_r).at[0:2 * n_super:2].set(h1) \
+        .at[1:2 * n_super:2].set(h2)
+    if n_tail:
+        def tail_body(carry, xs):
+            p, conv, h = xs
+            y, st = _rec_block(cfg, p, carry, {"conv": conv, "h": h})
+            c, hh = freeze(st, {"conv": conv, "h": h})
+            return y, (c, hh)
+        x, (ct, ht) = lax.scan(tail_body, x,
+                               (params["tail"], conv_r[2 * n_super:],
+                                h_r[2 * n_super:]))
+        conv_new = conv_new.at[2 * n_super:].set(ct)
+        h_new = h_new.at[2 * n_super:].set(ht)
+
+    hx = L.rmsnorm(x, params["ln_f"].astype(L.COMPUTE_DTYPE))
+    logits = (hx @ params["lm_head"].astype(L.COMPUTE_DTYPE)) \
+        .astype(jnp.float32)[:, 0]
+    return logits, GriffinPagedState(conv=conv_new, h=h_new,
+                                     k_pages=kp_new, v_pages=vp_new)

@@ -153,10 +153,25 @@ def _mla_part(cfg, p, h, batch, mask, cache, cache_pos):
 
 # --- block ------------------------------------------------------------------------
 
+def _moe_ffn_tail(cfg, p, y, dims):
+    """Second half of every MoE block (lockstep AND paged decode share
+    this, so shared-expert / dispatch changes cannot diverge the paths):
+    norm -> routed expert FFN (+ shared experts) -> residual."""
+    _, norm = L.make_norm(cfg)
+    B, S, D = y.shape
+    cd = L.COMPUTE_DTYPE
+    h2 = norm(y, p["ln2"]).astype(cd)
+    mp = jax.tree.map(lambda a: a.astype(cd), p["moe"])
+    ff, aux = L.moe_ffn(h2.reshape(B * S, D), mp, dims)
+    if cfg.moe.num_shared_experts:
+        ff = ff + L.swiglu(h2.reshape(B * S, D), mp["shared_gate"],
+                           mp["shared_up"], mp["shared_down"])
+    return y + ff.reshape(B, S, D).astype(y.dtype), aux
+
+
 def _block(cfg, p, x, batch, mask, dims, cache=None, cache_pos=None,
            constrain=None):
     _, norm = L.make_norm(cfg)
-    B, S, D = x.shape
     cd = L.COMPUTE_DTYPE
     h = norm(x, p["ln1"]).astype(cd)
     if cfg.mla is not None:
@@ -170,13 +185,7 @@ def _block(cfg, p, x, batch, mask, dims, cache=None, cache_pos=None,
         attn_out = constrain(attn_out)
     y = x + attn_out.astype(x.dtype)
 
-    h2 = norm(y, p["ln2"]).astype(cd)
-    mp = jax.tree.map(lambda a: a.astype(cd), p["moe"])
-    ff, aux = L.moe_ffn(h2.reshape(B * S, D), mp, dims)
-    if cfg.moe.num_shared_experts:
-        ff = ff + L.swiglu(h2.reshape(B * S, D), mp["shared_gate"],
-                           mp["shared_up"], mp["shared_down"])
-    out = y + ff.reshape(B, S, D).astype(x.dtype)
+    out, aux = _moe_ffn_tail(cfg, p, y, dims)
     if constrain is not None:
         out = constrain(out)
     return out, kv, aux
@@ -292,3 +301,142 @@ def decode_step(cfg, params, state: MoEDecodeState, tokens, *,
         kv_new = jnp.stack([k_new, v_new])
     logits = _head(cfg, params, x)[:, 0]
     return logits, MoEDecodeState(kv=kv_new, pos=pos + 1)
+
+
+# --- paged latent decode (continuous batching) ------------------------------------
+# MLA's absorbed decode already stores only the compressed latent
+# (kv_lora_rank + rope head) per token; the paged serving path pools
+# those latent rows — pages are (page, kv_lora_rank + rope) slabs, NOT
+# per-head K/V — so cache bytes track live tokens at latent width and
+# the page table grows linearly like the dense transformer's.
+
+
+def latent_width(cfg) -> int:
+    return cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+
+
+@dataclasses.dataclass
+class MoEPagedState:
+    kv_pages: jax.Array    # (L, P, page, r+dr); page 0 = trash page
+
+
+jax.tree_util.register_dataclass(MoEPagedState, data_fields=["kv_pages"],
+                                 meta_fields=[])
+
+
+def init_paged_decode_state(cfg, num_pages: int, page_size: int,
+                            dtype=L.COMPUTE_DTYPE) -> MoEPagedState:
+    assert cfg.mla is not None, "paged decode pools the MLA latent cache"
+    return MoEPagedState(kv_pages=jnp.zeros(
+        (cfg.num_layers, num_pages, page_size, latent_width(cfg)), dtype))
+
+
+def paged_prefill(cfg, params, batch, lengths, *, constrain=None):
+    """Forward the (padded) prompts; return per-sequence last-live-token
+    logits plus the raw per-layer latents (L, B, S, r+dr) for page
+    scatter.
+
+    Pad positions never influence live ones through attention (causal),
+    and trailing pads can never displace a live token from an expert
+    (capacity is claimed in token order). One caveat: the expert
+    capacity ceiling is shape-static, so it is computed from the PADDED
+    token count — with a tight capacity_factor the engine may therefore
+    KEEP a token the exact-length oracle would drop. ``reduced()``
+    configs are dropless by construction (capacity_factor 8), so the
+    token-for-token differential holds at every serving scale this repo
+    runs end-to-end."""
+    logits, kvs, _ = forward(cfg, params, batch, return_kv=True,
+                             return_aux=True, constrain=constrain)
+    idx = (lengths - 1)[:, None, None]
+    last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return last, kvs.astype(L.COMPUTE_DTYPE)
+
+
+def write_prefill_pages(cfg, state: MoEPagedState, latents, page_ids
+                        ) -> MoEPagedState:
+    """Scatter one prefilled request's latents into its pages. latents:
+    (L, S, r+dr), S a page multiple; page_ids (S/page,) int32 with dead
+    entries pointing at the trash page."""
+    Lc, P, page, width = state.kv_pages.shape
+    chunks = latents.reshape(Lc, -1, page, width)
+    return MoEPagedState(kv_pages=state.kv_pages.at[:, page_ids].set(
+        chunks.astype(state.kv_pages.dtype)))
+
+
+def _mla_paged_block(cfg, p, x, batch, pages, page_table, page_ids,
+                     offsets, pos, dims):
+    """One MLA + MoE block over the paged latent cache, S == 1. pages:
+    (P, page, r+dr) for this layer; the new token's latent is appended at
+    (page_ids, offsets) before the absorbed-score gather."""
+    m = cfg.mla
+    _, norm = L.make_norm(cfg)
+    B, S, D = x.shape
+    H = cfg.num_heads
+    cd = L.COMPUTE_DTYPE
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    r = m.kv_lora_rank
+
+    h = norm(x, p["ln1"]).astype(cd)
+    q = (h @ p["wq"].astype(cd)).reshape(B, 1, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, batch["positions"], cfg.rope_theta)
+    c_kv = L.rmsnorm(h @ p["w_dkv"].astype(cd), p["kv_ln"])     # (B,1,r)
+    k_rope = L.apply_rope((h @ p["w_kr"].astype(cd))[:, :, None, :],
+                          batch["positions"], cfg.rope_theta)   # (B,1,1,dr)
+    latent = jnp.concatenate([c_kv[:, 0], k_rope[:, 0, 0]], axis=-1)
+    pages = pages.at[page_ids, offsets].set(latent.astype(pages.dtype))
+
+    g = pages[page_table]                       # (B, M, page, r+dr)
+    T = g.shape[1] * g.shape[2]
+    g = g.reshape(B, T, -1).astype(cd)
+    c_all, kr_all = g[..., :r], g[..., r:]
+    q_lat = jnp.einsum("bshd,hrd->bshr", q_nope, p["w_uk"].astype(cd))
+    scale = 1.0 / math.sqrt(dn + dr)
+    s = (jnp.einsum("bshr,btr->bhst", q_lat, c_all)
+         + jnp.einsum("bshd,btd->bhst", q_rope, kr_all))
+    s = s.astype(jnp.float32) * scale
+    # linear page table: entry (row, off) holds absolute position
+    # row*page + off, so "<= pos" is the whole validity story (rows past
+    # the live pages are trash but their positions already exceed pos);
+    # inactive slots run with pos = 0, attending to one garbage entry
+    kj = jnp.arange(T)[None, :]
+    s = jnp.where((kj <= pos[:, None])[:, None, None, :], s, L.NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1).astype(cd)
+    out_lat = jnp.einsum("bhst,btr->bshr", probs, c_all)
+    attn = jnp.einsum("bshr,hrd->bshd", out_lat, p["w_uv"].astype(cd))
+    y = x + (attn.reshape(B, 1, H * dv) @ p["wo"].astype(cd)) \
+        .astype(x.dtype)
+    out, _ = _moe_ffn_tail(cfg, p, y, dims)
+    return out, pages
+
+
+def paged_decode_step(cfg, params, state: MoEPagedState, tokens,
+                      page_table, lengths, active, *, constrain=None):
+    """One token per slot against the paged latent cache. tokens (B,)
+    int32; page_table (B, M) int32; lengths (B,) live context per slot;
+    active (B,) bool — inactive slots write to the trash page and read a
+    single masked entry. Lengths are advanced by the caller."""
+    del constrain
+    assert cfg.mla is not None
+    B = tokens.shape[0]
+    page = state.kv_pages.shape[2]
+    pos = jnp.where(active, lengths.astype(jnp.int32), 0)
+    batch = _default_batch(cfg, {"tokens": tokens[:, None],
+                                 "positions": pos[:, None]})
+    x = _embed(cfg, params, batch)
+    slot = (pos // page)[:, None]
+    page_ids = jnp.take_along_axis(page_table, slot, axis=1)[:, 0]
+    page_ids = jnp.where(active, page_ids, 0)
+    offsets = jnp.where(active, pos % page, 0)
+    dims = L.moe_dims(cfg, B)
+
+    def body(carry, xs):
+        p, pages = xs
+        y, pages = _mla_paged_block(cfg, p, carry, batch, pages,
+                                    page_table, page_ids, offsets, pos,
+                                    dims)
+        return y, pages
+
+    x, kv_new = lax.scan(body, x, (params["blocks"], state.kv_pages))
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, MoEPagedState(kv_pages=kv_new)

@@ -107,34 +107,59 @@ def layer_schedule(cfg, param_bytes: int = 2,
                    ) -> tuple[LayerSlice, ...]:
     """Ordered per-layer byte schedule of the serving weight copy.
 
-    The schedule always has ``2 + cfg.num_layers`` slices — a leading
-    ``embed`` slice (embedding table, plus the encoder stack for enc-dec
-    models: both are consumed before the first decode layer), one slice
-    per decode layer (every layer-stacked tensor split evenly, remainder
-    bytes spread over the leading layers so totals conserve exactly),
-    and a trailing ``head`` slice (untied lm_head). ``include`` restricts
-    the schedule to a subset of ``weight_inventory`` tensor names while
-    keeping the slice structure aligned, so a pinned-tensor subset can be
-    subtracted slice-by-slice from the full schedule.
+    The schedule has a leading ``embed`` slice (embedding table, plus the
+    encoder stack for enc-dec models: both are consumed before the first
+    decode layer), one slice per decode layer (every layer-stacked tensor
+    split evenly, remainder bytes spread over the leading layers so
+    totals conserve exactly), and a trailing ``head`` slice (untied
+    lm_head) — ``2 + cfg.num_layers`` slices for dense families.
+
+    MoE models additionally split the routed ``experts`` tensor into
+    PER-EXPERT slices (``layerNN/expEE`` after each layer's core slice,
+    ``2 + num_layers * (1 + num_experts)`` total): a cold expert is its
+    own streaming unit, so the pool can prefetch experts behind decode
+    exactly like any other layer slice instead of moving the whole
+    expert block as one stall.
+
+    ``include`` restricts the schedule to a subset of
+    ``weight_inventory`` tensor names while keeping the slice structure
+    aligned, so a pinned-tensor subset can be subtracted slice-by-slice
+    from the full schedule.
     """
     inv = weight_inventory(cfg)
     if include is not None:
         inv = [t for t in inv if t.name in include]
     L = cfg.num_layers
-    lead = tail = per_layer = 0
+    experts = cfg.moe.num_experts if cfg.moe else 0
+    lead = tail = per_layer = expert_bytes = 0
     for t in inv:
         b = param_bytes * t.params
         if t.name in ("embed", "encoder"):
             lead += b
         elif t.name == "lm_head":
             tail += b
+        elif t.name == "experts" and experts:
+            expert_bytes += b
         else:
             per_layer += b
     base, rem = divmod(per_layer, L)
-    return (LayerSlice("embed", lead),
-            *(LayerSlice(f"layer{i:02d}", base + (1 if i < rem else 0))
-              for i in range(L)),
-            LayerSlice("head", tail))
+    slices = [LayerSlice("embed", lead)]
+    if experts:
+        ebase, erem = divmod(expert_bytes, L * experts)
+        for i in range(L):
+            slices.append(
+                LayerSlice(f"layer{i:02d}", base + (1 if i < rem else 0)))
+            for x in range(experts):
+                idx = i * experts + x
+                slices.append(LayerSlice(
+                    f"layer{i:02d}/exp{x:02d}",
+                    ebase + (1 if idx < erem else 0)))
+    else:
+        slices += [LayerSlice(f"layer{i:02d}",
+                              base + (1 if i < rem else 0))
+                   for i in range(L)]
+    slices.append(LayerSlice("head", tail))
+    return tuple(slices)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -3,8 +3,10 @@ arrival-trace scheduler, multi-tenant model pool, and the elastic
 training supervisor."""
 
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
+                     HybridBackend, LatentBackend, PagedTransformerBackend,
                      PoolEngineConfig, PooledEngine, PooledReport,
-                     make_sampler, partition_pages, run_static,
+                     RecurrentBackend, engine_backend, make_sampler,
+                     partition_pages, resolve_backend, run_static,
                      vlm_extras_fn)
 from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
                               TrainingSupervisor)
@@ -16,6 +18,8 @@ from .scheduler import (MultiQueueScheduler, Request, Scheduler,
                         multi_tenant_trace, poisson_trace)
 
 __all__ = ["Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
+           "PagedTransformerBackend", "RecurrentBackend", "HybridBackend",
+           "LatentBackend", "engine_backend", "resolve_backend",
            "PooledEngine", "PoolEngineConfig", "PooledReport",
            "run_static", "make_sampler", "vlm_extras_fn",
            "PageAllocator", "PagerConfig", "TRASH_PAGE", "partition_pages",

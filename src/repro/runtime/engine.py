@@ -16,10 +16,16 @@ fabric. This engine keeps the compute fabric occupied instead:
   * on page exhaustion the youngest request is preempted (pages freed,
     request requeued) rather than stalling the whole batch.
 
-Two backends cover the model zoo's cache shapes: PagedTransformerBackend
-(dense + vlm families — a real paged KV cache) and RecurrentBackend (ssm —
+Four backends cover the model zoo's cache shapes: PagedTransformerBackend
+(dense + vlm families — a real paged KV cache), RecurrentBackend (ssm —
 constant-size per-slot state, where continuous batching still removes the
-lockstep drain but there is no cache growth to page).
+lockstep drain but there is no cache growth to page), HybridBackend
+(hybrid/recurrentgemma — constant-size recurrent state per slot plus a
+bounded sliding-window KV held as a page-granular ring, recycling the
+page that slides out of the window), and LatentBackend (MoE models with
+an MLA latent cache — deepseek: pages hold compressed latent rows, not
+per-head K/V, and expert weights stream through the residency planner
+like any other layer slice).
 """
 
 from __future__ import annotations
@@ -97,6 +103,7 @@ class EngineReport:
     completed: list[Request] = dataclasses.field(default_factory=list)
     peak_live_pages: int = 0
     page_bytes: int = 0                # 0 -> non-paged backend
+    slot_state_bytes: int = 0          # per-slot non-paged state (hybrid)
     cache_bytes_alloc: int = 0         # full backing allocation
     wall_s: float = 0.0
     decode_wall_s: float = 0.0
@@ -135,9 +142,13 @@ class EngineReport:
     @property
     def kv_bytes_peak(self) -> int:
         """Peak cache bytes holding *live* tokens (paged) or the full
-        dense allocation (static / recurrent)."""
+        dense allocation (static / recurrent). A paged backend with
+        per-slot recurrent state (hybrid) adds that constant term so the
+        comparison against the static path — whose _state_bytes includes
+        the same conv/LRU arrays — stays symmetric."""
         if self.page_bytes:
-            return self.peak_live_pages * self.page_bytes
+            return (self.peak_live_pages * self.page_bytes
+                    + self.slot_state_bytes)
         return self.cache_bytes_alloc
 
     def latency_percentiles(self, qs=(50, 95)) -> dict[str, float]:
@@ -166,18 +177,79 @@ class EngineReport:
 
 
 # --- backends ------------------------------------------------------------------
+# The engine drives backends through a small protocol:
+#   paged        -- does the backend allocate KV pages at all
+#   ring_rows    -- None for linear page-table growth (cache grows with
+#                   the context), or R for a page-granular window ring
+#                   (a slot holds at most R pages; on wrap the engine
+#                   frees the page that slid out of the window)
+#   page_bytes   -- HBM bytes one page holds across layers (0 if unpaged)
+#   supports(cfg)     -- classmethod: can this backend serve the config
+#   can_ever_fit(...) -- admission feasibility for this cache shape
+#   admission_rows(pgr, ctx_len) -> table rows the prefill pages fill
+#   prefill(ctx, extras, slot, pages) / decode(...) / release_slot(slot)
 
 
-class PagedTransformerBackend:
-    """Dense/vlm families: real paged KV cache + paged decode attention."""
+def _bucket_prompt(ctx: np.ndarray, ecfg: EngineConfig, pages: list[int],
+                   first_page: int = 0) -> tuple[np.ndarray, np.ndarray]:
+    """Pad a prompt to its prefill bucket and build the page-scatter ids:
+    prompt page ``first_page + i`` maps to ``pages[i]``, every other
+    bucket page (pre-window, pad) to the trash page."""
+    plen = len(ctx)
+    bucket = -(-plen // ecfg.prefill_bucket) * ecfg.prefill_bucket
+    toks = np.zeros((1, bucket), np.int32)
+    toks[0, :plen] = ctx
+    pids = np.full((bucket // ecfg.page_size,), TRASH_PAGE, np.int32)
+    pids[first_page:first_page + len(pages)] = pages
+    return toks, pids
+
+
+class _PagedBackendBase:
+    """Shared jit-dispatch plumbing for every paged backend: the decode
+    wrapper marshals host arrays into the jitted step and the pages are
+    owned by the allocator, so release_slot is a no-op."""
 
     paged = True
+    slot_state_bytes = 0               # no per-slot non-paged state
+
+    @classmethod
+    def supports(cls, cfg) -> bool:
+        return True
+
+    def decode(self, tokens, page_table, lengths, active) -> np.ndarray:
+        logits, self.state = self._decode(
+            self.params, self.state, jnp.asarray(tokens),
+            jnp.asarray(page_table), jnp.asarray(lengths),
+            jnp.asarray(active))
+        return np.asarray(logits)
+
+    def release_slot(self, slot: int) -> None:
+        pass                            # pages freed by the allocator
+
+
+class _LinearPagedMixin(_PagedBackendBase):
+    """Shared geometry for backends whose page table grows with context."""
+
+    ring_rows = None
+
+    def can_ever_fit(self, pgr, prompt_len: int, max_new_tokens: int,
+                     ctx_len: int) -> bool:
+        return pgr.can_ever_fit(prompt_len, max_new_tokens, ctx_len,
+                                pgr.num_pages)
+
+    def admission_rows(self, pgr, ctx_len: int) -> list[int]:
+        return list(range(pgr.pages_for(ctx_len)))
+
+
+class PagedTransformerBackend(_LinearPagedMixin):
+    """Dense/vlm families: real paged KV cache + paged decode attention."""
 
     def __init__(self, cfg, params, ecfg: EngineConfig):
         from ..models import transformer as T
 
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.T = T
+        self.page_bytes = ecfg.pager.page_bytes(cfg)
         self.state = T.init_paged_decode_state(cfg, ecfg.num_pages,
                                                ecfg.page_size)
 
@@ -194,34 +266,18 @@ class PagedTransformerBackend:
         self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
-    def prefill(self, ctx: np.ndarray, extras, page_ids: list[int]
-                ) -> np.ndarray:
+    def prefill(self, ctx: np.ndarray, extras, slot: int,
+                page_ids: list[int]) -> np.ndarray:
         """Prefill one request (padded to the bucket), scatter its KV into
         ``page_ids``, return the last live token's logits (V,)."""
-        e = self.ecfg
-        plen = len(ctx)
-        bucket = -(-plen // e.prefill_bucket) * e.prefill_bucket
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :plen] = ctx
-        pids = np.full((bucket // e.page_size,), TRASH_PAGE, np.int32)
-        pids[:len(page_ids)] = page_ids
+        toks, pids = _bucket_prompt(ctx, self.ecfg, page_ids)
         batch = {"tokens": jnp.asarray(toks)}
         if extras:
             batch.update({k: jnp.asarray(v)[None] for k, v in extras.items()})
         logits, self.state = self._prefill(
             self.params, self.state, batch,
-            jnp.asarray([plen], jnp.int32), jnp.asarray(pids))
+            jnp.asarray([len(ctx)], jnp.int32), jnp.asarray(pids))
         return np.asarray(logits)
-
-    def decode(self, tokens, page_table, lengths, active) -> np.ndarray:
-        logits, self.state = self._decode(
-            self.params, self.state, jnp.asarray(tokens),
-            jnp.asarray(page_table), jnp.asarray(lengths),
-            jnp.asarray(active))
-        return np.asarray(logits)
-
-    def release_slot(self, slot: int) -> None:
-        pass                            # pages freed by the allocator
 
 
 class RecurrentBackend:
@@ -233,11 +289,21 @@ class RecurrentBackend:
     """
 
     paged = False
+    ring_rows = None
+    page_bytes = 0
+    slot_state_bytes = 0
+
+    @classmethod
+    def supports(cls, cfg) -> bool:
+        return True
 
     def __init__(self, cfg, params, ecfg: EngineConfig):
         self.cfg, self.params, self.ecfg = cfg, params, ecfg
         self.api = get_model(cfg)
         self.state = self.api.init_decode_state(cfg, ecfg.num_slots)
+        # the whole cache IS per-slot constant state; counted so pooled
+        # kv_bytes_peak matches the sum of per-tenant standalone reports
+        self.slot_state_bytes = _state_bytes(self.state)
         self._prefill = jax.jit(
             lambda params, batch: self.api.prefill(cfg, params, batch, 0))
         self._decode = jax.jit(
@@ -258,7 +324,8 @@ class RecurrentBackend:
             ffn_prev=state.ffn_prev.at[:, slot].set(single.ffn_prev[:, 0]),
             wkv=state.wkv.at[:, slot].set(single.wkv[:, 0]))
 
-    def prefill(self, ctx: np.ndarray, extras, slot: int) -> np.ndarray:
+    def prefill(self, ctx: np.ndarray, extras, slot: int,
+                page_ids=None) -> np.ndarray:
         batch = {"tokens": jnp.asarray(ctx[None].astype(np.int32))}
         logits, single = self._prefill(self.params, batch)
         self.state = self._write(self.state, single, slot)
@@ -273,9 +340,173 @@ class RecurrentBackend:
         pass                            # overwritten at next admission
 
 
+class HybridBackend(_PagedBackendBase):
+    """hybrid family (recurrentgemma/griffin): constant-size recurrent
+    state per slot + a bounded sliding-window KV cache paged as a ring.
+
+    The window ring holds ``ring_rows = ceil(window/page) + 1`` pages per
+    slot; on every page-boundary crossing the engine frees the page that
+    slid fully out of the attention window and allocates a fresh one into
+    the same table row, so cache bytes stay O(window) per slot no matter
+    how long the request runs — arbitrarily long prompts admit with the
+    same bounded page count (only the last window of KV is ever paged).
+    """
+
+    @classmethod
+    def supports(cls, cfg) -> bool:
+        return cfg.recurrent is not None
+
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        from ..models import griffin as G
+
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.window = cfg.recurrent.window
+        self.ring_rows = G.ring_rows(self.window, ecfg.page_size)
+        if (self.ring_rows > ecfg.max_pages_per_seq
+                or self.ring_rows > ecfg.num_pages - 1):
+            # statically infeasible geometry: raise here rather than
+            # fail-fast every request as "truncated" at admission
+            raise ValueError(
+                f"{cfg.name}: window {self.window} needs a ring of "
+                f"{self.ring_rows} pages (page_size {ecfg.page_size}), "
+                f"but max_pages_per_seq={ecfg.max_pages_per_seq} and "
+                f"the pool holds {ecfg.num_pages - 1} usable pages")
+        _, n_attn = G._state_counts(cfg)
+        self.page_bytes = (2 * n_attn * ecfg.page_size * cfg.num_kv_heads
+                           * cfg.head_dim * 2)
+        self.state = G.init_paged_decode_state(cfg, ecfg.num_slots,
+                                               ecfg.num_pages,
+                                               ecfg.page_size)
+        # constant per-slot recurrence bytes, reported next to the paged
+        # window so kv_bytes_peak compares symmetrically with the static
+        # path's state (which holds the same conv/LRU arrays)
+        self.slot_state_bytes = _state_bytes(
+            (self.state.conv, self.state.h))
+
+        def prefill_write(params, state, batch, length, page_ids, slot):
+            last, kv, conv, h = G.paged_prefill(cfg, params, batch, length)
+            state = G.write_prefill_state(
+                cfg, state, (kv[0][:, 0], kv[1][:, 0]), conv, h, page_ids,
+                slot)
+            return last[0], state
+
+        def decode(params, state, tokens, page_table, lengths, active):
+            return G.paged_decode_step(cfg, params, state, tokens,
+                                       page_table, lengths, active)
+
+        # slot is a traced scalar (``.at[:, slot]`` takes traced indices),
+        # so the compile cache is keyed on the prompt bucket alone — one
+        # trace per bucket, not per (bucket, slot) pair
+        self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def can_ever_fit(self, pgr, prompt_len: int, max_new_tokens: int,
+                     ctx_len: int) -> bool:
+        """Window-bounded: feasibility is the ring fitting the table row
+        and the pool — prompt/generation length never disqualifies."""
+        return (self.ring_rows <= pgr.max_pages_per_seq
+                and self.ring_rows <= pgr.num_pages - 1)
+
+    def admission_rows(self, pgr, ctx_len: int) -> list[int]:
+        """Ring rows of the pages covering the live window — page n lands
+        in row n % R; pages before the window are never allocated."""
+        p, R = pgr.page_size, self.ring_rows
+        n_lo = max(0, ctx_len - self.window) // p
+        n_hi = (ctx_len - 1) // p
+        return [n % R for n in range(n_lo, n_hi + 1)]
+
+    def prefill(self, ctx: np.ndarray, extras, slot: int,
+                page_ids: list[int]) -> np.ndarray:
+        # scatter pids are indexed by prompt page number: in-window pages
+        # get the allocated ring pages, everything else (pre-window +
+        # pad) goes to the trash page
+        n_lo = max(0, len(ctx) - self.window) // self.ecfg.page_size
+        toks, pids = _bucket_prompt(ctx, self.ecfg, page_ids,
+                                    first_page=n_lo)
+        logits, self.state = self._prefill(
+            self.params, self.state, {"tokens": jnp.asarray(toks)},
+            jnp.asarray(len(ctx), jnp.int32), jnp.asarray(pids),
+            jnp.asarray(slot, jnp.int32))
+        return np.asarray(logits)
+
+
+class LatentBackend(_LinearPagedMixin):
+    """MoE + MLA (deepseek): pages hold compressed latent rows.
+
+    The cache entry per token is the absorbed-MLA latent (kv_lora_rank +
+    rope head), not per-head K/V — the paper's pack-the-stationary-
+    operand-small idea applied to the page pool, so page_bytes is
+    latent-width-sized. Table growth is linear like the dense backend;
+    expert weights are the residency planner's problem (per-expert slices
+    in the layer schedule), not the pager's."""
+
+    @classmethod
+    def supports(cls, cfg) -> bool:
+        return cfg.mla is not None      # GQA-MoE (olmoe) stays static
+
+    def __init__(self, cfg, params, ecfg: EngineConfig):
+        from ..models import moe as MoE
+
+        assert cfg.mla is not None, \
+            "LatentBackend pages the MLA latent cache"
+        self.cfg, self.params, self.ecfg = cfg, params, ecfg
+        self.page_bytes = (cfg.num_layers * ecfg.page_size
+                           * MoE.latent_width(cfg) * 2)
+        self.state = MoE.init_paged_decode_state(cfg, ecfg.num_pages,
+                                                 ecfg.page_size)
+
+        def prefill_write(params, state, batch, lengths, page_ids):
+            last, latents = MoE.paged_prefill(cfg, params, batch, lengths)
+            state = MoE.write_prefill_pages(cfg, state, latents[:, 0],
+                                            page_ids)
+            return last[0], state
+
+        def decode(params, state, tokens, page_table, lengths, active):
+            return MoE.paged_decode_step(cfg, params, state, tokens,
+                                         page_table, lengths, active)
+
+        self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
+        self._decode = jax.jit(decode, donate_argnums=(1,))
+
+    def prefill(self, ctx: np.ndarray, extras, slot: int,
+                page_ids: list[int]) -> np.ndarray:
+        toks, pids = _bucket_prompt(ctx, self.ecfg, page_ids)
+        logits, self.state = self._prefill(
+            self.params, self.state, {"tokens": jnp.asarray(toks)},
+            jnp.asarray([len(ctx)], jnp.int32), jnp.asarray(pids))
+        return np.asarray(logits)
+
+
 ENGINE_FAMILIES = {"dense": PagedTransformerBackend,
                    "vlm": PagedTransformerBackend,
-                   "ssm": RecurrentBackend}
+                   "ssm": RecurrentBackend,
+                   "hybrid": HybridBackend,
+                   "moe": LatentBackend}
+
+
+def engine_backend(cfg):
+    """Backend class able to serve ``cfg``, or None (static fallback)."""
+    cls = ENGINE_FAMILIES.get(cfg.family)
+    if cls is None or not cls.supports(cfg):
+        return None
+    return cls
+
+
+def resolve_backend(cfg):
+    """engine_backend or raise — the single source of the supported-family
+    list, derived from the registry so it stays truthful as backends
+    register."""
+    cls = engine_backend(cfg)
+    if cls is None:
+        detail = ""
+        if cfg.family in ENGINE_FAMILIES:
+            detail = (f" ({ENGINE_FAMILIES[cfg.family].__name__} does not"
+                      f" support this config)")
+        raise ValueError(
+            f"{cfg.name!r} (family {cfg.family!r}) has no engine backend"
+            f"{detail}; families with backends: "
+            f"{sorted(ENGINE_FAMILIES)}")
+    return cls
 
 
 # --- engine --------------------------------------------------------------------
@@ -287,12 +518,7 @@ class Engine:
     def __init__(self, cfg, params, ecfg: EngineConfig | None = None):
         self.cfg = cfg
         self.ecfg = ecfg or EngineConfig()
-        backend_cls = ENGINE_FAMILIES.get(cfg.family)
-        if backend_cls is None:
-            raise ValueError(
-                f"family {cfg.family!r} has no engine backend "
-                f"(supported: {sorted(ENGINE_FAMILIES)})")
-        self.backend = backend_cls(cfg, params, self.ecfg)
+        self.backend = resolve_backend(cfg)(cfg, params, self.ecfg)
         self.rng = np.random.default_rng(self.ecfg.seed)
         self._sample = make_sampler(self.rng, self.ecfg.greedy,
                                     self.ecfg.temperature)
@@ -311,12 +537,12 @@ class Engine:
         lengths = np.zeros((B,), np.int32)
         pending = np.zeros((B,), np.int32)      # next decode input token
 
-        page_bytes = pgr.page_bytes(self.cfg) if paged else 0
+        page_bytes = self.backend.page_bytes
         rep = EngineReport(
             name=f"engine/{self.cfg.name}", num_slots=B,
             page_bytes=page_bytes,
-            cache_bytes_alloc=page_bytes * (e.num_pages - 1) if paged
-            else _state_bytes(self.backend.state))
+            slot_state_bytes=self.backend.slot_state_bytes,
+            cache_bytes_alloc=_state_bytes(self.backend.state))
         t_run = time.monotonic()
         step = 0
 
@@ -356,26 +582,28 @@ class Engine:
                     ctx = req.context_tokens
                     assert len(ctx) >= 1, "empty prompts are not admissible"
                     if paged:
-                        n_pages = pgr.pages_for(len(ctx))
-                        if not pgr.can_ever_fit(len(req.prompt),
-                                                req.max_new_tokens,
-                                                len(ctx), e.num_pages):
+                        rows = self.backend.admission_rows(pgr, len(ctx))
+                        if not self.backend.can_ever_fit(
+                                pgr, len(req.prompt), req.max_new_tokens,
+                                len(ctx)):
                             sched.pop_ready()   # can never fit: fail fast
                             req.truncated = True
                             req.done_step = step
                             rep.completed.append(req)
                             continue
-                        if not alloc.can_alloc(n_pages):
+                        if not alloc.can_alloc(len(rows)):
                             admitting = False   # FCFS: wait for free pages
                             break
                         sched.pop_ready()
-                        pages = alloc.alloc(req.rid, n_pages)
+                        pages = alloc.alloc(req.rid, len(rows))
                         page_table[s, :] = TRASH_PAGE
-                        page_table[s, :len(pages)] = pages
-                        logits = self.backend.prefill(ctx, req.extras, pages)
+                        page_table[s, rows] = pages
+                        logits = self.backend.prefill(ctx, req.extras, s,
+                                                      pages)
                     else:
                         sched.pop_ready()
-                        logits = self.backend.prefill(ctx, req.extras, s)
+                        logits = self.backend.prefill(ctx, req.extras, s,
+                                                      None)
                     rep.prefill_calls += 1
                     rep.prefill_tokens += (
                         -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
@@ -397,6 +625,7 @@ class Engine:
 
             # -- page growth / preemption --------------------------------
             if paged and active:
+                R = self.backend.ring_rows
                 for s in list(active):
                     if slots[s] is None:
                         continue
@@ -404,11 +633,13 @@ class Engine:
                     if not need_page:
                         continue
                     pi = lengths[s] // page
-                    if pi >= M:         # table row full: stop the request
+                    if R is None and pi >= M:   # table row full: stop
                         slots[s].truncated = True
                         finish(s)
                         active.remove(s)
                         continue
+                    row = _growth_row(self.backend, alloc, page_table, s,
+                                      pi, slots[s].rid)
                     while not alloc.can_alloc(1):
                         victim = Scheduler.pick_victim(
                             [(v, slots[v]) for v in active
@@ -422,7 +653,7 @@ class Engine:
                     if slots[s] is None:
                         continue
                     new = alloc.alloc(slots[s].rid, 1)
-                    page_table[s, pi] = new[0]
+                    page_table[s, row] = new[0]
 
             # -- one batched decode step ---------------------------------
             if active:
@@ -468,6 +699,26 @@ class Engine:
 
 def _state_bytes(state) -> int:
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(state))
+
+
+def _growth_row(backend, alloc, page_table, s: int, pi: int, rid: int
+                ) -> int:
+    """Table row for a slot's next page. Linear backends grow into row
+    ``pi``; ring backends wrap into ``pi % ring_rows`` — and the page
+    already in that row is freed FIRST, which is safe exactly because
+    the ring holds ceil(window/page)+1 rows: the wrapped-out page's
+    positions are all <= pos - window, outside the attention window.
+    Both engines' growth loops share this so the invariant lives in one
+    place."""
+    R = backend.ring_rows
+    if R is None:
+        return pi
+    row = pi % R
+    old = int(page_table[s, row])
+    if old != TRASH_PAGE:
+        alloc.free_page(rid, old)
+        page_table[s, row] = TRASH_PAGE
+    return row
 
 
 # --- multi-tenant pooled engine ------------------------------------------------
@@ -517,8 +768,18 @@ class PooledReport(EngineReport):
     reload_events: int = 0
     evictions: int = 0
     deferred_activations: int = 0
+    peak_live_page_bytes: int = 0      # tenants' page sizes differ
     model_tokens: dict = dataclasses.field(default_factory=dict)
     stall_steps_by_model: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def kv_bytes_peak(self) -> int:
+        """Peak live cache bytes summed per tenant at its OWN page size
+        (an MLA latent page is far smaller than a dense KV page, so
+        pages * max(page_bytes) would materially overstate the peak)."""
+        if self.page_bytes:
+            return self.peak_live_page_bytes + self.slot_state_bytes
+        return self.cache_bytes_alloc
 
     @property
     def decode_tokens_per_step(self) -> float:
@@ -617,17 +878,13 @@ class PooledEngine:
         self.ecfg = ecfg or PoolEngineConfig()
         paged_shares = {
             e.model_id: e.demand for e in pool.plan.entries
-            if getattr(ENGINE_FAMILIES.get(e.cfg.family), "paged", False)}
+            if getattr(engine_backend(e.cfg), "paged", False)}
         self.page_split = (partition_pages(self.ecfg.num_pages, paged_shares)
                            if paged_shares else {})
         self.backends = {}
         self._pgr = {}                 # per-tenant pager geometry
         for e in pool.plan.entries:
-            backend_cls = ENGINE_FAMILIES.get(e.cfg.family)
-            if backend_cls is None:
-                raise ValueError(
-                    f"family {e.cfg.family!r} has no engine backend "
-                    f"(supported: {sorted(ENGINE_FAMILIES)})")
+            backend_cls = resolve_backend(e.cfg)
             ecfg_t = self.ecfg
             if e.model_id in self.page_split:
                 # tenant's device pool backs only its sub-range (+ its
@@ -664,12 +921,12 @@ class PooledEngine:
             name=f"pool/{e.policy}", num_slots=B, policy=e.policy,
             stream=e.stream,
             page_bytes=max(
-                (self._pgr[m].page_bytes(self.backends[m].cfg)
-                 for m in self.page_split), default=0),
-            cache_bytes_alloc=sum(
-                self._pgr[m].page_bytes(b.cfg) * self.page_split[m]
-                if b.paged else _state_bytes(b.state)
-                for m, b in self.backends.items()),
+                (self.backends[m].page_bytes for m in self.page_split),
+                default=0),
+            slot_state_bytes=sum(b.slot_state_bytes
+                                 for b in self.backends.values()),
+            cache_bytes_alloc=sum(_state_bytes(b.state)
+                                  for b in self.backends.values()),
             model_tokens={m: 0 for m in order},
             stall_steps_by_model={m: 0 for m in order})
         t_run = time.monotonic()
@@ -713,17 +970,18 @@ class PooledEngine:
             heads that can never fit are failed fast along the way."""
             while True:
                 for req in sched.ready_heads(serve):
-                    if not self.backends[req.model_id].paged:
+                    backend = self.backends[req.model_id]
+                    if not backend.paged:
                         return req
                     pgr_t = self._pgr[req.model_id]
                     ctx_len = len(req.context_tokens)
-                    if not pgr_t.can_ever_fit(len(req.prompt),
-                                              req.max_new_tokens,
-                                              ctx_len, pgr_t.num_pages):
+                    if not backend.can_ever_fit(pgr_t, len(req.prompt),
+                                                req.max_new_tokens,
+                                                ctx_len):
                         reject(sched.pop_ready(req))
                         break           # queues changed: rescan heads
                     if allocs[req.model_id].can_alloc(
-                            pgr_t.pages_for(ctx_len)):
+                            len(backend.admission_rows(pgr_t, ctx_len))):
                         return req
                 else:
                     return None
@@ -818,15 +1076,17 @@ class PooledEngine:
                     assert len(ctx) >= 1, "empty prompts are not admissible"
                     if backend.paged:
                         sched.pop_ready(req)
-                        pages = allocs[req.model_id].alloc(
-                            req.rid,
-                            self._pgr[req.model_id].pages_for(len(ctx)))
+                        rows = backend.admission_rows(
+                            self._pgr[req.model_id], len(ctx))
+                        pages = allocs[req.model_id].alloc(req.rid,
+                                                           len(rows))
                         page_table[s, :] = TRASH_PAGE
-                        page_table[s, :len(pages)] = pages
-                        logits = backend.prefill(ctx, req.extras, pages)
+                        page_table[s, rows] = pages
+                        logits = backend.prefill(ctx, req.extras, s,
+                                                 pages)
                     else:
                         sched.pop_ready(req)
-                        logits = backend.prefill(ctx, req.extras, s)
+                        logits = backend.prefill(ctx, req.extras, s, None)
                     rep.prefill_calls += 1
                     rep.prefill_tokens += (
                         -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
@@ -863,11 +1123,14 @@ class PooledEngine:
                     if lengths[s] % page != 0:
                         continue
                     pi = lengths[s] // page
-                    if pi >= M:
+                    R = self.backends[mid].ring_rows
+                    if R is None and pi >= M:
                         slots[s].truncated = True
                         finish(s)
                         continue
                     a = allocs[mid]
+                    row = _growth_row(self.backends[mid], a, page_table,
+                                      s, pi, slots[s].rid)
                     while not a.can_alloc(1):
                         # only same-tenant slots are useful victims — the
                         # page-id space is partitioned, so a neighbour's
@@ -885,7 +1148,7 @@ class PooledEngine:
                     if slots[s] is None:
                         continue
                     new = a.alloc(slots[s].rid, 1)
-                    page_table[s, pi] = new[0]
+                    page_table[s, row] = new[0]
 
                 served = 0
                 for m in active_models():
@@ -923,6 +1186,10 @@ class PooledEngine:
                 rep.peak_live_pages = max(
                     rep.peak_live_pages,
                     sum(a.live_count for a in allocs.values()))
+                rep.peak_live_page_bytes = max(
+                    rep.peak_live_page_bytes,
+                    sum(a.live_count * self.backends[m].page_bytes
+                        for m, a in allocs.items()))
             elif not sched.exhausted:
                 nxt = sched.next_arrival()
                 if nxt is not None and nxt > step \

@@ -101,6 +101,18 @@ class PageAllocator:
         self._owned.setdefault(owner, []).extend(pages)
         return pages
 
+    def free_page(self, owner: int, page: int) -> None:
+        """Return ONE of ``owner``'s pages to the free list — the window
+        ring's recycle path (the page that slid out of the attention
+        window is released while the request keeps running)."""
+        pages = self._owned.get(owner)
+        assert pages is not None and page in pages, \
+            f"owner {owner} does not hold page {page}"
+        pages.remove(page)
+        if not pages:
+            del self._owned[owner]
+        self._free.append(page)
+
     def free_owner(self, owner: int) -> int:
         """Return all of ``owner``'s pages to the free list (slot recycle /
         preemption). Returns the number of pages released."""

@@ -31,6 +31,9 @@ import sys
 
 import pytest
 
+# the slow, pinned tier: the fast CI job deselects with -m "not golden"
+pytestmark = pytest.mark.golden
+
 GOLD = pathlib.Path(__file__).parent / "golden"
 REPO = pathlib.Path(__file__).resolve().parent.parent
 RTOL = 1e-6            # float tolerance: platform libm jitter, not drift

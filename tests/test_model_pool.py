@@ -95,20 +95,29 @@ def test_pack_is_deterministic():
 
 def test_layer_schedule_conserves_bytes_and_shape():
     """The forward-order slice schedule partitions the serving weight
-    copy exactly: embed slice + one slice per decode layer + head slice,
-    byte-conserving for every family (including the remainder spread)."""
+    copy exactly: embed slice + per-layer slices (MoE: each layer's core
+    slice followed by one slice PER ROUTED EXPERT, so cold experts stream
+    as their own units) + head slice, byte-conserving for every family
+    (including the remainder spread)."""
     for arch in ("codeqwen1.5-7b", "qwen2-vl-7b", "rwkv6-7b",
-                 "olmoe-1b-7b", "recurrentgemma-9b", "whisper-tiny"):
+                 "olmoe-1b-7b", "deepseek-v2-lite-16b",
+                 "recurrentgemma-9b", "whisper-tiny"):
         cfg = get_config(arch)
         sched = layer_schedule(cfg)
-        assert len(sched) == 2 + cfg.num_layers, arch
+        experts = cfg.moe.num_experts if cfg.moe else 0
+        assert len(sched) == 2 + cfg.num_layers * (1 + experts), arch
         assert sched[0].name == "embed" and sched[-1].name == "head"
         total = 2 * sum(t.params for t in weight_inventory(cfg))
         assert sum(s.nbytes for s in sched) == total, arch
         assert all(s.nbytes >= 0 for s in sched)
-        # layer slices are even up to the remainder spread
-        layer_b = [s.nbytes for s in sched[1:-1]]
+        # slices of a kind are even up to the remainder spread
+        layer_b = [s.nbytes for s in sched[1:-1] if "/" not in s.name]
         assert max(layer_b) - min(layer_b) <= 1, arch
+        if experts:
+            exp_b = [s.nbytes for s in sched if "/exp" in s.name]
+            assert len(exp_b) == cfg.num_layers * experts, arch
+            assert max(exp_b) - min(exp_b) <= 1, arch
+            assert min(exp_b) > 0, arch
 
 
 def test_layer_schedule_include_subset_aligns():
