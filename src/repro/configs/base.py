@@ -149,11 +149,14 @@ class ModelConfig:
             tie_embeddings=self.tie_embeddings, rope_theta=self.rope_theta,
             mrope=self.mrope)
         if self.moe:
-            # capacity_factor 8: no token drops at smoke-test sizes, so the
-            # decode path is exactly consistent with the full forward.
+            # the arch's own capacity_factor: drops CAN occur at smoke
+            # sizes, and the serving paths stay consistent anyway — the
+            # engine keys the exact-length capacity into the jit cache
+            # (prefill) and decodes dropless (layers.moe_dims_dropless).
             kw["moe"] = MoEConfig(num_experts=4, top_k=2, d_ff_expert=32,
                                   num_shared_experts=self.moe.num_shared_experts
-                                  and 1, capacity_factor=8.0)
+                                  and 1,
+                                  capacity_factor=self.moe.capacity_factor)
         if self.mla:
             kw["mla"] = MLAConfig(kv_lora_rank=32, qk_nope_head_dim=16,
                                   qk_rope_head_dim=8, v_head_dim=16)

@@ -16,7 +16,14 @@ baseline). ``--stream layer`` (default) streams a cold model's per-layer
 schedule behind other tenants' decode steps — double-buffered prefetch,
 stalls only on prefetch misses — while ``--stream model`` charges the
 whole reload serially up front; the reload clock defaults to the
-roofline-calibrated DMA bandwidth (``--reload-kib-per-step 0``).
+roofline-calibrated DMA bandwidth (``--reload-kib-per-step 0``). The
+device-memory arena (runtime.arena) owns the modeled budget:
+``--repartition epoch`` moves free KV pages between tenants after
+live-page watermarks every ``--epoch-steps``; ``--slab-mode bounded``
+serves slab-overflow models from a 2-slice double buffer (re-streamed
+per decode burst); ``--max-bypass`` caps how long a page-starved head
+can be bypassed by neighbours; ``--shifting-mix`` reverses the zoo's
+traffic shares mid-trace (the repartition stress shape).
 
 Runs reduced configs end-to-end on CPU (1x1 mesh); the pod-mesh serving
 cells are proven by the dry-run.
@@ -40,7 +47,8 @@ from ..models import get_model
 from ..runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
                        PoolEngineConfig, PooledEngine,
                        calibrated_reload_bytes_per_step, engine_backend,
-                       multi_tenant_trace, poisson_trace, vlm_extras_fn)
+                       multi_tenant_trace, poisson_trace,
+                       shifting_mix_trace, vlm_extras_fn)
 from . import sharding as sh
 from .mesh import make_host_mesh, make_production_mesh
 from .steps import make_prefill_step, make_serve_step
@@ -169,7 +177,8 @@ def run_pool(args):
     print(f"reload clock: {reload_bps} B/step{label}")
     pcfg = PoolConfig(hbm_budget_bytes=budget, slab_frac=s,
                       reload_bytes_per_step=reload_bps,
-                      hysteresis_steps=args.hysteresis)
+                      hysteresis_steps=args.hysteresis,
+                      slab_mode=args.slab_mode)
     pool = ModelPool(pcfg)
     for arch, share in zoo:
         pool.register(arch, cfgs[arch], demand=share)
@@ -185,17 +194,24 @@ def run_pool(args):
         max_pages_per_seq=pages_per_seq, prefill_bucket=page,
         greedy=False, temperature=args.temperature, seed=args.seed,
         policy=args.policy, rr_quantum=args.rr_quantum,
-        stream=args.stream)
-    trace = multi_tenant_trace(
+        stream=args.stream, repartition=args.repartition,
+        epoch_steps=args.epoch_steps,
+        max_bypass_steps=args.max_bypass)
+    trace_fn = shifting_mix_trace if args.shifting_mix \
+        else multi_tenant_trace
+    trace = trace_fn(
         tenants, args.requests, mean_interarrival=args.mean_interarrival,
         prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
         gen_lens=(max(args.gen // 4, 1), max(args.gen // 2, 1), args.gen),
         seed=args.seed)
-    rep = PooledEngine(pool, params, ecfg).run(trace)
+    eng = PooledEngine(pool, params, ecfg)
+    rep = eng.run(trace)
     print(f"zoo={args.zoo} mode=pool policy={args.policy} "
-          f"stream={args.stream} slots={args.batch} "
+          f"stream={args.stream} slab_mode={args.slab_mode} "
+          f"repartition={args.repartition} slots={args.batch} "
           f"requests={args.requests}")
     print(json.dumps(rep.summary(), indent=1))
+    print(json.dumps({"arena": eng.arena.summary()}, indent=1))
     done = [r for r in rep.completed if not r.truncated]
     for r in done[:3]:
         print(f"  req{r.rid} [{r.model_id}]: {r.generated}")
@@ -222,6 +238,26 @@ def main(argv=None):
                     help="reload granularity: 'layer' overlaps the "
                          "per-layer schedule behind compute, 'model' "
                          "charges the whole reload as serial stalls")
+    ap.add_argument("--slab-mode", default="full",
+                    choices=("full", "bounded"),
+                    help="slab reservation per hot streamed model: "
+                         "'full' keeps the whole reload working set, "
+                         "'bounded' keeps a 2-slice double buffer and "
+                         "re-streams the rest per decode burst "
+                         "(requires --stream layer)")
+    ap.add_argument("--repartition", default="off",
+                    choices=("off", "epoch"),
+                    help="KV page leases: 'off' freezes the init-time "
+                         "partition, 'epoch' follows per-tenant "
+                         "live-page watermarks every --epoch-steps")
+    ap.add_argument("--epoch-steps", type=int, default=64,
+                    help="steps between arena repartition epochs")
+    ap.add_argument("--max-bypass", type=int, default=64,
+                    help="admission aging bound: max steps a page-"
+                         "starved head can be bypassed (0 = unbounded)")
+    ap.add_argument("--shifting-mix", action="store_true",
+                    help="reverse the zoo's traffic shares mid-trace "
+                         "(the repartition stress shape)")
     ap.add_argument("--hbm-budget-kib", type=int, default=0,
                     help="pool HBM budget (0 -> auto-size from the zoo)")
     ap.add_argument("--slab-frac", type=float, default=0.5,

@@ -381,6 +381,13 @@ class MoEDims:
 
 
 def moe_dims(cfg, n_tokens: int) -> MoEDims:
+    """Expert-capacity ceiling for routing ``n_tokens`` tokens.
+
+    ``n_tokens`` must be the EXACT live token count, not a padded shape:
+    the ceiling is shape-static, so computing it from a padded bucket
+    inflates capacity and keeps tokens the exact-length oracle would
+    drop. Serving paths key the exact-length CAPACITY into the jit cache
+    as a static argument (moe.forward's ``route_capacity``)."""
     m = cfg.moe
     cap = int(math.ceil(n_tokens / m.num_experts * m.capacity_factor
                         * m.top_k))
@@ -389,6 +396,17 @@ def moe_dims(cfg, n_tokens: int) -> MoEDims:
     # "tile fits the D_i x D_o plane" rule transplanted to the TPU.
     cap = (cap + 127) // 128 * 128 if n_tokens >= 128 else cap
     return MoEDims(m.num_experts, m.top_k, cap)
+
+
+def moe_dims_dropless(cfg, n_tokens: int) -> MoEDims:
+    """Decode-step dims whose capacity no routing pattern can overflow
+    (every expert can absorb all ``n_tokens``). A decode batch holds one
+    token from each of ``n_tokens`` INDEPENDENT requests; the B=1 oracle
+    never drops at decode (a lone token's expert-queue position is 0),
+    so batching decode tokens must not introduce cross-request drops —
+    a slot's output may never depend on which neighbours share its step."""
+    m = cfg.moe
+    return MoEDims(m.num_experts, m.top_k, max(n_tokens, 4))
 
 
 def moe_router(x2d, w_router, dims: MoEDims):

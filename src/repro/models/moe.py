@@ -194,12 +194,21 @@ def _block(cfg, p, x, batch, mask, dims, cache=None, cache_pos=None,
 # --- forward / loss ------------------------------------------------------------------
 
 def forward(cfg, params, batch, *, remat=False, constrain=None,
-            return_kv=False, return_aux=False):
+            return_kv=False, return_aux=False, route_capacity=None):
+    """``route_capacity`` overrides the expert-capacity ceiling (a static
+    Python int, so callers key it into the jit cache): serving paths pass
+    ``moe_dims(cfg, exact_live_tokens).capacity`` when the batch is
+    padded, keeping the engine's drop decisions identical to the
+    exact-length oracle's. Trailing pads can claim capacity only AFTER
+    every live token (claims are in token order), so a tight ceiling
+    never displaces a live token in favour of a pad."""
     batch = _default_batch(cfg, batch)
     x = _embed(cfg, params, batch)
     B, S, D = x.shape
     mask = L.causal_mask(S, S) if S <= L.ATTN_CHUNK_THRESHOLD else None
-    dims = L.moe_dims(cfg, B * S)
+    dims = L.moe_dims(cfg, B * S) if route_capacity is None \
+        else dataclasses.replace(L.moe_dims(cfg, B * S),
+                                 capacity=route_capacity)
 
     def body(carry, p):
         y, kv, aux = _block(cfg, p, carry, batch, mask, dims,
@@ -280,7 +289,9 @@ def decode_step(cfg, params, state: MoEDecodeState, tokens, *,
     x = _embed(cfg, params, batch)
     kj = jnp.arange(T)[None, :]
     mask5 = (kj <= pos)[None, None, None]     # (1,1,1,1,T)
-    dims = L.moe_dims(cfg, B)
+    # decode batches mix independent requests: dropless capacity keeps a
+    # slot's output independent of which neighbours share its step
+    dims = L.moe_dims_dropless(cfg, B)
 
     if cfg.mla is not None:
         def body(carry, xs):
@@ -331,22 +342,23 @@ def init_paged_decode_state(cfg, num_pages: int, page_size: int,
         (cfg.num_layers, num_pages, page_size, latent_width(cfg)), dtype))
 
 
-def paged_prefill(cfg, params, batch, lengths, *, constrain=None):
+def paged_prefill(cfg, params, batch, lengths, *, constrain=None,
+                  route_capacity=None):
     """Forward the (padded) prompts; return per-sequence last-live-token
     logits plus the raw per-layer latents (L, B, S, r+dr) for page
     scatter.
 
     Pad positions never influence live ones through attention (causal),
     and trailing pads can never displace a live token from an expert
-    (capacity is claimed in token order). One caveat: the expert
-    capacity ceiling is shape-static, so it is computed from the PADDED
-    token count — with a tight capacity_factor the engine may therefore
-    KEEP a token the exact-length oracle would drop. ``reduced()``
-    configs are dropless by construction (capacity_factor 8), so the
-    token-for-token differential holds at every serving scale this repo
-    runs end-to-end."""
+    (capacity is claimed in token order). ``route_capacity`` carries the
+    EXACT-length capacity ceiling (keyed into the jit cache as a static
+    arg by the engine backend), so the engine's drop decisions match the
+    exact-length oracle's even at a tight capacity_factor — without it
+    the shape-static ceiling would be computed from the padded bucket
+    and keep tokens the oracle drops."""
     logits, kvs, _ = forward(cfg, params, batch, return_kv=True,
-                             return_aux=True, constrain=constrain)
+                             return_aux=True, constrain=constrain,
+                             route_capacity=route_capacity)
     idx = (lengths - 1)[:, None, None]
     last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
     return last, kvs.astype(L.COMPUTE_DTYPE)
@@ -428,7 +440,9 @@ def paged_decode_step(cfg, params, state: MoEPagedState, tokens,
     page_ids = jnp.take_along_axis(page_table, slot, axis=1)[:, 0]
     page_ids = jnp.where(active, page_ids, 0)
     offsets = jnp.where(active, pos % page, 0)
-    dims = L.moe_dims(cfg, B)
+    # dropless decode capacity: see decode_step — slots are independent
+    # requests, so batch composition must never cause an expert drop
+    dims = L.moe_dims_dropless(cfg, B)
 
     def body(carry, xs):
         p, pages = xs

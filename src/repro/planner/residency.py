@@ -162,6 +162,24 @@ def layer_schedule(cfg, param_bytes: int = 2,
     return tuple(slices)
 
 
+def double_buffer_bytes(schedule) -> int:
+    """Slice-pair granularity of a streaming schedule: the bytes a
+    2-slice double buffer must hold to pipeline it — the max over the
+    forward walk of two ADJACENT slices resident at once (slice k
+    computing out of one buffer while slice k+1 streams into the other).
+    This is the bounded streaming slab's working set: instead of the
+    whole reload set, only the worst adjacent pair is ever resident.
+
+    ``schedule`` is an iterable of per-slice byte counts in forward
+    order (e.g. ``ModelEntry.reload_schedule``)."""
+    sizes = [int(b) for b in schedule]
+    if not sizes:
+        return 0
+    if len(sizes) == 1:
+        return sizes[0]
+    return max(a + b for a, b in zip(sizes, sizes[1:]))
+
+
 @dataclasses.dataclass(frozen=True)
 class Decision:
     tensor: ParamTensor

@@ -2,12 +2,12 @@
 arrival-trace scheduler, multi-tenant model pool, and the elastic
 training supervisor."""
 
+from .arena import ArenaConfig, DeviceArena, partition_pages
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
                      HybridBackend, LatentBackend, PagedTransformerBackend,
                      PoolEngineConfig, PooledEngine, PooledReport,
                      RecurrentBackend, engine_backend, make_sampler,
-                     partition_pages, resolve_backend, run_static,
-                     vlm_extras_fn)
+                     resolve_backend, run_static, vlm_extras_fn)
 from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
                               TrainingSupervisor)
 from .kv_pager import TRASH_PAGE, PageAllocator, PagerConfig
@@ -15,9 +15,11 @@ from .model_pool import (ModelEntry, ModelPool, PoolConfig, PoolError,
                          PoolPlan, calibrated_reload_bytes_per_step,
                          model_weight_bytes)
 from .scheduler import (MultiQueueScheduler, Request, Scheduler,
-                        multi_tenant_trace, poisson_trace)
+                        multi_tenant_trace, poisson_trace,
+                        shifting_mix_trace)
 
-__all__ = ["Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
+__all__ = ["ArenaConfig", "DeviceArena",
+           "Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
            "PagedTransformerBackend", "RecurrentBackend", "HybridBackend",
            "LatentBackend", "engine_backend", "resolve_backend",
            "PooledEngine", "PoolEngineConfig", "PooledReport",
@@ -26,6 +28,6 @@ __all__ = ["Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
            "ModelPool", "ModelEntry", "PoolConfig", "PoolError", "PoolPlan",
            "model_weight_bytes", "calibrated_reload_bytes_per_step",
            "Request", "Scheduler", "MultiQueueScheduler",
-           "poisson_trace", "multi_tenant_trace",
+           "poisson_trace", "multi_tenant_trace", "shifting_mix_trace",
            "ElasticConfig", "RunReport", "StepTimeout",
            "TrainingSupervisor"]

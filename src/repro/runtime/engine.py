@@ -39,7 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models import get_model
-from .kv_pager import PageAllocator, PagerConfig, TRASH_PAGE
+from .arena import ArenaConfig, DeviceArena, partition_pages  # noqa: F401
+from .kv_pager import PagerConfig, TRASH_PAGE
 from .model_pool import ModelPool
 from .scheduler import MultiQueueScheduler, Request, Scheduler
 
@@ -455,8 +456,11 @@ class LatentBackend(_LinearPagedMixin):
         self.state = MoE.init_paged_decode_state(cfg, ecfg.num_pages,
                                                  ecfg.page_size)
 
-        def prefill_write(params, state, batch, lengths, page_ids):
-            last, latents = MoE.paged_prefill(cfg, params, batch, lengths)
+        def prefill_write(params, state, batch, lengths, page_ids,
+                          route_capacity):
+            last, latents = MoE.paged_prefill(
+                cfg, params, batch, lengths,
+                route_capacity=route_capacity)
             state = MoE.write_prefill_pages(cfg, state, latents[:, 0],
                                             page_ids)
             return last[0], state
@@ -465,15 +469,24 @@ class LatentBackend(_LinearPagedMixin):
             return MoE.paged_decode_step(cfg, params, state, tokens,
                                          page_table, lengths, active)
 
-        self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
+        # route_capacity is static: the exact-length expert-capacity
+        # ceiling is keyed into the jit cache, so a padded bucket traces
+        # once per (bucket, capacity) pair — distinct lengths with the
+        # same ceiling share a trace — instead of inflating the ceiling
+        # to the padded token count
+        self._prefill = jax.jit(prefill_write, donate_argnums=(1,),
+                                static_argnums=(5,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
     def prefill(self, ctx: np.ndarray, extras, slot: int,
                 page_ids: list[int]) -> np.ndarray:
+        from ..models import layers as L
+
         toks, pids = _bucket_prompt(ctx, self.ecfg, page_ids)
         logits, self.state = self._prefill(
             self.params, self.state, {"tokens": jnp.asarray(toks)},
-            jnp.asarray([len(ctx)], jnp.int32), jnp.asarray(pids))
+            jnp.asarray([len(ctx)], jnp.int32), jnp.asarray(pids),
+            L.moe_dims(self.cfg, len(ctx)).capacity)
         return np.asarray(logits)
 
 
@@ -530,7 +543,13 @@ class Engine:
         B, M, page = e.num_slots, pgr.max_pages_per_seq, pgr.page_size
         paged = self.backend.paged
         sched = Scheduler(requests)
-        alloc = PageAllocator(e.num_pages) if paged else None
+        # single-tenant arena: one lease spanning the whole page budget
+        # (the same allocator path the pooled engine leases per tenant)
+        arena = DeviceArena(ArenaConfig(kv_pages=e.num_pages),
+                            {"default": 1.0}) if paged else None
+        alloc = arena.allocator("default") if paged else None
+        if paged:
+            arena.register_page_bytes("default", self.backend.page_bytes)
 
         slots: list[Request | None] = [None] * B
         page_table = np.zeros((B, M), np.int32)
@@ -690,7 +709,7 @@ class Engine:
                 raise RuntimeError("engine exceeded max_steps")
 
         if paged:
-            alloc.check()
+            arena.check()
             assert alloc.live_count == 0, "pages leaked past completion"
         rep.preemptions = sched.preemptions
         rep.wall_s = time.monotonic() - t_run
@@ -743,16 +762,34 @@ class PoolEngineConfig(EngineConfig):
     at serving scale), charging a stall step only when the engine has no
     decode work to hide the DMA behind. round_robin is model-granular by
     definition (every switch drops the previous occupant whole).
+
+    ``repartition`` controls the device-memory arena's KV page leases:
+    ``off`` freezes the init-time demand-proportional partition (the PR-3
+    behaviour); ``epoch`` samples per-tenant live-page watermarks every
+    step and, every ``epoch_steps``, shrinks under-watermark tenants and
+    grows page-starved ones (free pages only — see runtime.arena).
+
+    ``max_bypass_steps`` is the global aging bound on the admission scan:
+    a page-starved tenant's head request may be bypassed by neighbouring
+    tenants' later arrivals for at most this many steps, after which the
+    scan BLOCKS for it (no later-arrival admissions) until its pages free
+    up. 0 disables the bound (unbounded bypass, the PR-3 behaviour).
     """
     policy: str = "reload_aware"       # | "round_robin"
     rr_quantum: int = 16               # steps per round-robin turn
     stream: str = "model"              # | "layer"
+    repartition: str = "off"           # | "epoch"
+    epoch_steps: int = 64
+    max_bypass_steps: int = 64         # 0 -> unbounded bypass
 
     def __post_init__(self):
         super().__post_init__()
         assert self.policy in ("reload_aware", "round_robin")
         assert self.rr_quantum >= 1
         assert self.stream in ("model", "layer")
+        assert self.repartition in ("off", "epoch")
+        assert self.epoch_steps >= 1
+        assert self.max_bypass_steps >= 0
 
 
 @dataclasses.dataclass
@@ -765,9 +802,13 @@ class PooledReport(EngineReport):
     stream: str = ""
     stall_steps: int = 0
     reload_bytes: int = 0
+    restream_bytes: int = 0            # bounded-slab re-fetch share
     reload_events: int = 0
     evictions: int = 0
     deferred_activations: int = 0
+    repartitions: int = 0              # arena epochs executed
+    pages_moved: int = 0               # leases moved between tenants
+    aging_blocks: int = 0              # admission scans blocked by aging
     peak_live_page_bytes: int = 0      # tenants' page sizes differ
     model_tokens: dict = dataclasses.field(default_factory=dict)
     stall_steps_by_model: dict = dataclasses.field(default_factory=dict)
@@ -800,50 +841,16 @@ class PooledReport(EngineReport):
             "stall_steps_by_model": dict(
                 sorted(self.stall_steps_by_model.items())),
             "reload_bytes": self.reload_bytes,
+            "restream_bytes": self.restream_bytes,
             "reload_events": self.reload_events,
             "evictions": self.evictions,
             "deferred_activations": self.deferred_activations,
+            "repartitions": self.repartitions,
+            "pages_moved": self.pages_moved,
+            "aging_blocks": self.aging_blocks,
             "model_tokens": dict(sorted(self.model_tokens.items())),
         })
         return s
-
-
-def partition_pages(num_pages: int, shares: dict[str, float]
-                    ) -> dict[str, int]:
-    """Split a shared page budget into per-tenant sub-ranges.
-
-    ``num_pages`` is the modeled pool budget (counting ONE trash page per
-    paged tenant, since each tenant's device pool carries its own);
-    ``shares`` maps paged tenant id -> demand weight. Returns usable
-    (non-trash) pages per tenant, proportional to demand with the
-    remainder going to the largest fractional parts (ties broken by id
-    for determinism), every tenant getting at least one page. The
-    invariant callers rely on: sum(result[t] + 1) <= num_pages, i.e. the
-    physical device pools never exceed the modeled shared budget.
-    """
-    ids = sorted(shares)
-    usable = num_pages - len(ids)      # one trash page per tenant
-    assert usable >= len(ids), \
-        f"page budget {num_pages} cannot back {len(ids)} paged tenants"
-    total = sum(shares[t] for t in ids)
-    exact = {t: usable * shares[t] / total for t in ids}
-    out = {t: int(exact[t]) for t in ids}
-    left = usable - sum(out.values())
-    # hand leftover pages to the largest fractional remainders
-    for t in sorted(ids, key=lambda t: (-(exact[t] - int(exact[t])), t)):
-        if left <= 0:
-            break
-        out[t] += 1
-        left -= 1
-    # a starved tenant takes its minimum page from the largest holder
-    for t in ids:
-        while out[t] < 1:
-            donor = max(ids, key=lambda d: (out[d], d))
-            assert out[donor] > 1, "unreachable: usable >= len(ids)"
-            out[donor] -= 1
-            out[t] += 1
-    assert sum(v + 1 for v in out.values()) <= num_pages
-    return out
 
 
 class PooledEngine:
@@ -876,26 +883,56 @@ class PooledEngine:
             pool.pack()
         self.pool = pool
         self.ecfg = ecfg or PoolEngineConfig()
+        assert pool.pcfg.slab_mode != "bounded" \
+            or self.ecfg.stream == "layer", \
+            "bounded slab mode re-streams through the layer-granular " \
+            "DMA FIFO; run it with stream='layer'"
         paged_shares = {
             e.model_id: e.demand for e in pool.plan.entries
             if getattr(engine_backend(e.cfg), "paged", False)}
-        self.page_split = (partition_pages(self.ecfg.num_pages, paged_shares)
-                           if paged_shares else {})
+        # the arena owns the whole modeled budget: the KV page region
+        # (per-tenant leases over one shared page budget) plus the weight
+        # region (pin + slab) whose occupancy the pool reports back
+        self.arena = DeviceArena(
+            ArenaConfig(kv_pages=self.ecfg.num_pages,
+                        pin_bytes=pool.pcfg.pin_budget_bytes,
+                        slab_bytes=pool.pcfg.slab_bytes,
+                        repartition=self.ecfg.repartition,
+                        epoch_steps=self.ecfg.epoch_steps),
+            paged_shares)
+        self.page_split = self.arena.page_split
         self.backends = {}
         self._pgr = {}                 # per-tenant pager geometry
         for e in pool.plan.entries:
             backend_cls = resolve_backend(e.cfg)
             ecfg_t = self.ecfg
             if e.model_id in self.page_split:
-                # tenant's device pool backs only its sub-range (+ its
-                # own trash page) — physical bytes track the partition
+                # tenant's device pool backs its provisioned rows (+ its
+                # own trash page): with repartition off that is exactly
+                # its lease, so physical bytes track the partition; in
+                # epoch mode rows are provisioned up to the grow cap
+                # while the MODELED leases stay conserved by the arena.
+                # Admission FEASIBILITY however is judged against the
+                # guaranteed INITIAL lease, not the cap — a grown lease
+                # is opportunistic and can shrink back, so a request
+                # must be completable under the static share alone.
                 ecfg_t = dataclasses.replace(
-                    self.ecfg, num_pages=self.page_split[e.model_id] + 1)
-            self._pgr[e.model_id] = ecfg_t.pager
+                    self.ecfg,
+                    num_pages=self.arena.cap(e.model_id) + 1)
+                self._pgr[e.model_id] = dataclasses.replace(
+                    self.ecfg,
+                    num_pages=self.page_split[e.model_id] + 1).pager
+            else:
+                self._pgr[e.model_id] = ecfg_t.pager
             self.backends[e.model_id] = backend_cls(
                 e.cfg, params[e.model_id], ecfg_t)
-        assert sum(n + 1 for n in self.page_split.values()) \
-            <= self.ecfg.num_pages, "physical pages exceed the pool budget"
+            if e.model_id in self.page_split:
+                self.arena.register_page_bytes(
+                    e.model_id, self.backends[e.model_id].page_bytes)
+        if self.ecfg.repartition == "off":
+            assert sum(n + 1 for n in self.page_split.values()) \
+                <= self.ecfg.num_pages, \
+                "physical pages exceed the pool budget"
         self.rng = np.random.default_rng(self.ecfg.seed)
         self._sample = make_sampler(self.rng, self.ecfg.greedy,
                                     self.ecfg.temperature)
@@ -907,9 +944,10 @@ class PooledEngine:
         B, M, page = e.num_slots, e.pager.max_pages_per_seq, e.pager.page_size
         order = list(pool.model_ids)
         sched = MultiQueueScheduler(requests)
-        # one allocator per paged tenant, sized to its partition sub-range
-        allocs = {m: PageAllocator(n + 1)
-                  for m, n in self.page_split.items()}
+        # the arena hands each paged tenant its leased allocator (a fresh
+        # run starts from the initial demand-proportional partition)
+        self.arena.reset_runtime()
+        allocs = {m: self.arena.allocator(m) for m in self.page_split}
         pool.reset_runtime()
 
         slots: list[Request | None] = [None] * B
@@ -963,11 +1001,16 @@ class PooledEngine:
             got = {r.model_id for r in slots if r is not None}
             return [m for m in order if m in got]
 
-        def pick_admissible(serve: list[str]) -> Request | None:
+        blocked_since: dict[int, int] = {}   # rid -> first page-blocked step
+
+        def pick_admissible(serve: list[str], step: int) -> Request | None:
             """Earliest ready head whose tenant can admit now. Page
             pressure is tenant-local (partitioned sub-ranges), so a
-            page-starved tenant waits without blocking its neighbours;
-            heads that can never fit are failed fast along the way."""
+            page-starved tenant waits without blocking its neighbours —
+            but only up to the aging bound: once a blocked head has been
+            bypassed for ``max_bypass_steps``, the scan BLOCKS for it
+            instead of admitting later arrivals past it. Heads that can
+            never fit are failed fast along the way."""
             while True:
                 for req in sched.ready_heads(serve):
                     backend = self.backends[req.model_id]
@@ -978,11 +1021,23 @@ class PooledEngine:
                     if not backend.can_ever_fit(pgr_t, len(req.prompt),
                                                 req.max_new_tokens,
                                                 ctx_len):
+                        blocked_since.pop(req.rid, None)
                         reject(sched.pop_ready(req))
                         break           # queues changed: rescan heads
-                    if allocs[req.model_id].can_alloc(
-                            len(backend.admission_rows(pgr_t, ctx_len))):
+                    rows = backend.admission_rows(pgr_t, ctx_len)
+                    if allocs[req.model_id].can_alloc(len(rows)):
+                        blocked_since.pop(req.rid, None)
                         return req
+                    # page-blocked head: feed the arena's load signal and
+                    # age it — an over-aged head stops the scan so later
+                    # arrivals cannot bypass it indefinitely
+                    first = blocked_since.setdefault(req.rid, step)
+                    self.arena.note_starved(req.model_id, step,
+                                            want=len(rows))
+                    if e.max_bypass_steps \
+                            and step - first >= e.max_bypass_steps:
+                        rep.aging_blocks += 1
+                        return None
                 else:
                     return None
 
@@ -1067,7 +1122,7 @@ class PooledEngine:
             admitting = True
             for s in range(B):
                 while admitting and slots[s] is None:
-                    req = pick_admissible(serve)
+                    req = pick_admissible(serve, step)
                     if req is None:
                         admitting = False
                         break
@@ -1120,6 +1175,12 @@ class PooledEngine:
                     mid = slots[s].model_id
                     if not self.backends[mid].paged:
                         continue
+                    if e.stream == "layer" and not pool.decode_ready(mid):
+                        # no decode this step (mid-re-stream / queued
+                        # behind the DMA): growing now would re-fire on
+                        # every blocked step and orphan the previous
+                        # page into the same table row
+                        continue
                     if lengths[s] % page != 0:
                         continue
                     pi = lengths[s] // page
@@ -1131,6 +1192,10 @@ class PooledEngine:
                     a = allocs[mid]
                     row = _growth_row(self.backends[mid], a, page_table,
                                       s, pi, slots[s].rid)
+                    if not a.can_alloc(1):
+                        # growth pressure is the other load signal the
+                        # arena repartitions on (preemption == starvation)
+                        self.arena.note_starved(mid, step)
                     while not a.can_alloc(1):
                         # only same-tenant slots are useful victims — the
                         # page-id space is partitioned, so a neighbour's
@@ -1158,6 +1223,11 @@ class PooledEngine:
                                and slots[s].model_id == m]
                     if not m_slots:
                         continue
+                    if e.stream == "layer" and not pool.decode_ready(m):
+                        # a bounded-slab tenant mid-re-stream (or a tenant
+                        # queued behind the serial DMA) skips this step;
+                        # its slots wait while the FIFO drains
+                        continue
                     act = np.zeros((B,), bool)
                     act[m_slots] = True
                     toks = np.where(act, pending, 0).astype(np.int32)
@@ -1178,6 +1248,8 @@ class PooledEngine:
                         rep.model_tokens[m] += 1
                         if req.done:
                             finish(s)
+                    # bounded slab: queue this burst's re-stream bytes
+                    pool.note_decode_burst(m)
                 if served:
                     did_compute = True
                     rep.decode_steps += 1
@@ -1211,19 +1283,31 @@ class PooledEngine:
                     rep.stall_steps_by_model[head] += 1
                 pool.stream_tick(pool.pcfg.reload_bytes_per_step)
 
+            # -- arena bookkeeping: watermarks + epoch repartition -------
+            self.arena.sample()
+            if self.arena.maybe_repartition(step) is not None:
+                # epoch boundary: weight-region occupancy joins the KV
+                # invariants maybe_repartition already asserted
+                self.arena.check(slab_used=pool.slab_used,
+                                 pinned_bytes=pool.plan.pinned_bytes)
+
             step += 1
             rr_left -= 1
             if step > e.max_steps:
                 raise RuntimeError("pooled engine exceeded max_steps")
 
+        self.arena.check(slab_used=pool.slab_used,
+                         pinned_bytes=pool.plan.pinned_bytes)
         for a in allocs.values():
-            a.check()
             assert a.live_count == 0, "pages leaked past completion"
         rep.preemptions = sched.preemptions
         rep.reload_bytes = pool.reload_bytes_total
+        rep.restream_bytes = pool.restream_bytes_total
         rep.reload_events = pool.reload_events
         rep.evictions = pool.evictions
         rep.deferred_activations = pool.deferred_activations
+        rep.repartitions = self.arena.repartitions
+        rep.pages_moved = self.arena.pages_moved
         rep.wall_s = time.monotonic() - t_run
         return rep
 

@@ -63,39 +63,58 @@ class PagerConfig:
 
 
 class PageAllocator:
-    """Free-list page allocator with per-owner accounting.
+    """Free-list page allocator with per-owner accounting and a resizable
+    usable-page *limit* (the device-memory arena's lease).
+
+    The physical rows ``{1, .., num_pages-1}`` are fixed at construction;
+    ``limit`` caps how many may be live at once. The arena repartitions
+    tenants by moving limits, never pages: shrinking only surrenders FREE
+    headroom (``set_limit`` refuses to cut below the live count), so a
+    live page is never remapped.
 
     Invariants (checked by ``check``): the free list and every owner's
     page list partition ``{1, .., num_pages-1}``; no page is owned twice;
-    the trash page is never handed out.
+    the trash page is never handed out; ``live_count <= limit``.
     """
 
-    def __init__(self, num_pages: int):
+    def __init__(self, num_pages: int, limit: int | None = None):
         self.num_pages = num_pages
+        self.limit = (num_pages - 1) if limit is None else limit
+        assert 0 <= self.limit <= num_pages - 1
         # LIFO free list: recently freed pages are reused first (warm).
         self._free: list[int] = list(range(num_pages - 1, 0, -1))
         self._owned: dict[int, list[int]] = {}
 
     @property
     def free_count(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now (free rows within the limit)."""
+        return min(len(self._free), self.limit - self.live_count)
 
     @property
     def live_count(self) -> int:
         return (self.num_pages - 1) - len(self._free)
 
+    def set_limit(self, limit: int) -> None:
+        """Resize the usable lease. Growing is bounded by the physical
+        rows; shrinking is bounded by the live count — only free pages
+        ever leave the lease."""
+        assert self.live_count <= limit <= self.num_pages - 1, \
+            f"limit {limit} outside [live {self.live_count}, " \
+            f"rows {self.num_pages - 1}]"
+        self.limit = limit
+
     def owned(self, owner: int) -> list[int]:
         return list(self._owned.get(owner, ()))
 
     def can_alloc(self, n: int) -> bool:
-        return len(self._free) >= n
+        return self.free_count >= n
 
     def alloc(self, owner: int, n: int) -> list[int] | None:
         """Hand ``n`` pages to ``owner``; None (and no change) if the pool
         can't cover the request — the caller preempts or waits."""
         if n < 0:
             raise ValueError("negative page count")
-        if len(self._free) < n:
+        if self.free_count < n:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._owned.setdefault(owner, []).extend(pages)
@@ -122,6 +141,8 @@ class PageAllocator:
 
     def check(self) -> None:
         """Assert free-list conservation and ownership disjointness."""
+        assert self.live_count <= self.limit, \
+            f"live {self.live_count} exceeds limit {self.limit}"
         seen: set[int] = set()
         for p in self._free:
             assert 0 < p < self.num_pages, f"free page {p} out of range"

@@ -32,7 +32,8 @@ import json
 import os
 import statistics
 
-from ..planner.residency import layer_schedule, weight_inventory
+from ..planner.residency import (double_buffer_bytes, layer_schedule,
+                                 weight_inventory)
 
 KiB = 1 << 10
 
@@ -107,18 +108,32 @@ class PoolConfig:
     ``reload_bytes_per_step`` is the DRAM->HBM bandwidth expressed in
     engine steps — reloads are serial with compute (§2.2), so activating a
     cold model stalls the engine ``ceil(reload_bytes / bandwidth)`` steps.
+
+    ``slab_mode`` sets what a streamed/evicted model RESERVES in the swap
+    slab while hot: ``full`` holds its whole reload working set resident
+    (the PR-3 behaviour), refusing any model whose set exceeds the slab;
+    ``bounded`` lets such a model serve anyway from a 2-slice double
+    buffer (the worst adjacent pair of its reload schedule), re-streaming
+    the remaining slices through the serial DMA on every decode burst —
+    trading DMA bytes for slab headroom, so more tenants fit at tiny
+    budgets. Working sets that fit stay fully resident in either mode
+    (re-streaming is never free, so the trade is only paid where it buys
+    servability). Bounded mode requires layer-granular streaming (the
+    double buffer IS the layer prefetch buffer).
     """
     hbm_budget_bytes: int
     slab_frac: float = 0.35            # budget fraction reserved for swapping
     reload_bytes_per_step: int = 32 * KiB
     hysteresis_steps: int = 32
     param_bytes: int = 2               # bf16 serving copies
+    slab_mode: str = "full"            # | "bounded"
 
     def __post_init__(self):
         assert self.hbm_budget_bytes >= 0
         assert 0.0 <= self.slab_frac < 1.0
         assert self.reload_bytes_per_step >= 1
         assert self.hysteresis_steps >= 0
+        assert self.slab_mode in ("full", "bounded")
 
     @property
     def slab_bytes(self) -> int:
@@ -145,14 +160,22 @@ class ModelEntry:
     weight_bytes: int
     pinned_bytes: int
     value_per_byte: float
-    fits_slab: bool                    # reload working set <= slab
+    fits_slab: bool                    # slab_need <= slab
     layer_bytes: tuple[int, ...] = ()  # full forward-order slice schedule
     pinned_layer_bytes: tuple[int, ...] = ()   # pinned share per slice
+    slab_need: int = 0                 # slab bytes RESERVED while hot
 
     @property
     def reload_bytes(self) -> int:
-        """Bytes fetched into the slab on each cold activation."""
+        """Bytes fetched over the DMA on each cold activation."""
         return self.weight_bytes - self.pinned_bytes
+
+    @property
+    def restream_bytes(self) -> int:
+        """Bytes a bounded-slab decode burst must re-fetch: everything in
+        the reload set beyond what the double buffer keeps resident
+        (zero in full mode, where slab_need covers the whole set)."""
+        return max(0, self.reload_bytes - self.slab_need)
 
     @property
     def reload_schedule(self) -> tuple[int, ...]:
@@ -203,11 +226,14 @@ class PoolPlan:
             "pin_budget_KiB": round(self.pcfg.pin_budget_bytes / KiB, 1),
             "slab_KiB": round(self.pcfg.slab_bytes / KiB, 1),
             "pinned_KiB": round(self.pinned_bytes / KiB, 1),
+            "slab_mode": self.pcfg.slab_mode,
             "models": {e.model_id: {
                 "residency": e.residency,
                 "weight_KiB": round(e.weight_bytes / KiB, 1),
                 "pinned_KiB": round(e.pinned_bytes / KiB, 1),
                 "reload_KiB": round(e.reload_bytes / KiB, 1),
+                "slab_need_KiB": round(e.slab_need / KiB, 1),
+                "servable": e.fits_slab,
                 "value_per_byte": round(e.value_per_byte, 3),
             } for e in self.entries},
         }
@@ -240,6 +266,7 @@ class ModelPool:
         self._stream_left: dict[str, int] = {}
         self.slab_used = 0
         self.reload_bytes_total = 0
+        self.restream_bytes_total = 0
         self.reload_events = 0
         self.deferred_activations = 0
         self.evictions = 0
@@ -297,12 +324,24 @@ class ModelPool:
                 cfg, pb, include=pinned_names[mid]))
             assert sum(full_sched) == totals[mid]
             assert sum(pin_sched) == pinned[mid]
+            reload_sched = tuple(f - p for f, p in zip(full_sched,
+                                                       pin_sched))
+            # what being hot costs the slab: the whole reload set when it
+            # fits (re-streaming is never free, so bounded mode only pays
+            # the DMA trade where it buys servability); a tenant whose
+            # working set OVERFLOWS the slab falls back to the 2-slice
+            # double buffer in bounded mode instead of being refused
+            need = reload
+            if self.pcfg.slab_mode == "bounded" \
+                    and reload > self.pcfg.slab_bytes:
+                need = min(reload, double_buffer_bytes(reload_sched))
             entries.append(ModelEntry(
                 model_id=mid, cfg=cfg, demand=demand,
                 weight_bytes=totals[mid], pinned_bytes=pinned[mid],
                 value_per_byte=values[mid],
-                fits_slab=reload <= self.pcfg.slab_bytes,
-                layer_bytes=full_sched, pinned_layer_bytes=pin_sched))
+                fits_slab=need <= self.pcfg.slab_bytes,
+                layer_bytes=full_sched, pinned_layer_bytes=pin_sched,
+                slab_need=need))
         self.plan = PoolPlan(tuple(entries), self.pcfg)
         return self.plan
 
@@ -315,6 +354,7 @@ class ModelPool:
         self._stream_left.clear()
         self.slab_used = 0
         self.reload_bytes_total = 0
+        self.restream_bytes_total = 0
         self.reload_events = 0
         self.deferred_activations = 0
         self.evictions = 0
@@ -358,7 +398,7 @@ class ModelPool:
     def evict(self, model_id: str) -> None:
         since = self._hot_since.pop(model_id, None)
         if since is not None:
-            self.slab_used -= self._entry(model_id).reload_bytes
+            self.slab_used -= self._entry(model_id).slab_need
             self.evictions += 1
         if model_id in self._stream_left:
             self._stream_q.remove(model_id)
@@ -371,24 +411,24 @@ class ModelPool:
         evicted model ids, or None when activation must wait."""
         if not e.fits_slab:
             raise PoolError(
-                f"{e.model_id}: reload working set {e.reload_bytes}B "
+                f"{e.model_id}: slab working set {e.slab_need}B "
                 f"exceeds the swap slab ({self.pcfg.slab_bytes}B)")
         evicted: list[str] = []
-        need = self.slab_used + e.reload_bytes - self.pcfg.slab_bytes
+        need = self.slab_used + e.slab_need - self.pcfg.slab_bytes
         if need > 0:                   # pick victims before touching state
             freed = 0
             for v in self.evictable(step, protected):
                 if freed >= need:
                     break
                 evicted.append(v)
-                freed += self._entry(v).reload_bytes
+                freed += self._entry(v).slab_need
             if freed < need:
                 self.deferred_activations += 1
                 return None
             for v in evicted:
                 self.evict(v)
         self._hot_since[e.model_id] = step
-        self.slab_used += e.reload_bytes
+        self.slab_used += e.slab_need
         if e.reload_bytes:
             self.reload_bytes_total += e.reload_bytes
             self.reload_events += 1
@@ -464,6 +504,26 @@ class ModelPool:
                 del self._stream_left[m]
         return used
 
+    def note_decode_burst(self, model_id: str) -> None:
+        """Bounded-slab decode burst: the slices beyond the 2-slice double
+        buffer were consumed by this step's layer walk and must re-stream
+        through the serial DMA FIFO before the tenant's next decode step
+        (``decode_ready`` gates on the pending bytes dropping back under
+        the hideable window). The re-fetched bytes are charged as reload
+        traffic — the DMA-bytes-for-slab-headroom trade made explicit."""
+        if self.pcfg.slab_mode != "bounded":
+            return
+        e = self._entry(model_id)
+        refetch = e.restream_bytes
+        if refetch <= 0:
+            return
+        if model_id not in self._stream_left:
+            self._stream_q.append(model_id)
+            self._stream_left[model_id] = 0
+        self._stream_left[model_id] += refetch
+        self.reload_bytes_total += refetch
+        self.restream_bytes_total += refetch
+
     def decode_ready(self, model_id: str) -> bool:
         """Hot AND either fully streamed, or at the HEAD of the serial
         DMA queue with a tail small enough that the first decode step's
@@ -486,6 +546,7 @@ class ModelPool:
     def summary(self) -> dict:
         return {
             "reload_bytes_total": self.reload_bytes_total,
+            "restream_bytes_total": self.restream_bytes_total,
             "reload_events": self.reload_events,
             "evictions": self.evictions,
             "deferred_activations": self.deferred_activations,

@@ -76,6 +76,32 @@ def poisson_trace(n_requests: int, *, mean_interarrival: float,
     return out
 
 
+def _tenant_trace(tenants: Sequence[dict], n_requests: int, *,
+                  mean_interarrival: float,
+                  prompt_lens: tuple[int, ...],
+                  gen_lens: tuple[int, ...], seed: int,
+                  probs_for_rid) -> list[Request]:
+    """Shared body of the multi-tenant trace generators: one interleaved
+    Poisson arrival process whose per-arrival tenant distribution is
+    supplied by ``probs_for_rid(rid)``."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += rng.exponential(mean_interarrival)
+        ten = tenants[int(rng.choice(len(tenants), p=probs_for_rid(rid)))]
+        plen = int(rng.choice(prompt_lens))
+        glen = int(rng.choice(gen_lens))
+        prompt = rng.integers(0, ten["vocab_size"], size=plen) \
+            .astype(np.int32)
+        extras_fn = ten.get("extras_fn")
+        out.append(Request(
+            rid=rid, prompt=prompt, max_new_tokens=glen, arrival=int(t),
+            extras=extras_fn(rng) if extras_fn else None,
+            model_id=ten["model_id"]))
+    return out
+
+
 def multi_tenant_trace(tenants: Sequence[dict], n_requests: int, *,
                        mean_interarrival: float,
                        prompt_lens: tuple[int, ...],
@@ -89,24 +115,35 @@ def multi_tenant_trace(tenants: Sequence[dict], n_requests: int, *,
     share, so traffic from different models interleaves — the trace shape
     that makes naive weight swapping thrash.
     """
-    rng = np.random.default_rng(seed)
     shares = np.asarray([float(t.get("share", 1.0)) for t in tenants])
     probs = shares / shares.sum()
-    t = 0.0
-    out = []
-    for rid in range(n_requests):
-        t += rng.exponential(mean_interarrival)
-        ten = tenants[int(rng.choice(len(tenants), p=probs))]
-        plen = int(rng.choice(prompt_lens))
-        glen = int(rng.choice(gen_lens))
-        prompt = rng.integers(0, ten["vocab_size"], size=plen) \
-            .astype(np.int32)
-        extras_fn = ten.get("extras_fn")
-        out.append(Request(
-            rid=rid, prompt=prompt, max_new_tokens=glen, arrival=int(t),
-            extras=extras_fn(rng) if extras_fn else None,
-            model_id=ten["model_id"]))
-    return out
+    return _tenant_trace(tenants, n_requests,
+                         mean_interarrival=mean_interarrival,
+                         prompt_lens=prompt_lens, gen_lens=gen_lens,
+                         seed=seed, probs_for_rid=lambda rid: probs)
+
+
+def shifting_mix_trace(tenants: Sequence[dict], n_requests: int, *,
+                       mean_interarrival: float,
+                       prompt_lens: tuple[int, ...],
+                       gen_lens: tuple[int, ...],
+                       seed: int = 0, flip_frac: float = 0.5
+                       ) -> list[Request]:
+    """A multi-tenant trace whose traffic mix SHIFTS mid-run: the first
+    ``flip_frac`` of the requests draw tenants by the given shares, the
+    remainder by the REVERSED share list (the first tenant's weight lands
+    on the last, and so on). This is the trace shape a static
+    demand-proportional page partition cannot track — the arena's
+    load-driven repartitioning is measured against it.
+    """
+    shares = np.asarray([float(t.get("share", 1.0)) for t in tenants])
+    probs = shares / shares.sum()
+    flipped = probs[::-1]
+    n_first = int(n_requests * flip_frac)
+    return _tenant_trace(
+        tenants, n_requests, mean_interarrival=mean_interarrival,
+        prompt_lens=prompt_lens, gen_lens=gen_lens, seed=seed,
+        probs_for_rid=lambda rid: probs if rid < n_first else flipped)
 
 
 class Scheduler:

@@ -1,0 +1,227 @@
+"""Device-memory arena: leased allocators, watermark-driven epoch
+repartitioning, and the arena invariants (conservation, disjointness,
+live-pages-never-move, budget ceiling) — deterministic unit tests plus a
+seeded random walk. The hypothesis variants live in
+test_arena_property.py (skipped when hypothesis is absent)."""
+
+import numpy as np
+import pytest
+
+from repro.planner.residency import double_buffer_bytes
+from repro.runtime import (ArenaConfig, DeviceArena, PageAllocator,
+                           partition_pages)
+
+
+# --- leased PageAllocator --------------------------------------------------------
+
+
+def test_allocator_limit_gates_allocation():
+    a = PageAllocator(17, limit=5)
+    assert a.free_count == 5            # 16 physical rows, 5 leased
+    pages = a.alloc(1, 5)
+    assert len(pages) == 5
+    assert not a.can_alloc(1)           # lease exhausted, rows remain
+    assert a.live_count == 5
+    a.check()
+    a.set_limit(8)                      # grow within physical rows
+    assert a.free_count == 3
+    assert a.alloc(2, 3) is not None
+    a.free_owner(1)
+    a.set_limit(3)                      # shrink down to live count
+    assert a.free_count == 0
+    with pytest.raises(AssertionError):
+        a.set_limit(2)                  # below live: refused
+    with pytest.raises(AssertionError):
+        a.set_limit(17)                 # beyond physical rows
+    a.check()
+
+
+def test_allocator_default_limit_is_whole_pool():
+    a = PageAllocator(9)
+    assert a.limit == 8 and a.free_count == 8
+
+
+# --- arena construction ----------------------------------------------------------
+
+
+def _arena(repartition="epoch", kv_pages=33, epoch_steps=8,
+           shares=None, page_bytes=None):
+    arena = DeviceArena(
+        ArenaConfig(kv_pages=kv_pages, repartition=repartition,
+                    epoch_steps=epoch_steps),
+        shares or {"a": 2.0, "b": 1.0})
+    for t, b in (page_bytes or {"a": 64, "b": 64}).items():
+        arena.register_page_bytes(t, b)
+    return arena
+
+
+def test_arena_initial_partition_matches_partition_pages():
+    arena = _arena()
+    split = partition_pages(33, {"a": 2.0, "b": 1.0})
+    assert arena.page_split == split
+    for t, n in split.items():
+        assert arena.lease(t) == n
+        assert arena.allocator(t).limit == n
+    # off mode provisions rows exactly at the lease; epoch mode up to
+    # the grow cap
+    off = _arena(repartition="off")
+    for t, n in split.items():
+        assert off.cap(t) == n
+        assert arena.cap(t) >= n
+    arena.check()
+
+
+def test_arena_repartition_grows_starved_tenant_from_free_headroom():
+    arena = _arena()
+    a0, b0 = arena.lease("a"), arena.lease("b")
+    # b runs hot against its lease and reports starvation; a sits idle
+    arena.allocator("b").alloc(7, arena.lease("b"))
+    for step in range(1, 9):
+        arena.note_starved("b", step, want=3)
+        arena.sample()
+    moves = arena.maybe_repartition(8)
+    assert moves, "epoch boundary must repartition"
+    assert arena.lease("b") > b0
+    assert arena.lease("a") < a0
+    # conservation in bytes (equal page sizes -> equal page counts)
+    assert arena.lease("a") + arena.lease("b") == a0 + b0
+    assert arena.allocator("b").can_alloc(1)
+    arena.check()
+
+
+def test_arena_never_moves_live_pages():
+    arena = _arena()
+    alloc_a = arena.allocator("a")
+    pages = alloc_a.alloc(1, arena.lease("a"))   # a is fully live
+    owned_before = sorted(alloc_a.owned(1))
+    for step in range(1, 9):
+        arena.note_starved("b", step, want=4)
+        arena.sample()
+    arena.maybe_repartition(8)
+    # a had zero free headroom: nothing can be donated, and the pages a
+    # holds are untouched
+    assert sorted(alloc_a.owned(1)) == owned_before
+    assert arena.lease("a") >= alloc_a.live_count
+    assert pages == alloc_a.owned(1)
+    arena.check()
+
+
+def test_arena_watermark_protects_recently_used_headroom():
+    """A tenant whose pages were live DURING the epoch keeps its lease up
+    to the watermark even if the pages were freed before the boundary."""
+    arena = _arena()
+    a = arena.allocator("a")
+    a.alloc(1, arena.lease("a") - 1)
+    arena.sample()                      # watermark ~= lease
+    a.free_owner(1)
+    for step in range(1, 9):
+        arena.note_starved("b", step, want=2)
+        arena.sample()
+    arena.maybe_repartition(8)
+    # watermark + slack bounds the donation: at most lease - wm - slack
+    assert arena.lease("a") >= arena.page_split["a"] - 1
+    arena.check()
+
+
+def test_arena_byte_conversion_between_unequal_page_sizes():
+    """Moves settle in bytes: a donated small page funds less than one
+    big page, with the remainder banked as spare."""
+    arena = _arena(shares={"big": 1.0, "small": 1.0},
+                   page_bytes={"big": 256, "small": 32})
+    small0, big0 = arena.lease("small"), arena.lease("big")
+    bytes0 = big0 * 256 + small0 * 32
+    for step in range(1, 9):
+        arena.note_starved("big", step, want=1)
+        arena.sample()
+    arena.maybe_repartition(8)
+    gained = arena.lease("big") - big0
+    donated = small0 - arena.lease("small")
+    assert gained >= 1
+    assert donated * 32 >= gained * 256      # bytes fund the move
+    assert arena.lease("big") * 256 + arena.lease("small") * 32 \
+        + arena.summary()["spare_bytes"] == bytes0
+    arena.check()
+
+
+def test_arena_off_mode_never_repartitions():
+    arena = _arena(repartition="off")
+    for step in range(1, 20):
+        arena.note_starved("b", step, want=4)
+        arena.sample()
+        assert arena.maybe_repartition(step) is None
+    assert arena.lease("a") == arena.page_split["a"]
+    assert arena.repartitions == 0
+
+
+def test_arena_reset_restores_initial_partition():
+    arena = _arena()
+    arena.allocator("a").alloc(1, 3)
+    for step in range(1, 9):
+        arena.note_starved("b", step, want=4)
+        arena.sample()
+    arena.maybe_repartition(8)
+    assert arena.lease("b") != arena.page_split["b"] \
+        or arena.pages_moved == 0
+    arena.reset_runtime()
+    assert arena.lease("a") == arena.page_split["a"]
+    assert arena.lease("b") == arena.page_split["b"]
+    assert arena.allocator("a").live_count == 0
+    assert arena.repartitions == 0 and not arena.history
+    arena.check()
+
+
+def test_arena_random_walk_invariants_hold():
+    """Seeded random walk over alloc/free/starve/epoch ops: the four
+    arena invariants hold at every epoch boundary (hypothesis-free twin
+    of test_arena_property.py, so the property is exercised even where
+    hypothesis is not installed)."""
+    rng = np.random.default_rng(0)
+    arena = _arena(kv_pages=49, epoch_steps=4,
+                   shares={"a": 3.0, "b": 1.0, "c": 1.0},
+                   page_bytes={"a": 128, "b": 64, "c": 32})
+    owners = {t: 0 for t in arena.tenants}
+    bytes0 = sum(arena.lease(t) * pb for t, pb in
+                 (("a", 128), ("b", 64), ("c", 32)))
+    for step in range(1, 200):
+        for t in arena.tenants:
+            alloc = arena.allocator(t)
+            op = rng.integers(0, 3)
+            if op == 0:
+                n = int(rng.integers(1, 4))
+                if alloc.can_alloc(n):
+                    owners[t] += 1
+                    assert alloc.alloc(owners[t], n) is not None
+                else:
+                    arena.note_starved(t, step, want=n)
+            elif op == 1 and owners[t]:
+                alloc.free_owner(int(rng.integers(1, owners[t] + 1)))
+        arena.sample()
+        before = {t: {o: sorted(arena.allocator(t).owned(o))
+                      for o in range(1, owners[t] + 1)
+                      if arena.allocator(t).owned(o)}
+                  for t in arena.tenants}
+        if arena.maybe_repartition(step) is not None:
+            # live pages never move across a repartition
+            for t in arena.tenants:
+                for o, pages in before[t].items():
+                    assert sorted(arena.allocator(t).owned(o)) == pages
+        arena.check()
+        got = sum(arena.lease(t) * pb for t, pb in
+                  (("a", 128), ("b", 64), ("c", 32)))
+        assert got + arena.summary()["spare_bytes"] == bytes0
+    assert arena.repartitions > 0
+
+
+# --- slice-pair double buffer ----------------------------------------------------
+
+
+def test_double_buffer_bytes_is_max_adjacent_pair():
+    assert double_buffer_bytes([]) == 0
+    assert double_buffer_bytes([7]) == 7
+    assert double_buffer_bytes([3, 4, 5]) == 9
+    assert double_buffer_bytes([10, 1, 1, 10]) == 11
+    # the bound is what a 2-slice pipeline actually holds: never more
+    # than the sum of the two largest ADJACENT slices
+    sched = [32, 144, 144, 32]
+    assert double_buffer_bytes(sched) == 288
+    assert double_buffer_bytes(sched) <= sum(sched)

@@ -1,0 +1,85 @@
+"""Property-based tests (hypothesis) for the device-memory arena's
+repartitioning invariants over random tenant geometries and random
+alloc/free/starve traces: page-byte conservation, per-tenant range
+disjointness, live-pages-never-move, and the modeled budget ceiling."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime import ArenaConfig, DeviceArena  # noqa: E402
+
+TENANTS = ("a", "b", "c")
+
+
+@st.composite
+def arena_setups(draw):
+    n = draw(st.integers(min_value=2, max_value=3))
+    tenants = TENANTS[:n]
+    shares = {t: draw(st.floats(min_value=0.5, max_value=4.0))
+              for t in tenants}
+    page_bytes = {t: draw(st.sampled_from((32, 64, 128, 256)))
+                  for t in tenants}
+    kv_pages = draw(st.integers(min_value=4 * n, max_value=96))
+    epoch = draw(st.integers(min_value=1, max_value=8))
+    return tenants, shares, page_bytes, kv_pages, epoch
+
+
+@st.composite
+def op_traces(draw):
+    return draw(st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2),   # op kind
+                  st.integers(min_value=0, max_value=2),   # tenant index
+                  st.integers(min_value=1, max_value=5)),  # page count
+        min_size=1, max_size=120))
+
+
+@settings(max_examples=40, deadline=None)
+@given(arena_setups(), op_traces())
+def test_arena_invariants_under_random_traces(setup, trace):
+    tenants, shares, page_bytes, kv_pages, epoch = setup
+    arena = DeviceArena(
+        ArenaConfig(kv_pages=kv_pages, repartition="epoch",
+                    epoch_steps=epoch),
+        shares)
+    for t in tenants:
+        arena.register_page_bytes(t, page_bytes[t])
+    bytes0 = sum(arena.lease(t) * page_bytes[t] for t in tenants)
+    owners = {t: 0 for t in tenants}
+
+    for step, (kind, ti, n) in enumerate(trace, start=1):
+        t = tenants[ti % len(tenants)]
+        alloc = arena.allocator(t)
+        if kind == 0:
+            if alloc.can_alloc(n):
+                owners[t] += 1
+                assert alloc.alloc(owners[t], n) is not None
+            else:
+                arena.note_starved(t, step, want=n)
+        elif kind == 1 and owners[t]:
+            alloc.free_owner(1 + (n % owners[t]))
+        arena.sample()
+
+        live_before = {u: {o: tuple(sorted(arena.allocator(u).owned(o)))
+                           for o in range(1, owners[u] + 1)
+                           if arena.allocator(u).owned(o)}
+                       for u in tenants}
+        moved = arena.maybe_repartition(step)
+        if moved is not None:
+            for u in tenants:
+                for o, pages in live_before[u].items():
+                    # live pages are never remapped by a repartition
+                    assert tuple(sorted(arena.allocator(u).owned(o))) \
+                        == pages
+
+        # conservation + ceiling at every step
+        got = sum(arena.lease(u) * page_bytes[u] for u in tenants)
+        assert got + arena.summary()["spare_bytes"] == bytes0
+        assert got <= bytes0
+        for u in tenants:
+            a = arena.allocator(u)
+            # disjointness within the tenant's pool + lease bounds
+            a.check()
+            assert a.live_count <= arena.lease(u) <= arena.cap(u)
+        arena.check()

@@ -3,6 +3,7 @@ static-path oracle, the window-eviction edge case, and the 5-family pool
 (CPU reduced configs)."""
 
 import copy
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -154,6 +155,33 @@ def test_engine_completes_interleaved_requests(arch):
                  max_new_tokens=trace[0].max_new_tokens)])
     by_rid = {r.rid: r.generated for r in rep.completed}
     assert by_rid[trace[0].rid] == solo.completed[0].generated
+
+
+def test_latent_engine_matches_oracle_at_tight_capacity():
+    """The shape-static expert-capacity regression: the engine pads
+    prompts to the prefill bucket, and computing the capacity ceiling
+    from the PADDED token count used to KEEP tokens the exact-length
+    oracle drops (the ROADMAP workaround pinned reduced() configs at
+    capacity_factor 8 so drops never happened). The backend now keys the
+    EXACT-length capacity into the jit cache, so this pins a prompt whose
+    routing really overflows an expert at the arch's own tight
+    capacity_factor — the oracle's trajectory changes when capacity is
+    relaxed, proving drops occur — and the engine must still match
+    token-for-token."""
+    cfg, params = _setup("deepseek-v2-lite-16b")
+    assert cfg.moe.capacity_factor <= 2.0, \
+        "reduced() re-relaxed the capacity workaround"
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (6,), 0,
+                                           cfg.vocab_size), np.int32)
+    want = _static_oracle(cfg, params, prompt, 8)
+    relaxed = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    assert _static_oracle(relaxed, params, prompt, 8) != want, \
+        "prompt does not overflow an expert: the differential is vacuous"
+    got, rep = _engine_tokens(cfg, params, prompt, 8)
+    assert got == want
+    assert rep.prefill_tokens > len(prompt), \
+        "prefill was not bucket-padded: the padded-ceiling path is idle"
 
 
 def test_backend_registry_and_error_message():

@@ -9,11 +9,13 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import get_model
-from repro.planner.residency import layer_schedule, weight_inventory
+from repro.planner.residency import (double_buffer_bytes, layer_schedule,
+                                     weight_inventory)
 from repro.runtime import (ModelPool, MultiQueueScheduler, PoolConfig,
                            PoolEngineConfig, PoolError, PooledEngine,
                            Request, multi_tenant_trace, partition_pages,
-                           poisson_trace, vlm_extras_fn)
+                           poisson_trace, shifting_mix_trace,
+                           vlm_extras_fn)
 
 KiB = 1 << 10
 
@@ -514,6 +516,217 @@ def test_pooled_engine_physical_pages_match_modeled_budget():
     assert len(rep.completed) == 9
     assert all(not r.truncated for r in rep.completed)
     assert rep.peak_live_pages <= sum(eng.page_split.values())
+
+
+# --- bounded streaming slab ------------------------------------------------------
+
+
+def test_bounded_slab_need_falls_back_to_double_buffer():
+    """In bounded mode a model whose reload set FITS the slab reserves it
+    whole (no gratuitous re-streaming); one that overflows reserves only
+    the worst adjacent slice pair and becomes servable."""
+    mk = lambda mode: _pool(PoolConfig(hbm_budget_bytes=520 * KiB,
+                                       slab_frac=0.6, slab_mode=mode))
+    full, bnd = mk("full"), mk("bounded")
+    for pool in (full, bnd):
+        for e in pool.plan.entries:
+            if e.model_id != "rwkv6-7b":
+                assert e.slab_need == e.reload_bytes   # fits -> resident
+                assert e.restream_bytes == 0
+    ef, eb = full.plan.entry("rwkv6-7b"), bnd.plan.entry("rwkv6-7b")
+    assert not ef.fits_slab                            # 352K > 312K slab
+    assert eb.fits_slab                                # pair 288K fits
+    assert eb.slab_need == double_buffer_bytes(eb.reload_schedule)
+    assert eb.restream_bytes == eb.reload_bytes - eb.slab_need > 0
+
+
+def test_pooled_engine_bounded_slab_serves_overflow_tenant():
+    """End-to-end at a slab too small for rwkv's working set: full mode
+    rejects its requests; bounded mode serves every one of them from the
+    2-slice double buffer, re-streaming per decode burst, WITHOUT adding
+    stall steps to the incumbent tenant."""
+    cfgs, params, tenants = _zoo_setup(archs=("codeqwen1.5-7b",
+                                              "rwkv6-7b"))
+    trace = multi_tenant_trace(tenants, 12, mean_interarrival=0.4,
+                               prompt_lens=(6, 10), gen_lens=(3, 6),
+                               seed=2)
+    reps = {}
+    for mode in ("full", "bounded"):
+        pool = ModelPool(PoolConfig(hbm_budget_bytes=520 * KiB,
+                                    slab_frac=0.6,
+                                    reload_bytes_per_step=16 * KiB,
+                                    slab_mode=mode))
+        for a, c in cfgs.items():
+            pool.register(a, c, demand=2.0 if c.family == "dense" else 1.0)
+        ecfg = PoolEngineConfig(num_slots=4, page_size=8, num_pages=49,
+                                max_pages_per_seq=8, prefill_bucket=8,
+                                stream="layer")
+        reps[mode] = PooledEngine(pool, params, ecfg).run(
+            copy.deepcopy(trace))
+    full, bnd = reps["full"], reps["bounded"]
+    rejected = [r for r in full.completed if r.model_id == "rwkv6-7b"]
+    assert rejected and all(r.truncated for r in rejected)
+    assert all(not r.truncated for r in bnd.completed)
+    assert bnd.restream_bytes > 0
+    assert bnd.reload_bytes >= full.reload_bytes + bnd.restream_bytes \
+        - full.restream_bytes
+    # the DMA-bound re-stream cost lands on rwkv alone; the incumbent's
+    # stalls are unchanged
+    assert bnd.stall_steps_by_model["codeqwen1.5-7b"] \
+        <= full.stall_steps_by_model["codeqwen1.5-7b"]
+    assert bnd.stall_steps_by_model["rwkv6-7b"] > 0
+
+
+def test_bounded_slab_paged_tenant_growth_waits_with_decode():
+    """Regression: a PAGED tenant blocked mid-re-stream must not re-run
+    the page-growth path on every blocked step — growth fired while
+    lengths stood still, overwriting the same table row with a fresh
+    page each step (orphaning the old one) until the lease drained and
+    the tenant preempted itself. deepseek's latent pages + a working set
+    that overflows the slab reproduce it: with growth gated on
+    decode_ready the run completes with zero preemptions and a live-page
+    peak that tracks real context, not the blocked-step count."""
+    arch = "deepseek-v2-lite-16b"
+    cfg = get_config(arch).reduced()
+    params = {arch: get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))}
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=170 * KiB, slab_frac=0.6,
+                                reload_bytes_per_step=16 * KiB,
+                                slab_mode="bounded"))
+    pool.register(arch, cfg)
+    assert pool.pack().entry(arch).restream_bytes > 0
+    trace = poisson_trace(6, mean_interarrival=0.5, prompt_lens=(6, 10),
+                          gen_lens=(8, 16), vocab_size=cfg.vocab_size,
+                          seed=4)
+    for r in trace:
+        r.model_id = arch
+    ecfg = PoolEngineConfig(num_slots=3, page_size=8, num_pages=17,
+                            max_pages_per_seq=8, prefill_bucket=8,
+                            stream="layer")
+    rep = PooledEngine(pool, params, ecfg).run(copy.deepcopy(trace))
+    assert all(not r.truncated for r in rep.completed)
+    assert rep.restream_bytes > 0          # really ran the blocked path
+    assert rep.preemptions == 0            # no lease-draining growth spin
+    # 3 slots x at most pages_for(10 + 16) = 4 pages of real context
+    assert rep.peak_live_pages <= 3 * 4
+
+
+def test_bounded_slab_requires_layer_streaming():
+    cfgs, params, _ = _zoo_setup(archs=("codeqwen1.5-7b",))
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=1 << 20,
+                                slab_mode="bounded"))
+    pool.register("codeqwen1.5-7b", cfgs["codeqwen1.5-7b"])
+    with pytest.raises(AssertionError, match="layer"):
+        PooledEngine(pool, params,
+                     PoolEngineConfig(num_slots=2, stream="model"))
+
+
+# --- load-driven repartitioning --------------------------------------------------
+
+
+def test_pooled_engine_epoch_repartition_tracks_shifting_mix():
+    """A shifting traffic mix (dense-heavy -> vlm-heavy) against a tight
+    page budget: the static init-time partition starves the phase-2
+    tenant into preemptions, epoch repartitioning moves free pages after
+    the watermarks and must not lose throughput (the arena asserts
+    conservation/disjointness/ceiling at every epoch inside run())."""
+    cfgs, params, tenants = _zoo_setup(archs=("codeqwen1.5-7b",
+                                              "qwen2-vl-7b"))
+    for t in tenants:
+        t["share"] = 3.0 if t["model_id"] == "codeqwen1.5-7b" else 1.0
+    trace = shifting_mix_trace(tenants, 24, mean_interarrival=0.6,
+                               prompt_lens=(8, 16), gen_lens=(8, 16, 24),
+                               seed=5)
+    reps, engines = {}, {}
+    for repart in ("off", "epoch"):
+        pool = ModelPool(PoolConfig(hbm_budget_bytes=2 << 20,
+                                    slab_frac=0.25))
+        for a, c in cfgs.items():
+            pool.register(a, c, demand=3.0 if c.family == "dense" else 1.0)
+        ecfg = PoolEngineConfig(num_slots=6, page_size=8, num_pages=25,
+                                max_pages_per_seq=8, prefill_bucket=8,
+                                repartition=repart, epoch_steps=16)
+        engines[repart] = PooledEngine(pool, params, ecfg)
+        reps[repart] = engines[repart].run(copy.deepcopy(trace))
+    off, epoch = reps["off"], reps["epoch"]
+    assert off.new_tokens == epoch.new_tokens
+    assert off.repartitions == 0 and off.pages_moved == 0
+    assert epoch.repartitions > 0 and epoch.pages_moved > 0
+    # the phase-2-heavy tenant's lease really grew past its static share
+    arena = engines["epoch"].arena
+    assert arena.lease("qwen2-vl-7b") > arena.page_split["qwen2-vl-7b"]
+    assert epoch.tokens_per_step >= off.tokens_per_step
+    assert epoch.preemptions <= off.preemptions
+
+
+def test_pooled_engine_repartition_off_is_static():
+    """repartition='off' IS the PR-3 static partition: device pools sized
+    exactly to the leases and no epoch ever moves a page."""
+    cfgs, params, tenants = _zoo_setup(archs=("codeqwen1.5-7b",
+                                              "qwen2-vl-7b"))
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=2 << 20, slab_frac=0.25))
+    for a, c in cfgs.items():
+        pool.register(a, c)
+    eng = PooledEngine(pool, params, POOL_ECFG)
+    for m, n in eng.page_split.items():
+        assert eng.arena.cap(m) == n
+    trace = multi_tenant_trace(tenants, 8, mean_interarrival=0.5,
+                               prompt_lens=(6, 10), gen_lens=(3, 6),
+                               seed=9)
+    rep = eng.run(copy.deepcopy(trace))
+    assert rep.repartitions == 0 and rep.pages_moved == 0
+
+
+# --- admission aging bound -------------------------------------------------------
+
+
+def _aging_zoo():
+    cfgs = {a: get_config(a).reduced()
+            for a in ("codeqwen1.5-7b", "qwen2-vl-7b")}
+    params = {a: get_model(c).init_params(c, jax.random.PRNGKey(0))
+              for a, c in cfgs.items()}
+    return cfgs, params
+
+
+def _aging_run(cfgs, params, max_bypass: int):
+    """Tenant A's head (rid 1) is page-blocked behind its own running
+    request while tenant B's later arrivals keep taking the free slots —
+    the tenant-local-FCFS bypass the aging bound caps."""
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=2 << 20, slab_frac=0.25))
+    for a, c in cfgs.items():
+        pool.register(a, c, demand=1.0 if c.family == "dense" else 3.0)
+    ecfg = PoolEngineConfig(num_slots=4, page_size=8, num_pages=13,
+                            max_pages_per_seq=8, prefill_bucket=8,
+                            max_bypass_steps=max_bypass)
+    A, B = "codeqwen1.5-7b", "qwen2-vl-7b"
+    reqs = [Request(rid=0, prompt=np.zeros(16, np.int32),
+                    max_new_tokens=8, arrival=0, model_id=A),
+            Request(rid=1, prompt=np.zeros(16, np.int32),
+                    max_new_tokens=8, arrival=1, model_id=A)]
+    reqs += [Request(rid=2 + i, prompt=np.zeros(8, np.int32),
+                     max_new_tokens=4, arrival=1 + i, model_id=B)
+             for i in range(12)]
+    eng = PooledEngine(pool, params, ecfg)
+    assert eng.page_split[A] == 3     # rid 0 holds the whole lease
+    rep = eng.run(copy.deepcopy(reqs))
+    assert all(not r.truncated for r in rep.completed)
+    return rep, {r.rid: r for r in rep.completed}
+
+
+def test_admission_aging_bound_blocks_indefinite_bypass():
+    cfgs, params = _aging_zoo()
+    free_rep, free = _aging_run(cfgs, params, max_bypass=0)
+    aged_rep, aged = _aging_run(cfgs, params, max_bypass=3)
+    assert free_rep.aging_blocks == 0
+    assert aged_rep.aging_blocks > 0
+    blocked_at, admitted = 1, aged[1].admitted_step
+    window = range(blocked_at + 3, admitted)
+    # unbounded: neighbours admit straight through the starved head's
+    # whole wait; bounded: the scan blocks once the head ages, so no
+    # later arrival is admitted past it until its pages free
+    assert any(free[r].admitted_step in window for r in range(2, 14))
+    assert not any(aged[r].admitted_step in window for r in range(2, 14))
+    # the bound reorders admissions, it never loses work
+    assert free_rep.new_tokens == aged_rep.new_tokens
 
 
 def test_pooled_engine_rejects_unservable_tenant():

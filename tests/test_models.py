@@ -6,6 +6,8 @@ config, asserting output shapes and no NaNs; decode consistency
 scalability paths (chunked attention, scatter MoE dispatch).
 """
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,6 +17,22 @@ from repro.configs import ARCH_IDS, get_config
 from repro.models import get_model, layers as L
 
 ARCHS = sorted(ARCH_IDS)
+
+
+def _dropless(cfg):
+    """Pin MoE capacity high enough that no token is ever dropped.
+
+    With the arch's real (tight) capacity_factor, one-shot forward and
+    incremental decode route DIFFERENT token populations (all positions
+    at once vs one per step), so capacity overflow legitimately drops
+    different tokens — that is drop-policy semantics, not a cache bug.
+    The cache-consistency tests below compare routing-equivalent paths,
+    so they run dropless; drop consistency at tight capacity is covered
+    by the engine-vs-oracle differential in test_engine_families."""
+    if not cfg.moe:
+        return cfg
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
 
 
 def _batch(cfg, key, B=2, S=16):
@@ -54,7 +72,7 @@ def test_forward_and_train_step(arch):
 @pytest.mark.parametrize("arch", ARCHS)
 def test_prefill_decode_consistency(arch):
     """decode(prefill(prompt)) logits == forward(prompt + token) logits."""
-    cfg = get_config(arch).reduced()
+    cfg = _dropless(get_config(arch).reduced())
     api = get_model(cfg)
     key = jax.random.PRNGKey(1)
     params = api.init_params(cfg, key)
