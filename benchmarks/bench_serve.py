@@ -61,9 +61,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.models import get_model
-from repro.runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
+from repro.runtime import (Engine, EngineConfig, FaultSchedule, FleetConfig,
+                           FleetEngine, ModelPool, PoolConfig,
                            PoolEngineConfig, PooledEngine,
-                           calibrated_reload_bytes_per_step,
+                           calibrated_reload_bytes_per_step, diurnal_trace,
                            multi_tenant_trace, poisson_trace, run_static,
                            shifting_mix_trace, vlm_extras_fn)
 
@@ -370,12 +371,118 @@ def run_multi_tenant(frontier: str = "full") -> list[dict]:
     return rows
 
 
-def run(scenario: str = "all", frontier: str = "full") -> list[dict]:
+# --- fleet chaos scenario -------------------------------------------------------
+
+# replicated pools behind the demand-placement router on a diurnal
+# shifting-mix trace at 10x the single-pool volume; the chaos schedule
+# degrades one replica's DMA clock, straggles another, then kills the
+# primary mid-trace — the router must re-admit its tenants elsewhere
+# with zero requests lost and bounded p99 queue age
+FLEET_REPLICAS = 3
+FLEET_N_REQUESTS = 10 * POOL_N_REQUESTS
+FLEET_SMOKE_REQUESTS = POOL_N_REQUESTS
+FLEET_CHAOS = "dma@10:r1x4/60,straggle@20:r2x3/60,kill@40:r0"
+FLEET_SMOKE_CHAOS = "kill@5:r0"
+
+
+def _fleet_row(rep, name: str) -> dict:
+    return {
+        "name": name,
+        "requests": rep.n_requests,
+        "completed": len(rep.completed),
+        "shed": rep.requests_shed,
+        "lost": rep.requests_lost,
+        "new_tokens": rep.new_tokens,
+        "tokens_per_step": round(rep.tokens_per_step, 3),
+        "tokens_per_tick": round(rep.new_tokens / max(rep.ticks, 1), 3),
+        "reload_bytes": rep.reload_bytes,
+        "restream_bytes": rep.restream_bytes,
+        "ticks": rep.ticks,
+        "failovers": rep.failovers,
+        "re_admissions": rep.re_admissions,
+        "re_admission_latency_max": max(rep.re_admission_latency,
+                                        default=0),
+        "retries": rep.retries,
+        "queue_age_p50": rep.queue_age_percentile(50),
+        "queue_age_p99": rep.queue_age_percentile(99),
+        "placement": {m: list(v) for m, v in sorted(rep.placement.items())},
+        "per_replica": rep.per_replica,
+    }
+
+
+def run_fleet_chaos(smoke: bool = False) -> list[dict]:
+    cfgs, params, tenants = _zoo()
+    zoo = [(a, cfgs[a], share) for a, share in ZOO]
+    n = FLEET_SMOKE_REQUESTS if smoke else FLEET_N_REQUESTS
+    chaos_spec = FLEET_SMOKE_CHAOS if smoke else FLEET_CHAOS
+    trace = diurnal_trace(
+        tenants, n, mean_interarrival=MEAN_INTERARRIVAL,
+        prompt_lens=(8, 16), gen_lens=(4, 8, 24), seed=3)
+    reload_bps = calibrated_reload_bytes_per_step(
+        (a, cfgs[a]) for a, _ in ZOO)
+    pcfg = _pool_cfg(POOL_BUDGET_KIB, POOL_SLAB_FRAC, reload_bps)
+    ecfg = PoolEngineConfig(
+        num_slots=SLOTS, page_size=8, num_pages=97,
+        max_pages_per_seq=16, prefill_bucket=8,
+        policy="reload_aware", rr_quantum=16, stream="layer")
+
+    rows = [{"name": "serve_fleet_setup", "replicas": FLEET_REPLICAS,
+             "requests": n, "chaos": chaos_spec,
+             "reload_bytes_per_step": reload_bps}]
+    reps = {}
+    for placement in ("demand", "mirror"):
+        for label, spec in (("clean", ""), ("chaos", chaos_spec)):
+            fcfg = FleetConfig(n_replicas=FLEET_REPLICAS,
+                               placement=placement)
+            faults = FaultSchedule.parse(spec) if spec else None
+            fleet = FleetEngine(zoo, pcfg, ecfg, params, fcfg,
+                                faults=faults)
+            rep = fleet.run(copy.deepcopy(trace))
+            reps[placement, label] = rep
+            rows.append(_fleet_row(rep, f"serve_fleet/{placement}_{label}"))
+
+    dc, mc = reps["demand", "clean"], reps["mirror", "clean"]
+    rows.append({
+        "name": "serve_fleet_placement",
+        "tokens_per_step_ratio": round(
+            dc.tokens_per_step / mc.tokens_per_step, 3),
+        "tokens_per_tick_ratio": round(
+            (dc.new_tokens / max(dc.ticks, 1))
+            / (mc.new_tokens / max(mc.ticks, 1)), 3),
+        "reload_bytes_saved": mc.reload_bytes - dc.reload_bytes,
+        "same_tokens": _fleet_tokens(dc) == _fleet_tokens(mc),
+    })
+    dx = reps["demand", "chaos"]
+    rows.append({
+        "name": "serve_fleet_chaos",
+        "lost_any": max(r.requests_lost for r in reps.values()),
+        "failovers": dx.failovers,
+        "re_admissions": dx.re_admissions,
+        "re_admission_latency_max": max(dx.re_admission_latency,
+                                        default=0),
+        "shed": dx.requests_shed,
+        "p99_queue_age_clean": dc.queue_age_percentile(99),
+        "p99_queue_age_chaos": dx.queue_age_percentile(99),
+        "p99_queue_age_factor": round(
+            dx.queue_age_percentile(99)
+            / max(dc.queue_age_percentile(99), 1.0), 3),
+    })
+    return rows
+
+
+def _fleet_tokens(rep) -> dict:
+    return {r.rid: tuple(r.generated) for r in rep.completed}
+
+
+def run(scenario: str = "all", frontier: str = "full",
+        smoke: bool = False) -> list[dict]:
     rows = []
     if scenario in ("all", "engine_vs_static"):
         rows += run_engine_vs_static()
     if scenario in ("all", "multi_tenant"):
         rows += run_multi_tenant(frontier)
+    if scenario in ("all", "fleet_chaos"):
+        rows += run_fleet_chaos(smoke)
     return rows
 
 
@@ -485,6 +592,26 @@ def check(rows) -> None:
             f"b{bmin}_s{smin}: {point['bounded'][1]} vs {point['full'][1]}"
         assert point["bounded"][0]["restream_bytes"] > 0, \
             "bounded slab never re-streamed (the trade is not exercised)"
+    fleet = [r for r in rows if r["name"] == "serve_fleet_placement"]
+    if fleet:                           # fleet_chaos scenario present
+        (fp,) = fleet
+        assert fp["same_tokens"], \
+            "placements must generate the same tokens per request"
+        assert fp["tokens_per_step_ratio"] > 1.0, \
+            f"demand placement not ahead of mirror on fleet tokens/step " \
+            f"(ratio {fp['tokens_per_step_ratio']})"
+        assert fp["reload_bytes_saved"] > 0, \
+            "demand placement must move strictly fewer reload bytes " \
+            "than the mirror baseline"
+        (fc,) = [x for x in rows if x["name"] == "serve_fleet_chaos"]
+        assert fc["lost_any"] == 0, \
+            f"{fc['lost_any']} requests lost under chaos"
+        assert fc["failovers"] >= 1, "the kill never landed"
+        assert fc["re_admissions"] >= 1, \
+            "the killed replica carried no work to re-admit"
+        assert fc["p99_queue_age_factor"] <= 10.0, \
+            f"chaos p99 queue age unbounded " \
+            f"(factor {fc['p99_queue_age_factor']})"
 
 
 if __name__ == "__main__":
@@ -493,13 +620,17 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all",
-                    choices=("all", "engine_vs_static", "multi_tenant"))
+                    choices=("all", "engine_vs_static", "multi_tenant",
+                             "fleet_chaos"))
     ap.add_argument("--frontier", default="full",
                     choices=("full", "smoke"),
                     help="budget x slab sweep size (smoke: one point, "
                          "for CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fleet_chaos at 1x volume with a single kill "
+                         "(for CI)")
     args = ap.parse_args()
-    rows = run(args.scenario, args.frontier)
+    rows = run(args.scenario, args.frontier, args.smoke)
     for r in rows:
         print(json.dumps(r))
     check(rows)

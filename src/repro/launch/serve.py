@@ -23,7 +23,13 @@ live-page watermarks every ``--epoch-steps``; ``--slab-mode bounded``
 serves slab-overflow models from a 2-slice double buffer (re-streamed
 per decode burst); ``--max-bypass`` caps how long a page-starved head
 can be bypassed by neighbours; ``--shifting-mix`` reverses the zoo's
-traffic shares mid-trace (the repartition stress shape).
+traffic shares mid-trace (the repartition stress shape). ``--mode fleet`` replicates the pool
+``--replicas`` times behind the demand-placement router (runtime.fleet):
+each model lands on a subset of replicas by reuse-per-byte, requests
+route with tenant affinity + least-loaded fallback, and ``--chaos``
+injects replica kills / degraded DMA clocks / stragglers from a
+deterministic FaultSchedule — a killed replica's tenants are re-admitted
+elsewhere with zero requests lost.
 
 Runs reduced configs end-to-end on CPU (1x1 mesh); the pod-mesh serving
 cells are proven by the dry-run.
@@ -140,45 +146,7 @@ def parse_zoo(spec: str) -> list[tuple[str, float]]:
 
 def run_pool(args):
     """Multi-tenant serving: a model zoo bin-packed into one HBM pool."""
-    zoo = parse_zoo(args.zoo)
-    cfgs, params, tenants = {}, {}, []
-    for arch, share in zoo:
-        cfg = get_config(arch).reduced() if not args.full \
-            else get_config(arch)
-        cfgs[arch] = cfg
-        params[arch] = get_model(cfg).init_params(
-            cfg, jax.random.PRNGKey(args.seed))
-        tenants.append(dict(
-            model_id=arch, vocab_size=cfg.vocab_size, share=share,
-            extras_fn=vlm_extras_fn(cfg) if cfg.family == "vlm" else None))
-
-    from ..runtime.model_pool import model_weight_bytes
-    weights = {a: model_weight_bytes(c) for a, c in cfgs.items()}
-    # auto budget: pin ~62% of the zoo, slab big enough for the largest
-    # working set (so every registered model stays servable)
-    s = args.slab_frac
-    if not 0.0 < s < 1.0:
-        raise SystemExit("--slab-frac must be in (0, 1)")
-    budget = args.hbm_budget_kib * 1024 or 1024 + int(max(
-        0.62 * sum(weights.values()) / (1.0 - s),
-        max(weights.values()) / s))
-    # 0 -> the roofline-calibrated DMA clock (one clock with the kernel
-    # benches: an engine step is a decode step, reloads cross the slow
-    # DRAM->HBM interface); fallback=0 distinguishes "no roofline
-    # artifacts found" from a genuine calibration
-    reload_bps, label = args.reload_kib_per_step * 1024, ""
-    if not reload_bps:
-        reload_bps = calibrated_reload_bytes_per_step(cfgs.items(),
-                                                      fallback=0)
-        label = " (roofline-calibrated)"
-        if not reload_bps:
-            reload_bps = 8 * 1024
-            label = " (uncalibrated default: no roofline artifacts found)"
-    print(f"reload clock: {reload_bps} B/step{label}")
-    pcfg = PoolConfig(hbm_budget_bytes=budget, slab_frac=s,
-                      reload_bytes_per_step=reload_bps,
-                      hysteresis_steps=args.hysteresis,
-                      slab_mode=args.slab_mode)
+    zoo, cfgs, params, tenants, pcfg = _zoo_setup(args)
     pool = ModelPool(pcfg)
     for arch, share in zoo:
         pool.register(arch, cfgs[arch], demand=share)
@@ -220,13 +188,107 @@ def run_pool(args):
     return 0
 
 
+def _zoo_setup(args):
+    """Shared pool/fleet zoo construction: configs, params, tenants, and
+    the auto-sized PoolConfig."""
+    zoo = parse_zoo(args.zoo)
+    cfgs, params, tenants = {}, {}, []
+    for arch, share in zoo:
+        cfg = get_config(arch).reduced() if not args.full \
+            else get_config(arch)
+        cfgs[arch] = cfg
+        params[arch] = get_model(cfg).init_params(
+            cfg, jax.random.PRNGKey(args.seed))
+        tenants.append(dict(
+            model_id=arch, vocab_size=cfg.vocab_size, share=share,
+            extras_fn=vlm_extras_fn(cfg) if cfg.family == "vlm" else None))
+    from ..runtime.model_pool import model_weight_bytes
+    weights = {a: model_weight_bytes(c) for a, c in cfgs.items()}
+    # auto budget: pin ~62% of the zoo, slab big enough for the largest
+    # working set (so every registered model stays servable)
+    s = args.slab_frac
+    if not 0.0 < s < 1.0:
+        raise SystemExit("--slab-frac must be in (0, 1)")
+    budget = args.hbm_budget_kib * 1024 or 1024 + int(max(
+        0.62 * sum(weights.values()) / (1.0 - s),
+        max(weights.values()) / s))
+    # 0 -> the roofline-calibrated DMA clock (one clock with the kernel
+    # benches: an engine step is a decode step, reloads cross the slow
+    # DRAM->HBM interface); fallback=0 distinguishes "no roofline
+    # artifacts found" from a genuine calibration
+    reload_bps, label = args.reload_kib_per_step * 1024, ""
+    if not reload_bps:
+        reload_bps = calibrated_reload_bytes_per_step(cfgs.items(),
+                                                      fallback=0)
+        label = " (roofline-calibrated)"
+        if not reload_bps:
+            reload_bps = 8 * 1024
+            label = " (uncalibrated default: no roofline artifacts found)"
+    print(f"reload clock: {reload_bps} B/step{label}")
+    pcfg = PoolConfig(hbm_budget_bytes=budget, slab_frac=s,
+                      reload_bytes_per_step=reload_bps,
+                      hysteresis_steps=args.hysteresis,
+                      slab_mode=args.slab_mode)
+    return zoo, cfgs, params, tenants, pcfg
+
+
+def run_fleet(args):
+    """Replicated pools behind the demand-placement router, with
+    optional chaos injection (``--chaos "kill@120:r1,dma@200:r0x4/100"``)."""
+    from ..runtime import (FaultSchedule, FleetConfig, FleetEngine,
+                           diurnal_trace)
+    zoo, cfgs, params, tenants, pcfg = _zoo_setup(args)
+
+    page = max(8, args.prompt_len // 4)
+    max_len = args.prompt_len + args.gen
+    pages_per_seq = -(-max_len // page) + 1
+    ecfg = PoolEngineConfig(
+        num_slots=args.batch, page_size=page,
+        num_pages=1 + pages_per_seq * args.batch * 2,
+        max_pages_per_seq=pages_per_seq, prefill_bucket=page,
+        greedy=False, temperature=args.temperature, seed=args.seed,
+        policy=args.policy, rr_quantum=args.rr_quantum,
+        stream=args.stream, repartition=args.repartition,
+        epoch_steps=args.epoch_steps,
+        max_bypass_steps=args.max_bypass)
+    fcfg = FleetConfig(n_replicas=args.replicas,
+                       placement=args.placement)
+    faults = FaultSchedule.parse(args.chaos) if args.chaos else None
+    trace = diurnal_trace(
+        tenants, args.requests, mean_interarrival=args.mean_interarrival,
+        prompt_lens=(max(args.prompt_len // 2, 1), args.prompt_len),
+        gen_lens=(max(args.gen // 4, 1), max(args.gen // 2, 1), args.gen),
+        seed=args.seed)
+    fleet = FleetEngine([(a, cfgs[a], sh_) for a, sh_ in zoo],
+                        pcfg, ecfg, params, fcfg, faults=faults)
+    rep = fleet.run(trace)
+    print(f"zoo={args.zoo} mode=fleet replicas={args.replicas} "
+          f"placement={args.placement} chaos={args.chaos or 'none'} "
+          f"requests={args.requests}")
+    print(json.dumps(rep.summary(), indent=1))
+    assert rep.requests_lost == 0
+    assert rep.completed, "no requests completed"
+    print("ok")
+    return 0
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="codeqwen1.5-7b")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--mesh", default="host", choices=("host", "pod"))
     ap.add_argument("--mode", default="auto",
-                    choices=("auto", "engine", "static", "pool"))
+                    choices=("auto", "engine", "static", "pool", "fleet"))
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="fleet mode: number of replicated pools")
+    ap.add_argument("--placement", default="demand",
+                    choices=("demand", "mirror"),
+                    help="fleet model placement: 'demand' packs copies "
+                         "by reuse-per-byte, 'mirror' puts every model "
+                         "on every replica that fits (static baseline)")
+    ap.add_argument("--chaos", default="",
+                    help="fleet fault schedule, e.g. "
+                         "'kill@120:r1,dma@200:r0x4/100,straggle@300:r2x3/50'")
     ap.add_argument("--zoo",
                     default="codeqwen1.5-7b:2,qwen2-vl-7b:1,rwkv6-7b:1,"
                             "recurrentgemma-9b:1,deepseek-v2-lite-16b:1",
@@ -289,6 +351,9 @@ def main(argv=None):
     if args.mode == "pool":
         with mesh:
             return run_pool(args)
+    if args.mode == "fleet":
+        with mesh:
+            return run_fleet(args)
     cfg = get_config(args.arch)
     if not args.full:
         cfg = cfg.reduced()

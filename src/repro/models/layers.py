@@ -409,10 +409,18 @@ def moe_dims_dropless(cfg, n_tokens: int) -> MoEDims:
     return MoEDims(m.num_experts, m.top_k, max(n_tokens, 4))
 
 
-def moe_router(x2d, w_router, dims: MoEDims):
+def moe_router(x2d, w_router, dims: MoEDims, *, keep_override=None,
+               return_keep=False):
     """Top-k softmax routing with capacity. x2d: (N, D) -> dispatch (N, E, C)
     one-hot and combine (N, E, C) weights; overflowed tokens drop (standard
-    GShard behaviour)."""
+    GShard behaviour).
+
+    ``keep_override`` ((N, k) bool) REPLAYS a recorded drop population:
+    claims forced False never enter an expert queue, claims forced True
+    take queue positions counted over the forced-keep claims only — so a
+    re-prefill after preemption reproduces the original routing exactly
+    (capacity permitting). ``return_keep`` appends the realized (N, k)
+    keep mask to the outputs — what a first prefill records for replay."""
     N = x2d.shape[0]
     logits = (x2d.astype(jnp.float32) @ w_router.astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                    # (N, E)
@@ -421,10 +429,17 @@ def moe_router(x2d, w_router, dims: MoEDims):
     onehot = jax.nn.one_hot(gate_idx, dims.num_experts,
                             dtype=jnp.int32)                   # (N, k, E)
     flat = onehot.reshape(N * dims.top_k, dims.num_experts)
-    pos_in_expert = (jnp.cumsum(flat, axis=0) - flat) \
+    if keep_override is None:
+        counted = flat
+    else:                              # only forced-keep claims queue up
+        counted = flat * keep_override.reshape(N * dims.top_k, 1) \
+            .astype(jnp.int32)
+    pos_in_expert = (jnp.cumsum(counted, axis=0) - counted) \
         .reshape(N, dims.top_k, dims.num_experts)
     pos = jnp.sum(pos_in_expert * onehot, axis=-1)             # (N, k)
     keep = pos < dims.capacity
+    if keep_override is not None:
+        keep = keep & keep_override
     disp = (jax.nn.one_hot(gate_idx, dims.num_experts, dtype=x2d.dtype)
             * keep[..., None].astype(x2d.dtype))               # (N,k,E)
     cap_onehot = jax.nn.one_hot(pos, dims.capacity, dtype=x2d.dtype)
@@ -432,6 +447,8 @@ def moe_router(x2d, w_router, dims: MoEDims):
     combine = jnp.einsum("nke,nkc,nk->nec", disp, cap_onehot,
                          gate_vals.astype(x2d.dtype))
     aux = _load_balance_loss(probs, gate_idx, dims)
+    if return_keep:
+        return dispatch, combine, aux, keep
     return dispatch, combine, aux
 
 
@@ -444,20 +461,27 @@ def _load_balance_loss(probs, gate_idx, dims: MoEDims):
     return dims.num_experts * jnp.sum(me * ce)
 
 
-def moe_ffn_dense(x2d, p, dims: MoEDims):
+def moe_ffn_dense(x2d, p, dims: MoEDims, *, keep_override=None,
+                  return_keep=False):
     """Reference dispatch -> per-expert SwiGLU -> combine via (N, E, C)
     one-hot einsums (GShard formulation). O(N*E*C) memory: oracle /
     smoke-scale only — the production path is moe_ffn below."""
-    dispatch, combine, aux = moe_router(x2d, p["router"], dims)
+    routed = moe_router(x2d, p["router"], dims,
+                        keep_override=keep_override,
+                        return_keep=return_keep)
+    dispatch, combine, aux = routed[:3]
     xe = jnp.einsum("nec,nd->ecd", dispatch, x2d)              # (E, C, D)
     h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
         * jnp.einsum("ecd,edf->ecf", xe, p["w_up"])
     ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"])            # (E, C, D)
     y = jnp.einsum("nec,ecd->nd", combine, ye)
+    if return_keep:
+        return y, aux, routed[3]
     return y, aux
 
 
-def moe_ffn(x2d, p, dims: MoEDims):
+def moe_ffn(x2d, p, dims: MoEDims, *, keep_override=None,
+            return_keep=False):
     """Group-local sort/scatter dispatch -> grouped SwiGLU -> combine.
 
     O(N*k*D) memory (no (N, E, C) one-hots). Tokens are dispatched within
@@ -472,6 +496,12 @@ def moe_ffn(x2d, p, dims: MoEDims):
     The (E, C, D) expert batch is the paper's tile pool: one tile per
     expert, executed as a grouped weight-stationary GEMM (kernels.
     packed_mvm on TPU), experts sharded across D_h = the model axis.
+
+    ``keep_override`` / ``return_keep`` mirror moe_router: the override
+    replays a recorded drop population (queue positions are counted over
+    forced-keep claims only), ``return_keep`` appends the realized
+    (N, K) keep mask — with G == 1 both are bit-compatible with the
+    dense path.
     """
     N, D = x2d.shape
     E, K, C = dims.num_experts, dims.top_k, dims.capacity
@@ -492,9 +522,25 @@ def moe_ffn(x2d, p, dims: MoEDims):
     e_sorted = jnp.take_along_axis(e_flat, order, axis=-1)
     counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(e_flat)
     offsets = jnp.cumsum(counts, axis=-1) - counts             # (G, E)
-    pos = jnp.arange(n * K, dtype=jnp.int32)[None] \
-        - jnp.take_along_axis(offsets, e_sorted, axis=-1)
-    keep = pos < Cg
+    if keep_override is None:
+        pos = jnp.arange(n * K, dtype=jnp.int32)[None] \
+            - jnp.take_along_axis(offsets, e_sorted, axis=-1)
+        keep = pos < Cg
+    else:
+        # replay: queue positions counted over forced-keep claims only.
+        # e_sorted is expert-sorted within each group, so an exclusive
+        # cumsum of the forced mask minus its value at the expert's
+        # segment start is the within-expert queue position. offsets[e]
+        # can be n*K for empty trailing experts — pad with the total.
+        f_sorted = jnp.take_along_axis(
+            keep_override.reshape(G, n * K), order, axis=-1)
+        fi = f_sorted.astype(jnp.int32)
+        csum = jnp.cumsum(fi, axis=-1) - fi                    # exclusive
+        csum_pad = jnp.concatenate(
+            [csum, jnp.sum(fi, axis=-1, keepdims=True)], axis=-1)
+        starts = jnp.take_along_axis(csum_pad, offsets, axis=-1)
+        pos = csum - jnp.take_along_axis(starts, e_sorted, axis=-1)
+        keep = f_sorted & (pos < Cg)
     pos_c = jnp.where(keep, pos, Cg)                           # Cg = trash
     xg = shard_hint(x2d.reshape(G, n, D), "dp", None, None)
     x_rep = jnp.take_along_axis(
@@ -536,6 +582,10 @@ def moe_ffn(x2d, p, dims: MoEDims):
 
     y = jax.vmap(combine_g)(y_rep, w, order)                   # (G, n, D)
     y = shard_hint(y, "dp", None, None)
+    if return_keep:
+        inv = jnp.argsort(order, axis=-1)
+        keep_nk = jnp.take_along_axis(keep, inv, axis=-1).reshape(N, K)
+        return y.reshape(N, D), aux, keep_nk
     return y.reshape(N, D), aux
 
 

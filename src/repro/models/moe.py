@@ -153,24 +153,35 @@ def _mla_part(cfg, p, h, batch, mask, cache, cache_pos):
 
 # --- block ------------------------------------------------------------------------
 
-def _moe_ffn_tail(cfg, p, y, dims):
+def _moe_ffn_tail(cfg, p, y, dims, route_keep=None, return_keep=False):
     """Second half of every MoE block (lockstep AND paged decode share
     this, so shared-expert / dispatch changes cannot diverge the paths):
-    norm -> routed expert FFN (+ shared experts) -> residual."""
+    norm -> routed expert FFN (+ shared experts) -> residual.
+
+    ``route_keep`` ((B, S, k) bool) replays a recorded drop population
+    (re-prefill after preemption); ``return_keep`` appends the realized
+    (B, S, k) keep mask for the engine to record."""
     _, norm = L.make_norm(cfg)
     B, S, D = y.shape
     cd = L.COMPUTE_DTYPE
     h2 = norm(y, p["ln2"]).astype(cd)
     mp = jax.tree.map(lambda a: a.astype(cd), p["moe"])
-    ff, aux = L.moe_ffn(h2.reshape(B * S, D), mp, dims)
+    out = L.moe_ffn(h2.reshape(B * S, D), mp, dims,
+                    keep_override=None if route_keep is None
+                    else route_keep.reshape(B * S, -1),
+                    return_keep=return_keep)
+    ff, aux = out[0], out[1]
     if cfg.moe.num_shared_experts:
         ff = ff + L.swiglu(h2.reshape(B * S, D), mp["shared_gate"],
                            mp["shared_up"], mp["shared_down"])
-    return y + ff.reshape(B, S, D).astype(y.dtype), aux
+    res = y + ff.reshape(B, S, D).astype(y.dtype)
+    if return_keep:
+        return res, aux, out[2].reshape(B, S, -1)
+    return res, aux
 
 
 def _block(cfg, p, x, batch, mask, dims, cache=None, cache_pos=None,
-           constrain=None):
+           constrain=None, route_keep=None, return_keep=False):
     _, norm = L.make_norm(cfg)
     cd = L.COMPUTE_DTYPE
     h = norm(x, p["ln1"]).astype(cd)
@@ -185,23 +196,33 @@ def _block(cfg, p, x, batch, mask, dims, cache=None, cache_pos=None,
         attn_out = constrain(attn_out)
     y = x + attn_out.astype(x.dtype)
 
-    out, aux = _moe_ffn_tail(cfg, p, y, dims)
+    tail = _moe_ffn_tail(cfg, p, y, dims, route_keep=route_keep,
+                         return_keep=return_keep)
+    out, aux = tail[0], tail[1]
     if constrain is not None:
         out = constrain(out)
+    if return_keep:
+        return out, kv, aux, tail[2]
     return out, kv, aux
 
 
 # --- forward / loss ------------------------------------------------------------------
 
 def forward(cfg, params, batch, *, remat=False, constrain=None,
-            return_kv=False, return_aux=False, route_capacity=None):
+            return_kv=False, return_aux=False, route_capacity=None,
+            route_keep=None, return_route_keep=False):
     """``route_capacity`` overrides the expert-capacity ceiling (a static
     Python int, so callers key it into the jit cache): serving paths pass
     ``moe_dims(cfg, exact_live_tokens).capacity`` when the batch is
     padded, keeping the engine's drop decisions identical to the
     exact-length oracle's. Trailing pads can claim capacity only AFTER
     every live token (claims are in token order), so a tight ceiling
-    never displaces a live token in favour of a pad."""
+    never displaces a live token in favour of a pad.
+
+    ``route_keep`` ((L, B, S, k) bool) REPLAYS a recorded per-layer drop
+    population — the re-prefill-after-preemption path — and
+    ``return_route_keep`` appends the realized (L, B, S, k) masks so a
+    first prefill can record them."""
     batch = _default_batch(cfg, batch)
     x = _embed(cfg, params, batch)
     B, S, D = x.shape
@@ -210,15 +231,20 @@ def forward(cfg, params, batch, *, remat=False, constrain=None,
         else dataclasses.replace(L.moe_dims(cfg, B * S),
                                  capacity=route_capacity)
 
-    def body(carry, p):
-        y, kv, aux = _block(cfg, p, carry, batch, mask, dims,
-                            constrain=constrain)
-        return y, (kv if return_kv else 0, aux)
+    def body(carry, xs):
+        p, rk = xs
+        blk = _block(cfg, p, carry, batch, mask, dims,
+                     constrain=constrain, route_keep=rk,
+                     return_keep=return_route_keep)
+        y, kv, aux = blk[0], blk[1], blk[2]
+        return y, (kv if return_kv else 0, aux,
+                   blk[3] if return_route_keep else 0)
 
     if remat:
         body = jax.checkpoint(
             body, policy=jax.checkpoint_policies.nothing_saveable)
-    x, (kvs, auxs) = lax.scan(body, x, params["blocks"])
+    x, (kvs, auxs, keeps) = lax.scan(body, x,
+                                     (params["blocks"], route_keep))
     logits = _head(cfg, params, x)
     aux = jnp.mean(auxs)
     out = [logits]
@@ -226,6 +252,8 @@ def forward(cfg, params, batch, *, remat=False, constrain=None,
         out.append(kvs)
     if return_aux:
         out.append(aux)
+    if return_route_keep:
+        out.append(keeps)
     return tuple(out) if len(out) > 1 else logits
 
 
@@ -343,7 +371,7 @@ def init_paged_decode_state(cfg, num_pages: int, page_size: int,
 
 
 def paged_prefill(cfg, params, batch, lengths, *, constrain=None,
-                  route_capacity=None):
+                  route_capacity=None, route_keep=None):
     """Forward the (padded) prompts; return per-sequence last-live-token
     logits plus the raw per-layer latents (L, B, S, r+dr) for page
     scatter.
@@ -355,13 +383,18 @@ def paged_prefill(cfg, params, batch, lengths, *, constrain=None,
     arg by the engine backend), so the engine's drop decisions match the
     exact-length oracle's even at a tight capacity_factor — without it
     the shape-static ceiling would be computed from the padded bucket
-    and keep tokens the oracle drops."""
-    logits, kvs, _ = forward(cfg, params, batch, return_kv=True,
-                             return_aux=True, constrain=constrain,
-                             route_capacity=route_capacity)
+    and keep tokens the oracle drops.
+
+    ``route_keep`` replays a recorded (L, B, S, k) drop population (the
+    re-prefill-after-preemption path); the realized masks are always
+    returned last so a first prefill can record them."""
+    logits, kvs, _, keeps = forward(
+        cfg, params, batch, return_kv=True, return_aux=True,
+        constrain=constrain, route_capacity=route_capacity,
+        route_keep=route_keep, return_route_keep=True)
     idx = (lengths - 1)[:, None, None]
     last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
-    return last, kvs.astype(L.COMPUTE_DTYPE)
+    return last, kvs.astype(L.COMPUTE_DTYPE), keeps
 
 
 def write_prefill_pages(cfg, state: MoEPagedState, latents, page_ids

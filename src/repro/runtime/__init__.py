@@ -1,6 +1,6 @@
 """Serving/runtime subsystems: continuous-batching engine, KV pager,
-arrival-trace scheduler, multi-tenant model pool, and the elastic
-training supervisor."""
+arrival-trace scheduler, multi-tenant model pool, the replicated fleet
+tier with chaos-tested failover, and the elastic training supervisor."""
 
 from .arena import ArenaConfig, DeviceArena, partition_pages
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
@@ -8,14 +8,18 @@ from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
                      PoolEngineConfig, PooledEngine, PooledReport,
                      RecurrentBackend, engine_backend, make_sampler,
                      resolve_backend, run_static, vlm_extras_fn)
-from .fault_tolerance import (ElasticConfig, RunReport, StepTimeout,
-                              TrainingSupervisor)
+from .fault_tolerance import (TRANSIENT_DEFAULT, Backoff, ElasticConfig,
+                              FaultEvent, FaultSchedule, RunReport,
+                              StepTimeout, StragglerDetector,
+                              TrainingSupervisor, TransientFault)
+from .fleet import (FleetConfig, FleetEngine, FleetReport, ModelDesc,
+                    place_models, zoo_descs)
 from .kv_pager import TRASH_PAGE, PageAllocator, PagerConfig
 from .model_pool import (ModelEntry, ModelPool, PoolConfig, PoolError,
                          PoolPlan, calibrated_reload_bytes_per_step,
                          model_weight_bytes)
 from .scheduler import (MultiQueueScheduler, Request, Scheduler,
-                        multi_tenant_trace, poisson_trace,
+                        diurnal_trace, multi_tenant_trace, poisson_trace,
                         shifting_mix_trace)
 
 __all__ = ["ArenaConfig", "DeviceArena",
@@ -29,5 +33,10 @@ __all__ = ["ArenaConfig", "DeviceArena",
            "model_weight_bytes", "calibrated_reload_bytes_per_step",
            "Request", "Scheduler", "MultiQueueScheduler",
            "poisson_trace", "multi_tenant_trace", "shifting_mix_trace",
+           "diurnal_trace",
            "ElasticConfig", "RunReport", "StepTimeout",
-           "TrainingSupervisor"]
+           "TrainingSupervisor",
+           "Backoff", "FaultEvent", "FaultSchedule", "StragglerDetector",
+           "TransientFault", "TRANSIENT_DEFAULT",
+           "FleetConfig", "FleetEngine", "FleetReport", "ModelDesc",
+           "place_models", "zoo_descs"]

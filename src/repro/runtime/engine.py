@@ -205,6 +205,21 @@ def _bucket_prompt(ctx: np.ndarray, ecfg: EngineConfig, pages: list[int],
     return toks, pids
 
 
+def _routed_prefill(backend, req, ctx, slot, pages) -> np.ndarray:
+    """Prefill dispatch that records/replays MoE routing: a routed
+    backend's FIRST prefill of a request stores the realized expert
+    drop mask on the request; every re-prefill after preemption replays
+    it, so pooled output is token-for-token equal across preemption even
+    at a tight capacity_factor."""
+    if not getattr(backend, "routed", False):
+        return backend.prefill(ctx, req.extras, slot, pages)
+    logits = backend.prefill(ctx, req.extras, slot, pages,
+                             replay=req.route_trace)
+    if req.route_trace is None:
+        req.route_trace = backend.last_route_trace
+    return logits
+
+
 class _PagedBackendBase:
     """Shared jit-dispatch plumbing for every paged backend: the decode
     wrapper marshals host arrays into the jitted step and the pages are
@@ -212,6 +227,7 @@ class _PagedBackendBase:
 
     paged = True
     slot_state_bytes = 0               # no per-slot non-paged state
+    routed = False                     # no MoE drop population to replay
 
     @classmethod
     def supports(cls, cfg) -> bool:
@@ -293,6 +309,7 @@ class RecurrentBackend:
     ring_rows = None
     page_bytes = 0
     slot_state_bytes = 0
+    routed = False
 
     @classmethod
     def supports(cls, cfg) -> bool:
@@ -441,6 +458,8 @@ class LatentBackend(_LinearPagedMixin):
     expert weights are the residency planner's problem (per-expert slices
     in the layer schedule), not the pager's."""
 
+    routed = True                      # records/replays MoE drop masks
+
     @classmethod
     def supports(cls, cfg) -> bool:
         return cfg.mla is not None      # GQA-MoE (olmoe) stays static
@@ -455,15 +474,16 @@ class LatentBackend(_LinearPagedMixin):
                            * MoE.latent_width(cfg) * 2)
         self.state = MoE.init_paged_decode_state(cfg, ecfg.num_pages,
                                                  ecfg.page_size)
+        self.last_route_trace: dict | None = None
 
         def prefill_write(params, state, batch, lengths, page_ids,
-                          route_capacity):
-            last, latents = MoE.paged_prefill(
+                          route_capacity, route_keep):
+            last, latents, keeps = MoE.paged_prefill(
                 cfg, params, batch, lengths,
-                route_capacity=route_capacity)
+                route_capacity=route_capacity, route_keep=route_keep)
             state = MoE.write_prefill_pages(cfg, state, latents[:, 0],
                                             page_ids)
-            return last[0], state
+            return last[0], keeps[:, 0], state
 
         def decode(params, state, tokens, page_table, lengths, active):
             return MoE.paged_decode_step(cfg, params, state, tokens,
@@ -473,20 +493,49 @@ class LatentBackend(_LinearPagedMixin):
         # ceiling is keyed into the jit cache, so a padded bucket traces
         # once per (bucket, capacity) pair — distinct lengths with the
         # same ceiling share a trace — instead of inflating the ceiling
-        # to the padded token count
+        # to the padded token count. route_keep=None (fresh prefill) and
+        # route_keep=array (replay) are distinct pytrees, so the replay
+        # trace only compiles on the first routed-tenant preemption.
         self._prefill = jax.jit(prefill_write, donate_argnums=(1,),
                                 static_argnums=(5,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
     def prefill(self, ctx: np.ndarray, extras, slot: int,
-                page_ids: list[int]) -> np.ndarray:
+                page_ids: list[int], replay: dict | None = None
+                ) -> np.ndarray:
+        """``replay`` is a route trace recorded by a previous prefill of
+        this request ({"keep": (L, plen0, k) bool, "capacity": int}): the
+        cached prompt keeps are forced, tokens generated since are forced
+        KEPT (decode is dropless, so the original run kept them all), and
+        pads are forced dropped — the re-prefill reproduces the original
+        expert assignment token-for-token. The replay ceiling is
+        capacity0 + new tokens (each token holds at most one claim per
+        expert), rounded up to bound the jit-trace count — extra slots
+        are never filled, so the rounding cannot change any output."""
         from ..models import layers as L
 
         toks, pids = _bucket_prompt(ctx, self.ecfg, page_ids)
-        logits, self.state = self._prefill(
+        plen, bucket = len(ctx), toks.shape[1]
+        if replay is None:
+            cap = L.moe_dims(self.cfg, plen).capacity
+            keep_arg = None
+        else:
+            keep0 = np.asarray(replay["keep"], bool)   # (L, plen0, k)
+            Lc, plen0, k = keep0.shape
+            forced = np.zeros((Lc, 1, bucket, k), bool)
+            forced[:, 0, :plen0] = keep0
+            forced[:, 0, plen0:plen] = True
+            cap = -(-(int(replay["capacity"]) + plen - plen0) // 8) * 8
+            keep_arg = jnp.asarray(forced)
+        logits, keeps, self.state = self._prefill(
             self.params, self.state, {"tokens": jnp.asarray(toks)},
-            jnp.asarray([len(ctx)], jnp.int32), jnp.asarray(pids),
-            L.moe_dims(self.cfg, len(ctx)).capacity)
+            jnp.asarray([plen], jnp.int32), jnp.asarray(pids),
+            cap, keep_arg)
+        if replay is None:
+            self.last_route_trace = {
+                "keep": np.asarray(keeps)[:, :plen], "capacity": cap}
+        else:
+            self.last_route_trace = replay
         return np.asarray(logits)
 
 
@@ -617,12 +666,12 @@ class Engine:
                         pages = alloc.alloc(req.rid, len(rows))
                         page_table[s, :] = TRASH_PAGE
                         page_table[s, rows] = pages
-                        logits = self.backend.prefill(ctx, req.extras, s,
-                                                      pages)
+                        logits = _routed_prefill(self.backend, req, ctx,
+                                                 s, pages)
                     else:
                         sched.pop_ready()
-                        logits = self.backend.prefill(ctx, req.extras, s,
-                                                      None)
+                        logits = _routed_prefill(self.backend, req, ctx,
+                                                 s, None)
                     rep.prefill_calls += 1
                     rep.prefill_tokens += (
                         -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
@@ -938,24 +987,28 @@ class PooledEngine:
                                     self.ecfg.temperature)
 
     # -- main loop ---------------------------------------------------------
+    # The loop is split into start / step_once / finish_run so a caller
+    # can interleave OTHER work between engine steps: the fleet tier
+    # drives N replicas in lockstep ticks, injecting requests and faults
+    # mid-run. ``run`` composes the three for the single-pool case.
 
-    def run(self, requests: list[Request]) -> PooledReport:
+    def start(self, requests: list[Request]) -> "PooledEngine":
         e, pool = self.ecfg, self.pool
-        B, M, page = e.num_slots, e.pager.max_pages_per_seq, e.pager.page_size
-        order = list(pool.model_ids)
-        sched = MultiQueueScheduler(requests)
+        self._sched = MultiQueueScheduler(requests)
         # the arena hands each paged tenant its leased allocator (a fresh
         # run starts from the initial demand-proportional partition)
         self.arena.reset_runtime()
-        allocs = {m: self.arena.allocator(m) for m in self.page_split}
+        self._allocs = {m: self.arena.allocator(m) for m in self.page_split}
         pool.reset_runtime()
 
-        slots: list[Request | None] = [None] * B
-        page_table = np.zeros((B, M), np.int32)
-        lengths = np.zeros((B,), np.int32)
-        pending = np.zeros((B,), np.int32)
-
-        rep = PooledReport(
+        B = e.num_slots
+        self._order = list(pool.model_ids)
+        self._slots: list[Request | None] = [None] * B
+        self._page_table = np.zeros((B, e.pager.max_pages_per_seq),
+                                    np.int32)
+        self._lengths = np.zeros((B,), np.int32)
+        self._pending = np.zeros((B,), np.int32)
+        self._rep = PooledReport(
             name=f"pool/{e.policy}", num_slots=B, policy=e.policy,
             stream=e.stream,
             page_bytes=max(
@@ -965,342 +1018,398 @@ class PooledEngine:
                                  for b in self.backends.values()),
             cache_bytes_alloc=sum(_state_bytes(b.state)
                                   for b in self.backends.values()),
-            model_tokens={m: 0 for m in order},
-            stall_steps_by_model={m: 0 for m in order})
-        t_run = time.monotonic()
-        step = 0
-        rr_current: str | None = None
-        rr_left = 0
+            model_tokens={m: 0 for m in self._order},
+            stall_steps_by_model={m: 0 for m in self._order})
+        self._t_run = time.monotonic()
+        self.step = 0
+        self._rr_current: str | None = None
+        self._rr_left = 0
+        self._blocked_since: dict[int, int] = {}  # rid -> first blocked step
+        return self
 
-        def clear_slot(s: int) -> None:
-            req = slots[s]
-            slots[s] = None
-            page_table[s, :] = TRASH_PAGE
-            lengths[s] = 0
-            pending[s] = 0
-            if req.model_id in allocs:
-                allocs[req.model_id].free_owner(req.rid)
-            self.backends[req.model_id].release_slot(s)
+    # -- steppable-loop accessors (the fleet router reads these) -----------
 
-        def finish(s: int) -> None:
-            slots[s].done_step = step
-            rep.completed.append(slots[s])
-            clear_slot(s)
+    @property
+    def report(self) -> PooledReport:
+        return self._rep
 
-        def preempt(s: int) -> None:
-            req = slots[s]
-            clear_slot(s)
-            sched.requeue(req)
+    def inject(self, requests: list[Request]) -> None:
+        """Hand this replica more requests mid-run (fleet dispatch)."""
+        self._sched.inject(requests)
 
-        def reject(req: Request) -> None:
-            req.truncated = True
-            req.done_step = step
-            rep.completed.append(req)
+    def occupied_slots(self) -> int:
+        return sum(1 for r in self._slots if r is not None)
 
-        def active_models() -> list[str]:
-            got = {r.model_id for r in slots if r is not None}
-            return [m for m in order if m in got]
+    def backlog(self) -> int:
+        """Requests queued but not in a slot (ready + future arrivals)."""
+        sch = self._sched
+        return (sum(sch.ready_count(m) for m in sch.ready_models())
+                + len(sch._pending))
 
-        blocked_since: dict[int, int] = {}   # rid -> first page-blocked step
+    def load(self) -> int:
+        """Routing load signal: occupied slots + queued requests."""
+        return self.occupied_slots() + self.backlog()
 
-        def pick_admissible(serve: list[str], step: int) -> Request | None:
-            """Earliest ready head whose tenant can admit now. Page
-            pressure is tenant-local (partitioned sub-ranges), so a
-            page-starved tenant waits without blocking its neighbours —
-            but only up to the aging bound: once a blocked head has been
-            bypassed for ``max_bypass_steps``, the scan BLOCKS for it
-            instead of admitting later arrivals past it. Heads that can
-            never fit are failed fast along the way."""
-            while True:
-                for req in sched.ready_heads(serve):
-                    backend = self.backends[req.model_id]
-                    if not backend.paged:
-                        return req
-                    pgr_t = self._pgr[req.model_id]
-                    ctx_len = len(req.context_tokens)
-                    if not backend.can_ever_fit(pgr_t, len(req.prompt),
-                                                req.max_new_tokens,
-                                                ctx_len):
-                        blocked_since.pop(req.rid, None)
-                        reject(sched.pop_ready(req))
-                        break           # queues changed: rescan heads
-                    rows = backend.admission_rows(pgr_t, ctx_len)
-                    if allocs[req.model_id].can_alloc(len(rows)):
-                        blocked_since.pop(req.rid, None)
-                        return req
-                    # page-blocked head: feed the arena's load signal and
-                    # age it — an over-aged head stops the scan so later
-                    # arrivals cannot bypass it indefinitely
-                    first = blocked_since.setdefault(req.rid, step)
-                    self.arena.note_starved(req.model_id, step,
-                                            want=len(rows))
-                    if e.max_bypass_steps \
-                            and step - first >= e.max_bypass_steps:
-                        rep.aging_blocks += 1
-                        return None
-                else:
-                    return None
+    def drain(self) -> list[Request]:
+        """Failover: preempt every in-flight request and pull the whole
+        queue out, returning ALL unfinished requests for re-admission on
+        another replica (their generated tokens and MoE route traces ride
+        along, so nothing restarts from scratch beyond the re-prefill)."""
+        for s in range(len(self._slots)):
+            if self._slots[s] is not None:
+                self._preempt(s)
+        return self._sched.drain()
 
+    # -- slot lifecycle -----------------------------------------------------
+
+    def _clear_slot(self, s: int) -> None:
+        req = self._slots[s]
+        self._slots[s] = None
+        self._page_table[s, :] = TRASH_PAGE
+        self._lengths[s] = 0
+        self._pending[s] = 0
+        if req.model_id in self._allocs:
+            self._allocs[req.model_id].free_owner(req.rid)
+        self.backends[req.model_id].release_slot(s)
+
+    def _finish(self, s: int) -> None:
+        self._slots[s].done_step = self.step
+        self._rep.completed.append(self._slots[s])
+        self._clear_slot(s)
+
+    def _preempt(self, s: int) -> None:
+        req = self._slots[s]
+        self._clear_slot(s)
+        self._sched.requeue(req)
+
+    def _reject(self, req: Request) -> None:
+        req.truncated = True
+        req.done_step = self.step
+        self._rep.completed.append(req)
+
+    def _active_models(self) -> list[str]:
+        got = {r.model_id for r in self._slots if r is not None}
+        return [m for m in self._order if m in got]
+
+    def _pick_admissible(self, serve: list[str]) -> Request | None:
+        """Earliest ready head whose tenant can admit now. Page
+        pressure is tenant-local (partitioned sub-ranges), so a
+        page-starved tenant waits without blocking its neighbours —
+        but only up to the aging bound: once a blocked head has been
+        bypassed for ``max_bypass_steps``, the scan BLOCKS for it
+        instead of admitting later arrivals past it. Heads that can
+        never fit are failed fast along the way."""
+        e, sched, step = self.ecfg, self._sched, self.step
         while True:
-            sched.release_arrivals(step)
-
-            # -- drain queues no backend can ever serve ------------------
-            for m in sched.ready_models():
-                if m not in self.backends or not pool.servable(m):
-                    while (req := sched.peek_ready([m])) is not None:
-                        reject(sched.pop_ready(req))
-
-            # -- activation policy ---------------------------------------
-            if e.policy == "round_robin":
-                ready = sched.ready_models()
-                switch = (rr_current is None or rr_left <= 0
-                          or (rr_current not in active_models()
-                              and sched.ready_count(rr_current) == 0))
-                if switch and ready:
-                    start = ((order.index(rr_current) + 1) % len(order)
-                             if rr_current is not None else 0)
-                    nxt = next((order[(start + i) % len(order)]
-                                for i in range(len(order))
-                                if order[(start + i) % len(order)] in ready),
-                               None)
-                    if nxt is not None and nxt != rr_current:
-                        # naive swap: drop everything, load the next model
-                        for s in range(B):
-                            if slots[s] is not None:
-                                preempt(s)
-                        for m in list(pool.hot_models()):
-                            pool.evict(m)
-                        stall, _ = pool.try_activate(nxt, step)
-                        rep.stall_steps += stall
-                        rep.stall_steps_by_model[nxt] += stall
-                        step += stall
-                        rr_current, rr_left = nxt, e.rr_quantum
-                    elif nxt is not None:
-                        rr_left = e.rr_quantum
-                serve = [rr_current] if rr_current is not None else []
+            for req in sched.ready_heads(serve):
+                backend = self.backends[req.model_id]
+                if not backend.paged:
+                    return req
+                pgr_t = self._pgr[req.model_id]
+                ctx_len = len(req.context_tokens)
+                if not backend.can_ever_fit(pgr_t, len(req.prompt),
+                                            req.max_new_tokens,
+                                            ctx_len):
+                    self._blocked_since.pop(req.rid, None)
+                    self._reject(sched.pop_ready(req))
+                    break           # queues changed: rescan heads
+                rows = backend.admission_rows(pgr_t, ctx_len)
+                if self._allocs[req.model_id].can_alloc(len(rows)):
+                    self._blocked_since.pop(req.rid, None)
+                    return req
+                # page-blocked head: feed the arena's load signal and
+                # age it — an over-aged head stops the scan so later
+                # arrivals cannot bypass it indefinitely
+                first = self._blocked_since.setdefault(req.rid, step)
+                self.arena.note_starved(req.model_id, step,
+                                        want=len(rows))
+                if e.max_bypass_steps \
+                        and step - first >= e.max_bypass_steps:
+                    self._rep.aging_blocks += 1
+                    return None
             else:
-                cold = [m for m in sched.ready_models()
-                        if not pool.is_hot(m)]
-                if cold:
-                    # highest queued-demand per reload byte activates
-                    # first; if it must wait (hysteresis), a smaller cold
-                    # tenant that fits the free slab may still go
-                    cold.sort(key=lambda m: (
-                        -sched.pending_demand(m)
-                        / max(pool.plan.entry(m).reload_bytes, 1), m))
-                    protected = frozenset(
-                        m for m in pool.hot_models()
-                        if m in active_models()
-                        or sched.ready_count(m) > 0)
-                    for m in cold:
-                        if e.stream == "layer":
-                            # layer-granular: reserve the slab, then let
-                            # the per-layer schedule stream behind compute
-                            # (stalls only surface as prefetch misses,
-                            # charged after the decode section)
-                            if pool.begin_stream(m, step, protected) \
-                                    is not None:
-                                break   # the DMA issues one stream at once
-                        else:
-                            res = pool.try_activate(m, step, protected)
-                            if res is not None:
-                                stall, _ = res
-                                rep.stall_steps += stall
-                                rep.stall_steps_by_model[m] += stall
-                                step += stall
-                                break   # one reload/step: stalls serialize
-                if e.stream == "layer":
-                    # a mid-stream model joins once it heads the serial
-                    # DMA queue and the un-streamed tail fits inside its
-                    # first decode step's own layer walk
-                    serve = [m for m in pool.hot_models()
-                             if pool.decode_ready(m)]
+                return None
+
+    def step_once(self) -> bool:
+        """Advance the pool one engine step. Returns False when nothing
+        can progress — every queue is empty and no slot is occupied (the
+        single-pool ``run`` stops there; the fleet keeps an idle replica
+        alive because the router may inject work or faults later) — and
+        True otherwise, including idle fast-forwards to a future
+        arrival."""
+        e, pool = self.ecfg, self.pool
+        B, page = e.num_slots, e.pager.page_size
+        M = e.pager.max_pages_per_seq
+        sched, rep, allocs = self._sched, self._rep, self._allocs
+        slots, page_table = self._slots, self._page_table
+        lengths, pending = self._lengths, self._pending
+
+        sched.release_arrivals(self.step)
+
+        # -- drain queues no backend can ever serve ------------------
+        for m in sched.ready_models():
+            if m not in self.backends or not pool.servable(m):
+                while (req := sched.peek_ready([m])) is not None:
+                    self._reject(sched.pop_ready(req))
+
+        # -- activation policy ---------------------------------------
+        if e.policy == "round_robin":
+            ready = sched.ready_models()
+            rr = self._rr_current
+            switch = (rr is None or self._rr_left <= 0
+                      or (rr not in self._active_models()
+                          and sched.ready_count(rr) == 0))
+            if switch and ready:
+                order = self._order
+                start = ((order.index(rr) + 1) % len(order)
+                         if rr is not None else 0)
+                nxt = next((order[(start + i) % len(order)]
+                            for i in range(len(order))
+                            if order[(start + i) % len(order)] in ready),
+                           None)
+                if nxt is not None and nxt != rr:
+                    # naive swap: drop everything, load the next model
+                    for s in range(B):
+                        if slots[s] is not None:
+                            self._preempt(s)
+                    for m in list(pool.hot_models()):
+                        pool.evict(m)
+                    stall, _ = pool.try_activate(nxt, self.step)
+                    rep.stall_steps += stall
+                    rep.stall_steps_by_model[nxt] += stall
+                    self.step += stall
+                    self._rr_current, self._rr_left = nxt, e.rr_quantum
+                elif nxt is not None:
+                    self._rr_left = e.rr_quantum
+            serve = [self._rr_current] if self._rr_current is not None \
+                else []
+        else:
+            cold = [m for m in sched.ready_models()
+                    if not pool.is_hot(m)]
+            if cold:
+                # highest queued-demand per reload byte activates
+                # first; if it must wait (hysteresis), a smaller cold
+                # tenant that fits the free slab may still go
+                cold.sort(key=lambda m: (
+                    -sched.pending_demand(m)
+                    / max(pool.plan.entry(m).reload_bytes, 1), m))
+                protected = frozenset(
+                    m for m in pool.hot_models()
+                    if m in self._active_models()
+                    or sched.ready_count(m) > 0)
+                for m in cold:
+                    if e.stream == "layer":
+                        # layer-granular: reserve the slab, then let
+                        # the per-layer schedule stream behind compute
+                        # (stalls only surface as prefetch misses,
+                        # charged after the decode section)
+                        if pool.begin_stream(m, self.step, protected) \
+                                is not None:
+                            break   # the DMA issues one stream at once
+                    else:
+                        res = pool.try_activate(m, self.step, protected)
+                        if res is not None:
+                            stall, _ = res
+                            rep.stall_steps += stall
+                            rep.stall_steps_by_model[m] += stall
+                            self.step += stall
+                            break   # one reload/step: stalls serialize
+            if e.stream == "layer":
+                # a mid-stream model joins once it heads the serial
+                # DMA queue and the un-streamed tail fits inside its
+                # first decode step's own layer walk
+                serve = [m for m in pool.hot_models()
+                         if pool.decode_ready(m)]
+            else:
+                serve = pool.hot_models()
+
+        # -- admission into free slots -------------------------------
+        admitting = True
+        for s in range(B):
+            while admitting and slots[s] is None:
+                req = self._pick_admissible(serve)
+                if req is None:
+                    admitting = False
+                    break
+                backend = self.backends[req.model_id]
+                ctx = req.context_tokens
+                assert len(ctx) >= 1, "empty prompts are not admissible"
+                if backend.paged:
+                    sched.pop_ready(req)
+                    rows = backend.admission_rows(
+                        self._pgr[req.model_id], len(ctx))
+                    pages = allocs[req.model_id].alloc(req.rid,
+                                                       len(rows))
+                    page_table[s, :] = TRASH_PAGE
+                    page_table[s, rows] = pages
+                    logits = _routed_prefill(backend, req, ctx, s,
+                                             pages)
                 else:
-                    serve = pool.hot_models()
+                    sched.pop_ready(req)
+                    logits = _routed_prefill(backend, req, ctx, s,
+                                             None)
+                rep.prefill_calls += 1
+                rep.prefill_tokens += (
+                    -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
+                    if backend.paged else len(ctx))
+                req.prefills += 1
+                req.admitted_step = self.step
+                slots[s] = req
+                lengths[s] = len(ctx)
+                if req.generated:   # re-admission after preemption
+                    pending[s] = req.generated[-1]
+                else:
+                    tok = self._sample(logits)
+                    req.generated.append(tok)
+                    pending[s] = tok
+                    rep.model_tokens[req.model_id] += 1
+                    if req.done:
+                        self._finish(s)
 
-            # -- admission into free slots -------------------------------
-            admitting = True
+        # -- one fused decode step over every hot tenant's slots -----
+        # Weights of all hot tenants sit in HBM simultaneously (the
+        # packed-canvas premise at pool scale), so their slots advance
+        # in the same engine step; the naive round-robin baseline only
+        # ever holds one swappable tenant hot, so it cannot use this
+        # concurrency — that utilization gap is the point.
+        did_compute = False
+        if self._active_models():
+            # page growth / preemption for every paged tenant's slot
             for s in range(B):
-                while admitting and slots[s] is None:
-                    req = pick_admissible(serve, step)
-                    if req is None:
-                        admitting = False
-                        break
-                    backend = self.backends[req.model_id]
-                    ctx = req.context_tokens
-                    assert len(ctx) >= 1, "empty prompts are not admissible"
-                    if backend.paged:
-                        sched.pop_ready(req)
-                        rows = backend.admission_rows(
-                            self._pgr[req.model_id], len(ctx))
-                        pages = allocs[req.model_id].alloc(req.rid,
-                                                           len(rows))
-                        page_table[s, :] = TRASH_PAGE
-                        page_table[s, rows] = pages
-                        logits = backend.prefill(ctx, req.extras, s,
-                                                 pages)
-                    else:
-                        sched.pop_ready(req)
-                        logits = backend.prefill(ctx, req.extras, s, None)
-                    rep.prefill_calls += 1
-                    rep.prefill_tokens += (
-                        -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
-                        if backend.paged else len(ctx))
-                    req.prefills += 1
-                    req.admitted_step = step
-                    slots[s] = req
-                    lengths[s] = len(ctx)
-                    if req.generated:   # re-admission after preemption
-                        pending[s] = req.generated[-1]
-                    else:
-                        tok = self._sample(logits)
-                        req.generated.append(tok)
-                        pending[s] = tok
-                        rep.model_tokens[req.model_id] += 1
-                        if req.done:
-                            finish(s)
-
-            # -- one fused decode step over every hot tenant's slots -----
-            # Weights of all hot tenants sit in HBM simultaneously (the
-            # packed-canvas premise at pool scale), so their slots advance
-            # in the same engine step; the naive round-robin baseline only
-            # ever holds one swappable tenant hot, so it cannot use this
-            # concurrency — that utilization gap is the point.
-            did_compute = False
-            if active_models():
-                # page growth / preemption for every paged tenant's slot
-                for s in range(B):
-                    if slots[s] is None:
-                        continue
-                    mid = slots[s].model_id
-                    if not self.backends[mid].paged:
-                        continue
-                    if e.stream == "layer" and not pool.decode_ready(mid):
-                        # no decode this step (mid-re-stream / queued
-                        # behind the DMA): growing now would re-fire on
-                        # every blocked step and orphan the previous
-                        # page into the same table row
-                        continue
-                    if lengths[s] % page != 0:
-                        continue
-                    pi = lengths[s] // page
-                    R = self.backends[mid].ring_rows
-                    if R is None and pi >= M:
-                        slots[s].truncated = True
-                        finish(s)
-                        continue
-                    a = allocs[mid]
-                    row = _growth_row(self.backends[mid], a, page_table,
-                                      s, pi, slots[s].rid)
-                    if not a.can_alloc(1):
-                        # growth pressure is the other load signal the
-                        # arena repartitions on (preemption == starvation)
-                        self.arena.note_starved(mid, step)
-                    while not a.can_alloc(1):
-                        # only same-tenant slots are useful victims — the
-                        # page-id space is partitioned, so a neighbour's
-                        # pages can never back this tenant's growth
-                        tenant_active = [
-                            (v, slots[v]) for v in range(B)
-                            if slots[v] is not None
-                            and slots[v].model_id == mid]
-                        victim = Scheduler.pick_victim(tenant_active,
-                                                       exclude=s)
-                        if victim is None or victim[0] == s:
-                            preempt(s)
-                            break
-                        preempt(victim[0])
-                    if slots[s] is None:
-                        continue
-                    new = a.alloc(slots[s].rid, 1)
-                    page_table[s, row] = new[0]
-
-                served = 0
-                for m in active_models():
-                    backend = self.backends[m]
-                    m_slots = [s for s in range(B)
-                               if slots[s] is not None
-                               and slots[s].model_id == m]
-                    if not m_slots:
-                        continue
-                    if e.stream == "layer" and not pool.decode_ready(m):
-                        # a bounded-slab tenant mid-re-stream (or a tenant
-                        # queued behind the serial DMA) skips this step;
-                        # its slots wait while the FIFO drains
-                        continue
-                    act = np.zeros((B,), bool)
-                    act[m_slots] = True
-                    toks = np.where(act, pending, 0).astype(np.int32)
-                    # page ids are tenant-local: blank out other tenants'
-                    # rows so this backend never gathers past its pool
-                    pt_m = np.where(act[:, None], page_table, TRASH_PAGE)
-                    len_m = np.where(act, lengths, 0).astype(np.int32)
-                    t0 = time.monotonic()
-                    logits = backend.decode(toks, pt_m, len_m, act)
-                    rep.decode_wall_s += time.monotonic() - t0
-                    lengths[m_slots] += 1
-                    served += len(m_slots)
-                    for s in m_slots:
-                        req = slots[s]
-                        tok = self._sample(logits[s])
-                        req.generated.append(tok)
-                        pending[s] = tok
-                        rep.model_tokens[m] += 1
-                        if req.done:
-                            finish(s)
-                    # bounded slab: queue this burst's re-stream bytes
-                    pool.note_decode_burst(m)
-                if served:
-                    did_compute = True
-                    rep.decode_steps += 1
-                    rep.slot_steps += B
-                    rep.useful_slot_steps += served
-                rep.peak_live_pages = max(
-                    rep.peak_live_pages,
-                    sum(a.live_count for a in allocs.values()))
-                rep.peak_live_page_bytes = max(
-                    rep.peak_live_page_bytes,
-                    sum(a.live_count * self.backends[m].page_bytes
-                        for m, a in allocs.items()))
-            elif not sched.exhausted:
-                nxt = sched.next_arrival()
-                if nxt is not None and nxt > step \
-                        and not sched.ready_models():
-                    step = nxt          # idle: fast-forward to next arrival
+                if slots[s] is None:
                     continue
-                # ready work exists but is blocked (deferred activation /
-                # page wait / an in-flight layer stream): let time pass
-            else:
-                break
+                mid = slots[s].model_id
+                if not self.backends[mid].paged:
+                    continue
+                if e.stream == "layer" and not pool.decode_ready(mid):
+                    # no decode this step (mid-re-stream / queued
+                    # behind the DMA): growing now would re-fire on
+                    # every blocked step and orphan the previous
+                    # page into the same table row
+                    continue
+                if lengths[s] % page != 0:
+                    continue
+                pi = lengths[s] // page
+                R = self.backends[mid].ring_rows
+                if R is None and pi >= M:
+                    slots[s].truncated = True
+                    self._finish(s)
+                    continue
+                a = allocs[mid]
+                row = _growth_row(self.backends[mid], a, page_table,
+                                  s, pi, slots[s].rid)
+                if not a.can_alloc(1):
+                    # growth pressure is the other load signal the
+                    # arena repartitions on (preemption == starvation)
+                    self.arena.note_starved(mid, self.step)
+                while not a.can_alloc(1):
+                    # only same-tenant slots are useful victims — the
+                    # page-id space is partitioned, so a neighbour's
+                    # pages can never back this tenant's growth
+                    tenant_active = [
+                        (v, slots[v]) for v in range(B)
+                        if slots[v] is not None
+                        and slots[v].model_id == mid]
+                    victim = Scheduler.pick_victim(tenant_active,
+                                                   exclude=s)
+                    if victim is None or victim[0] == s:
+                        self._preempt(s)
+                        break
+                    self._preempt(victim[0])
+                if slots[s] is None:
+                    continue
+                new = a.alloc(slots[s].rid, 1)
+                page_table[s, row] = new[0]
 
-            # -- layer-stream progress: one step of DMA bandwidth --------
-            if e.stream == "layer" and pool.streaming:
-                if not did_compute:
-                    # prefetch miss: no decode work hides the DMA, so the
-                    # engine idles a step waiting on the stream head
-                    head = pool.stream_head
-                    rep.stall_steps += 1
-                    rep.stall_steps_by_model[head] += 1
-                pool.stream_tick(pool.pcfg.reload_bytes_per_step)
+            served = 0
+            for m in self._active_models():
+                backend = self.backends[m]
+                m_slots = [s for s in range(B)
+                           if slots[s] is not None
+                           and slots[s].model_id == m]
+                if not m_slots:
+                    continue
+                if e.stream == "layer" and not pool.decode_ready(m):
+                    # a bounded-slab tenant mid-re-stream (or a tenant
+                    # queued behind the serial DMA) skips this step;
+                    # its slots wait while the FIFO drains
+                    continue
+                act = np.zeros((B,), bool)
+                act[m_slots] = True
+                toks = np.where(act, pending, 0).astype(np.int32)
+                # page ids are tenant-local: blank out other tenants'
+                # rows so this backend never gathers past its pool
+                pt_m = np.where(act[:, None], page_table, TRASH_PAGE)
+                len_m = np.where(act, lengths, 0).astype(np.int32)
+                t0 = time.monotonic()
+                logits = backend.decode(toks, pt_m, len_m, act)
+                rep.decode_wall_s += time.monotonic() - t0
+                lengths[m_slots] += 1
+                served += len(m_slots)
+                for s in m_slots:
+                    req = slots[s]
+                    tok = self._sample(logits[s])
+                    req.generated.append(tok)
+                    pending[s] = tok
+                    rep.model_tokens[m] += 1
+                    if req.done:
+                        self._finish(s)
+                # bounded slab: queue this burst's re-stream bytes
+                pool.note_decode_burst(m)
+            if served:
+                did_compute = True
+                rep.decode_steps += 1
+                rep.slot_steps += B
+                rep.useful_slot_steps += served
+            rep.peak_live_pages = max(
+                rep.peak_live_pages,
+                sum(a.live_count for a in allocs.values()))
+            rep.peak_live_page_bytes = max(
+                rep.peak_live_page_bytes,
+                sum(a.live_count * self.backends[m].page_bytes
+                    for m, a in allocs.items()))
+        elif not sched.exhausted:
+            nxt = sched.next_arrival()
+            if nxt is not None and nxt > self.step \
+                    and not sched.ready_models():
+                self.step = nxt     # idle: fast-forward to next arrival
+                return True
+            # ready work exists but is blocked (deferred activation /
+            # page wait / an in-flight layer stream): let time pass
+        else:
+            return False            # drained: idle until more is injected
 
-            # -- arena bookkeeping: watermarks + epoch repartition -------
-            self.arena.sample()
-            if self.arena.maybe_repartition(step) is not None:
-                # epoch boundary: weight-region occupancy joins the KV
-                # invariants maybe_repartition already asserted
-                self.arena.check(slab_used=pool.slab_used,
-                                 pinned_bytes=pool.plan.pinned_bytes)
+        # -- layer-stream progress: one step of DMA bandwidth --------
+        if e.stream == "layer" and pool.streaming:
+            if not did_compute:
+                # prefetch miss: no decode work hides the DMA, so the
+                # engine idles a step waiting on the stream head
+                head = pool.stream_head
+                rep.stall_steps += 1
+                rep.stall_steps_by_model[head] += 1
+            pool.stream_tick(pool.pcfg.reload_bytes_per_step)
 
-            step += 1
-            rr_left -= 1
-            if step > e.max_steps:
-                raise RuntimeError("pooled engine exceeded max_steps")
+        # -- arena bookkeeping: watermarks + epoch repartition -------
+        self.arena.sample()
+        if self.arena.maybe_repartition(self.step) is not None:
+            # epoch boundary: weight-region occupancy joins the KV
+            # invariants maybe_repartition already asserted
+            self.arena.check(slab_used=pool.slab_used,
+                             pinned_bytes=pool.plan.pinned_bytes)
 
+        self.step += 1
+        self._rr_left -= 1
+        if self.step > e.max_steps:
+            raise RuntimeError("pooled engine exceeded max_steps")
+        return True
+
+    def finish_run(self) -> PooledReport:
+        pool, rep = self.pool, self._rep
         self.arena.check(slab_used=pool.slab_used,
                          pinned_bytes=pool.plan.pinned_bytes)
-        for a in allocs.values():
+        for a in self._allocs.values():
             assert a.live_count == 0, "pages leaked past completion"
-        rep.preemptions = sched.preemptions
+        rep.preemptions = self._sched.preemptions
         rep.reload_bytes = pool.reload_bytes_total
         rep.restream_bytes = pool.restream_bytes_total
         rep.reload_events = pool.reload_events
@@ -1308,8 +1417,14 @@ class PooledEngine:
         rep.deferred_activations = pool.deferred_activations
         rep.repartitions = self.arena.repartitions
         rep.pages_moved = self.arena.pages_moved
-        rep.wall_s = time.monotonic() - t_run
+        rep.wall_s = time.monotonic() - self._t_run
         return rep
+
+    def run(self, requests: list[Request]) -> PooledReport:
+        self.start(requests)
+        while self.step_once():
+            pass
+        return self.finish_run()
 
 
 # --- static lockstep baseline --------------------------------------------------

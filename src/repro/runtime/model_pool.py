@@ -378,6 +378,18 @@ class ModelPool:
     def reload_stall_steps(self, reload_bytes: int) -> int:
         return -(-reload_bytes // self.pcfg.reload_bytes_per_step)
 
+    def set_reload_clock(self, bytes_per_step: int) -> None:
+        """Chaos/health hook: change the modeled DMA bandwidth MID-RUN
+        (a degraded-link fault cuts it k-fold; recovery restores it).
+        Every consumer reads ``pcfg.reload_bytes_per_step`` at use time
+        — stall charging, stream ticks, decode-readiness — so the new
+        clock takes effect on the next engine step without re-packing;
+        the residency plan itself is left alone (placement is a
+        fleet-level decision, pacing is a step-level one)."""
+        assert bytes_per_step >= 1
+        self.pcfg = dataclasses.replace(
+            self.pcfg, reload_bytes_per_step=int(bytes_per_step))
+
     def servable(self, model_id: str) -> bool:
         return self._entry(model_id).fits_slab
 

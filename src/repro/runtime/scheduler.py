@@ -34,6 +34,7 @@ class Request:
     done_step: int = -1
     prefills: int = 0                  # 1 + number of preemption restarts
     truncated: bool = False            # hit the pager's max context
+    route_trace: dict | None = None    # MoE first-prefill routing (replay)
 
     @property
     def context_tokens(self) -> np.ndarray:
@@ -146,6 +147,29 @@ def shifting_mix_trace(tenants: Sequence[dict], n_requests: int, *,
         probs_for_rid=lambda rid: probs if rid < n_first else flipped)
 
 
+def diurnal_trace(tenants: Sequence[dict], n_requests: int, *,
+                  mean_interarrival: float,
+                  prompt_lens: tuple[int, ...],
+                  gen_lens: tuple[int, ...],
+                  seed: int = 0, n_phases: int = 4) -> list[Request]:
+    """A multi-tenant trace whose traffic mix ROTATES through
+    ``n_phases`` phases: phase p draws tenants by the share vector
+    rotated left p times, so every tenant takes a turn as the heavy one
+    — the diurnal shape a fleet placement must track (generalizes
+    ``shifting_mix_trace``, whose two phases are a special case)."""
+    shares = np.asarray([float(t.get("share", 1.0)) for t in tenants])
+    per_phase = -(-n_requests // n_phases)
+    probs = []
+    for p in range(n_phases):
+        rolled = np.roll(shares, -p)
+        probs.append(rolled / rolled.sum())
+    return _tenant_trace(
+        tenants, n_requests, mean_interarrival=mean_interarrival,
+        prompt_lens=prompt_lens, gen_lens=gen_lens, seed=seed,
+        probs_for_rid=lambda rid: probs[min(rid // per_phase,
+                                            n_phases - 1)])
+
+
 class Scheduler:
     """FCFS admission queue over an arrival trace + preemption policy."""
 
@@ -219,6 +243,24 @@ class MultiQueueScheduler:
 
     def next_arrival(self) -> int | None:
         return self._pending[0].arrival if self._pending else None
+
+    def inject(self, requests: list[Request]) -> None:
+        """Add requests mid-run (the fleet router dispatches this way:
+        arrivals are stamped with the replica's CURRENT step, so they
+        release on the next scan). Pending order stays (arrival, rid)."""
+        merged = sorted(list(self._pending) + list(requests),
+                        key=lambda r: (r.arrival, r.rid))
+        self._pending = deque(merged)
+
+    def drain(self) -> list[Request]:
+        """Pull every queued request (ready + pending) out of the
+        scheduler — the failover path: a killed replica's queue is
+        re-admitted elsewhere. Returns them in (arrival, rid) order."""
+        out = [r for q in self._ready.values() for r in q]
+        out += list(self._pending)
+        self._ready.clear()
+        self._pending.clear()
+        return sorted(out, key=lambda r: (r.arrival, r.rid))
 
     # -- admission ----------------------------------------------------------
 

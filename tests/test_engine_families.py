@@ -184,6 +184,38 @@ def test_latent_engine_matches_oracle_at_tight_capacity():
         "prefill was not bucket-padded: the padded-ceiling path is idle"
 
 
+def test_latent_preemption_replays_routing():
+    """Preempting a routed (MoE) request must not change its tokens: the
+    re-prefill replays the first prefill's recorded expert-drop
+    population, so the trajectory stays token-for-token equal to the
+    no-preemption run even at tight capacity_factor — re-deriving the
+    drops at the longer re-prefill length would keep different tokens
+    (the ROADMAP correctness carry-over)."""
+    cfg, params = _setup("deepseek-v2-lite-16b")
+    assert cfg.moe.capacity_factor <= 2.0, \
+        "reduced() re-relaxed the capacity workaround"
+    # the PRNGKey(1) prompt genuinely overflows an expert (pinned by
+    # test_latent_engine_matches_oracle_at_tight_capacity)
+    prompt = np.asarray(jax.random.randint(jax.random.PRNGKey(1), (6,), 0,
+                                           cfg.vocab_size), np.int32)
+
+    def reqs():
+        return [Request(rid=i, prompt=prompt.copy(), max_new_tokens=12)
+                for i in range(2)]
+
+    calm = Engine(cfg, params, ECFG).run(reqs())
+    assert calm.preemptions == 0
+    # 3 usable pages for two requests needing 3 pages each at full
+    # context: page growth must evict and later re-prefill one of them
+    tight = EngineConfig(num_slots=2, page_size=8, num_pages=4,
+                         max_pages_per_seq=8, prefill_bucket=8)
+    squeezed = Engine(cfg, params, tight).run(reqs())
+    assert squeezed.preemptions > 0
+    assert max(r.prefills for r in squeezed.completed) > 1
+    assert {r.rid: r.generated for r in squeezed.completed} \
+        == {r.rid: r.generated for r in calm.completed}
+
+
 def test_backend_registry_and_error_message():
     """moe routes through the latent backend only with an MLA cache; the
     unknown-family error derives its list from the live registry."""

@@ -1,0 +1,146 @@
+"""Fleet tier on real replicated engines (CPU reduced configs): chaos
+determinism, failover conservation, DMA-degradation pricing, and the
+router's placement/affinity behavior."""
+
+import copy
+
+import pytest
+
+from repro.runtime.fleet import ModelDesc, place_models
+
+KiB = 1 << 10
+
+
+def test_place_models_demand_spreads_and_mirror_duplicates():
+    """Deterministic fixture: demand gives each model its availability
+    floor on the least-loaded replicas and spends leftover capacity by
+    marginal demand-per-replicated-byte; mirror copies everywhere."""
+    descs = [ModelDesc("hot", None, demand=4.0, weight_bytes=100 * KiB,
+                       value_per_byte=8.0),
+             ModelDesc("warm", None, demand=2.0, weight_bytes=200 * KiB,
+                       value_per_byte=2.0),
+             ModelDesc("cold", None, demand=1.0, weight_bytes=300 * KiB,
+                       value_per_byte=1.0)]
+    placed = place_models(descs, 4, 700 * KiB, policy="demand")
+    copies = {d.model_id: sum(d.model_id in h for h in placed)
+              for d in descs}
+    assert all(c >= 2 for c in copies.values())     # availability floor
+    assert copies["hot"] == 4       # cheapest marginal byte fills first
+    assert copies["cold"] == 2      # the cold giant stays at the floor
+    mirror = place_models(descs, 4, 700 * KiB, policy="mirror")
+    assert all(h == ["cold", "hot", "warm"] for h in mirror)
+    # capacity too small for the giant: it lands nowhere, provably
+    tight = place_models(descs, 2, 250 * KiB, policy="demand")
+    assert all("cold" not in h for h in tight)
+    assert all("hot" in h for h in tight)
+
+
+@pytest.fixture(scope="module")
+def tiny_fleet_fixture():
+    import jax
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.runtime import (PoolConfig, PoolEngineConfig,
+                               multi_tenant_trace)
+    archs = ("codeqwen1.5-7b", "rwkv6-7b")
+    cfgs = {a: get_config(a).reduced() for a in archs}
+    params = {a: get_model(c).init_params(c, jax.random.PRNGKey(0))
+              for a, c in cfgs.items()}
+    zoo = [(a, cfgs[a], 2.0 if "qwen" in a else 1.0) for a in archs]
+    tenants = [dict(model_id=a, vocab_size=c.vocab_size, extras_fn=None)
+               for a, c in cfgs.items()]
+    pcfg = PoolConfig(hbm_budget_bytes=700 * KiB, slab_frac=0.5,
+                      reload_bytes_per_step=32 * KiB, hysteresis_steps=8)
+    ecfg = PoolEngineConfig(num_slots=4, page_size=8, num_pages=65,
+                            max_pages_per_seq=8, prefill_bucket=8)
+    trace = multi_tenant_trace(tenants, 18, mean_interarrival=0.4,
+                               prompt_lens=(6, 10), gen_lens=(4, 8),
+                               seed=3)
+    return zoo, pcfg, ecfg, params, trace
+
+
+def _run_fleet(fixture, faults):
+    from repro.runtime import FleetConfig, FleetEngine
+    zoo, pcfg, ecfg, params, trace = fixture
+    fleet = FleetEngine(zoo, pcfg, ecfg, params,
+                        FleetConfig(n_replicas=2), faults=faults)
+    return fleet.run(copy.deepcopy(trace))
+
+
+def test_failover_deterministic_and_conserving(tiny_fleet_fixture):
+    """Same FaultSchedule seed => identical re-admission order, report
+    counters, and decoded tokens; and failover conserves the fleet —
+    every request completes somewhere (zero lost/shed), generated
+    tokens match the fault-free run token-for-token, and the killed
+    replica's reload bytes stay accounted in the fleet total."""
+    from repro.runtime import FaultSchedule
+    clean = _run_fleet(tiny_fleet_fixture, None)
+    faults = lambda: FaultSchedule.random(  # noqa: E731
+        seed=7, n_events=3, horizon=12, targets=("r0", "r1"),
+        max_kills=1)
+    a = _run_fleet(tiny_fleet_fixture, faults())
+    b = _run_fleet(tiny_fleet_fixture, faults())
+    assert faults().spec == faults().spec
+    # determinism
+    assert a.re_admission_order == b.re_admission_order
+    assert a.re_admission_latency == b.re_admission_latency
+    assert (a.failovers, a.re_admissions, a.retries, a.new_tokens,
+            a.ticks) == (b.failovers, b.re_admissions, b.retries,
+                         b.new_tokens, b.ticks)
+    assert {r.rid: r.generated for r in a.completed} \
+        == {r.rid: r.generated for r in b.completed}
+    # conservation across failover
+    assert a.requests_lost == 0 and a.requests_shed == 0
+    assert {r.rid: r.generated for r in a.completed} \
+        == {r.rid: r.generated for r in clean.completed}
+    dead_rows = [row for row in a.per_replica if not row["live"]]
+    if a.failovers:
+        assert dead_rows, "killed replica missing from the report"
+        dead_bytes = sum(int(row["reload_KiB"] * KiB)
+                         for row in dead_rows)
+        assert a.reload_bytes + KiB >= dead_bytes  # KiB: report rounding
+
+
+def test_kill_primary_re_admits_with_zero_loss(tiny_fleet_fixture):
+    """Killing the primary replica mid-trace drains its in-flight work
+    and re-admits every request on the survivor."""
+    from repro.runtime import FaultSchedule
+    rep = _run_fleet(tiny_fleet_fixture, FaultSchedule.parse("kill@3:r0"))
+    assert rep.failovers == 1
+    assert rep.re_admissions >= 1
+    assert rep.requests_lost == 0 and rep.requests_shed == 0
+    assert len(rep.completed) == rep.n_requests
+    # bounded disruption: re-admission happened the tick of the kill or
+    # within the backoff cap after it
+    assert max(rep.re_admission_latency) <= 16
+
+
+def test_dma_degradation_prices_stalls(tiny_fleet_fixture):
+    """Cutting one replica's DMA clock k-x may not change WHAT is
+    generated, only what it costs: same tokens, strictly more stall
+    steps in the fleet denominator."""
+    from repro.runtime import FaultSchedule
+    clean = _run_fleet(tiny_fleet_fixture, None)
+    slow = _run_fleet(tiny_fleet_fixture,
+                      FaultSchedule.parse("dma@0:r0x8/400"))
+    assert {r.rid: r.generated for r in slow.completed} \
+        == {r.rid: r.generated for r in clean.completed}
+    assert slow.fleet_steps > clean.fleet_steps
+    assert slow.tokens_per_step < clean.tokens_per_step
+
+
+def test_straggler_replica_detected_and_deprioritized(tiny_fleet_fixture):
+    """A straggling replica advances once every k ticks; the per-replica
+    health detector flags it from observed progress gaps (not from the
+    schedule), and the run still completes with zero loss."""
+    from repro.runtime import FaultSchedule, FleetConfig, FleetEngine
+    zoo, pcfg, ecfg, params, trace = tiny_fleet_fixture
+    fleet = FleetEngine(zoo, pcfg, ecfg, params,
+                        FleetConfig(n_replicas=2),
+                        faults=FaultSchedule.parse("straggle@0:r0x4/500"))
+    rep = fleet.run(copy.deepcopy(trace))
+    assert rep.requests_lost == 0
+    assert fleet.replicas[0].flagged, \
+        "4x straggler never tripped the health detector"
+    clean = _run_fleet(tiny_fleet_fixture, None)
+    assert rep.ticks > clean.ticks

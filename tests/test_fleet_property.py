@@ -1,0 +1,95 @@
+"""Fleet placement invariants under hypothesis: pure ``place_models``
+properties driven with synthetic model descriptors (no jax). The
+engine-backed chaos determinism/conservation tests live in
+test_fleet.py so they run even without hypothesis installed."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime.fleet import ModelDesc, place_models  # noqa: E402
+
+KiB = 1 << 10
+
+
+# --- placement properties (pure) -----------------------------------------------
+
+
+@st.composite
+def _zoos(draw):
+    n = draw(st.integers(1, 8))
+    descs = [ModelDesc(model_id=f"m{i}", cfg=None,
+                       demand=draw(st.floats(0.1, 8.0)),
+                       weight_bytes=draw(st.integers(1, 600)) * KiB,
+                       value_per_byte=draw(st.floats(0.01, 10.0)))
+             for i in range(n)]
+    n_replicas = draw(st.integers(1, 5))
+    capacity = draw(st.integers(64, 2000)) * KiB
+    policy = draw(st.sampled_from(("demand", "mirror")))
+    return descs, n_replicas, capacity, policy
+
+
+def _used(placed, weights):
+    return [sum(weights[m] for m in hosted) for hosted in placed]
+
+
+@settings(max_examples=80, deadline=None)
+@given(_zoos())
+def test_placement_respects_budget_and_coverage(zoo):
+    """(a) every replica's placed bytes fit its HBM capacity; (b) a
+    model left on ZERO replicas proves no replica could fit it — placed
+    bytes only grow, so 'it would have fit earlier' is impossible."""
+    descs, n_replicas, capacity, policy = zoo
+    placed = place_models(descs, n_replicas, capacity, policy=policy)
+    weights = {d.model_id: d.weight_bytes for d in descs}
+    used = _used(placed, weights)
+    assert len(placed) == n_replicas
+    for r, hosted in enumerate(placed):
+        assert used[r] <= capacity
+        assert len(set(hosted)) == len(hosted)          # no double-place
+    for d in descs:
+        copies = sum(d.model_id in hosted for hosted in placed)
+        if copies == 0:
+            assert all(used[r] + d.weight_bytes > capacity
+                       for r in range(n_replicas)), \
+                f"{d.model_id} unplaced but a replica had room"
+
+
+@settings(max_examples=80, deadline=None)
+@given(_zoos())
+def test_placement_survives_single_replica_loss(zoo):
+    """Demand placement's availability floor: any model that CAN be
+    double-hosted keeps >= 1 live copy after any single replica dies.
+    (A model is single-copy only when no second replica could take it.)"""
+    descs, n_replicas, capacity, policy = zoo
+    if n_replicas < 2:
+        return
+    placed = place_models(descs, n_replicas, capacity, policy=policy)
+    weights = {d.model_id: d.weight_bytes for d in descs}
+    used = _used(placed, weights)
+    for d in descs:
+        hosts = [r for r, h in enumerate(placed) if d.model_id in h]
+        if len(hosts) == 1:
+            (r0,) = hosts
+            assert all(used[r] + d.weight_bytes > capacity
+                       for r in range(n_replicas) if r != r0), \
+                f"{d.model_id} single-copy though another replica had room"
+
+
+@settings(max_examples=40, deadline=None)
+@given(_zoos(), st.floats(0.3, 0.9))
+def test_demand_pass2_respects_fill_frac(zoo, fill_frac):
+    """Extra copies beyond the availability floor never push a replica
+    past fill_frac x capacity + the floor copies it already carried."""
+    descs, n_replicas, capacity, _ = zoo
+    floor = place_models(descs, n_replicas, capacity, policy="demand",
+                         fill_frac=0.0)    # pass 2 disabled
+    full = place_models(descs, n_replicas, capacity, policy="demand",
+                        fill_frac=fill_frac)
+    weights = {d.model_id: d.weight_bytes for d in descs}
+    for r in range(n_replicas):
+        assert set(floor[r]) <= set(full[r])
+        extra = _used(full, weights)[r] - _used(floor, weights)[r]
+        if extra:                # pass-2 additions obeyed the cap
+            assert _used(full, weights)[r] <= int(capacity * fill_frac)

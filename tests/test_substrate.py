@@ -11,7 +11,7 @@ from repro.checkpoint import CheckpointManager
 from repro.data import TokenStream
 from repro.optim import (adamw_init, adamw_update, cosine_schedule,
                          int8_compress, int8_decompress)
-from repro.runtime import ElasticConfig, TrainingSupervisor
+from repro.runtime import ElasticConfig, TrainingSupervisor, TransientFault
 
 # --- data pipeline ----------------------------------------------------------------
 
@@ -174,7 +174,9 @@ def test_supervisor_elastic_shrink_after_repeated_faults(tmp_path):
     calls = []
 
     def always_fail(state, batch):
-        raise RuntimeError("dead host")
+        # a TRANSIENT fault (lost host): retried until the budget runs
+        # out, then the elastic shrink rebuilds the step function
+        raise TransientFault("dead host")
 
     good = _counter_step()
 
@@ -189,6 +191,72 @@ def test_supervisor_elastic_shrink_after_repeated_faults(tmp_path):
                             lambda s: None, start_step=0, num_steps=5)
     assert report.shrinks == 1
     assert calls and int(state["x"]) == 5
+    assert report.transient_faults == report.retries
+    assert report.permanent_faults == 0
+
+
+def test_supervisor_permanent_fault_reraises_without_checkpoint(tmp_path):
+    """An error OUTSIDE the transient allowlist with nothing to restore
+    is a bug, not a fault — it must surface immediately instead of
+    burning the retry budget."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainingSupervisor(mgr, ElasticConfig(checkpoint_every=100,
+                                                max_retries=3))
+
+    def buggy(state, batch):
+        raise ValueError("shape mismatch")
+
+    with pytest.raises(ValueError, match="shape mismatch"):
+        sup.run({"x": jnp.array(0)}, buggy, lambda s: None,
+                start_step=0, num_steps=5)
+
+
+def test_supervisor_permanent_fault_single_restore_then_reraise(tmp_path):
+    """A permanent error earns ONE restore attempt (the failure may have
+    been corrupted state); a recurrence re-raises, and the report
+    classifies every fault."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainingSupervisor(mgr, ElasticConfig(checkpoint_every=2,
+                                                max_retries=3))
+    fails = []
+
+    def step_fn(state, batch):
+        s = int(state["x"])
+        if s == 5:
+            fails.append(s)
+            raise RuntimeError("nan loss")     # not in the allowlist
+        return {"x": state["x"] + 1}, {"loss": 0.0}
+
+    with pytest.raises(RuntimeError, match="nan loss"):
+        sup.run({"x": jnp.array(0)}, step_fn, lambda s: None,
+                start_step=0, num_steps=10)
+    # restored once (back to the step-4 checkpoint), then step 5 failed
+    # again and re-raised instead of shrinking
+    assert len(fails) == 2
+
+
+def test_supervisor_classifies_faults_in_report(tmp_path):
+    """One transient + recovery: the report separates the transient
+    count from the permanent count and logs the classification."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    sup = TrainingSupervisor(mgr, ElasticConfig(checkpoint_every=2,
+                                                max_retries=3))
+    fired = []
+
+    def step_fn(state, batch):
+        s = int(state["x"])
+        if s == 5 and not fired:
+            fired.append(s)
+            raise TransientFault("link flap")
+        return {"x": state["x"] + 1}, {"loss": 0.0}
+
+    state, report = sup.run({"x": jnp.array(0)}, step_fn,
+                            lambda s: None, start_step=0, num_steps=10)
+    assert int(state["x"]) == 10
+    assert report.transient_faults == 1
+    assert report.permanent_faults == 0
+    assert [f["kind"] for f in report.fault_log] == ["transient"]
+    assert "link flap" in report.fault_log[0]["error"]
 
 
 def test_supervisor_detects_straggler(tmp_path):
