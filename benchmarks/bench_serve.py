@@ -61,12 +61,14 @@ import numpy as np
 from repro.configs import get_config
 from repro.kernels import ops, ref
 from repro.models import get_model
+from repro.models.transformer import forward as dense_forward
 from repro.runtime import (Engine, EngineConfig, FaultSchedule, FleetConfig,
                            FleetEngine, ModelPool, PoolConfig,
                            PoolEngineConfig, PooledEngine,
                            calibrated_reload_bytes_per_step, diurnal_trace,
                            multi_tenant_trace, poisson_trace, run_static,
-                           shifting_mix_trace, vlm_extras_fn)
+                           shared_prefix_trace, shifting_mix_trace,
+                           vlm_extras_fn)
 
 # one family per cache shape: dense GQA, M-RoPE vlm backbone, constant-
 # state recurrence, hybrid window ring + recurrence, MoE with an MLA
@@ -371,6 +373,159 @@ def run_multi_tenant(frontier: str = "full") -> list[dict]:
     return rows
 
 
+# --- shared-prefix scenario -----------------------------------------------------
+
+# two halves, sharing off vs on over the same trace:
+#  * capacity pairs — a single dense engine with a loose page budget, so
+#    both runs hold the same 8-slot concurrency and the comparison is
+#    clean: prefill compute and peak KV demand both drop while decode
+#    output stays token-for-token identical to the unshared oracle.
+#  * churn pair — dense + MLA-MoE tenants on one pool under a page
+#    budget tight enough to force preemption, re-admission through the
+#    radix index, CoW on divergence writes, and epoch lease moves.
+#    Preemption schedules differ between the two runs, so their decode
+#    paths hit different jit bucket shapes; at bf16 the argmax gap is
+#    often a single quantum (~2^-6) or an exact tie, making strict
+#    equality ill-posed.  Correctness is asserted instead by teacher-
+#    forcing every generated sequence through a clean full-context
+#    forward: each chosen token must sit within SP_GREEDY_TOL of that
+#    position's argmax.  KV corruption shows up as O(1) deviations;
+#    shape-induced rounding stays at a quantum.
+SP_DENSE = "codeqwen1.5-7b"
+SP_MOE = "deepseek-v2-lite-16b"
+SP_PROMPT_LEN = 32
+SP_OVERLAPS = (0.25, 0.5, 0.75)
+SP_N_DENSE = 24
+SP_N_MOE = 6
+SP_CAP_PAGES = 80          # loose: every admission fits, no preemption
+SP_CHURN_PAGES = 33        # tight: forces preempt / re-admit / CoW
+SP_CHURN_SEED = 11
+SP_RESEND_FRAC = 0.5       # churn: half the requests re-send a prior
+#                            conversation verbatim — the twin shape
+#                            whose preempt/re-admit cycle lands a
+#                            divergence write in a still-shared page
+SP_GREEDY_TOL = 0.0625     # 4 bf16 quanta at logit scale ~2
+
+
+def _run_sp_capacity_once(cfg, params, trace, *, sharing: bool):
+    ecfg = EngineConfig(num_slots=SLOTS, page_size=8,
+                        num_pages=SP_CAP_PAGES, max_pages_per_seq=16,
+                        prefill_bucket=8, prefix_sharing=sharing)
+    return Engine(cfg, params, ecfg).run(copy.deepcopy(trace))
+
+
+def _run_sp_churn_once(cfgs, params, trace, reload_bps, *,
+                       sharing: bool):
+    pool = ModelPool(_pool_cfg(POOL_BUDGET_KIB, POOL_SLAB_FRAC,
+                               reload_bps))
+    pool.register(SP_DENSE, cfgs[SP_DENSE], demand=2.0)
+    pool.register(SP_MOE, cfgs[SP_MOE], demand=1.0)
+    pool.pack()
+    ecfg = PoolEngineConfig(
+        num_slots=SLOTS, page_size=8, num_pages=SP_CHURN_PAGES,
+        max_pages_per_seq=16, prefill_bucket=8, policy="reload_aware",
+        stream="model", repartition="epoch", epoch_steps=32,
+        prefix_sharing=sharing)
+    eng = PooledEngine(pool, {m: params[m] for m in (SP_DENSE, SP_MOE)},
+                       ecfg)
+    return eng.run(copy.deepcopy(trace))
+
+
+def _sp_greedy_deviation(cfg, params, reqs) -> float:
+    """Worst gap between the clean-forward argmax logit and the logit of
+    the token actually chosen, teacher-forcing prompt+generated."""
+    worst = 0.0
+    for r in reqs:
+        seq = jnp.asarray([list(r.prompt) + list(r.generated)],
+                          dtype=jnp.int32)
+        logits = np.asarray(
+            dense_forward(cfg, params, {"tokens": seq})[0], np.float64)
+        p = len(r.prompt)
+        for i, tok in enumerate(r.generated):
+            v = logits[p + i - 1]
+            worst = max(worst, float(v.max() - v[tok]))
+    return worst
+
+
+def _sp_pair_row(name, base, shared, extra) -> dict:
+    pf_saved = 1 - shared.prefill_tokens / max(base.prefill_tokens, 1)
+    kv_saved = 1 - (shared.kv_demand_bytes_peak
+                    / max(base.kv_demand_bytes_peak, 1))
+    row = {
+        "name": name,
+        "prefill_tokens_base": base.prefill_tokens,
+        "prefill_tokens_shared": shared.prefill_tokens,
+        "prefill_tokens_saved": shared.prefill_tokens_saved,
+        "prefill_saved_frac": round(pf_saved, 4),
+        "kv_peak_base": base.kv_demand_bytes_peak,
+        "kv_peak_shared": shared.kv_demand_bytes_peak,
+        "kv_saved_frac": round(kv_saved, 4),
+        # joint compute x capacity drop: superlinear in overlap when
+        # both factors track it
+        "product_saved_frac": round(
+            1 - (1 - pf_saved) * (1 - kv_saved), 4),
+        "shared_page_hits": shared.shared_page_hits,
+        "cow_copies": shared.cow_copies,
+        "preemptions_base": base.preemptions,
+        "preemptions_shared": shared.preemptions,
+        "new_tokens": shared.new_tokens,
+    }
+    row.update(extra)
+    return row
+
+
+def run_shared_prefix(smoke: bool = False) -> list[dict]:
+    cfgs = {a: get_config(a).reduced() for a in (SP_DENSE, SP_MOE)}
+    params = {a: get_model(cfgs[a]).init_params(cfgs[a],
+                                                jax.random.PRNGKey(0))
+              for a in (SP_DENSE, SP_MOE)}
+    reload_bps = calibrated_reload_bytes_per_step(cfgs.items())
+    overlaps = (0.5,) if smoke else SP_OVERLAPS
+    n_dense = SP_N_DENSE // 2 if smoke else SP_N_DENSE
+    rows = []
+    for o in overlaps:                  # capacity pairs
+        trace = shared_prefix_trace(
+            n_dense, overlap=o, prompt_len=SP_PROMPT_LEN,
+            mean_interarrival=MEAN_INTERARRIVAL, gen_lens=(8, 16),
+            vocab_size=cfgs[SP_DENSE].vocab_size, seed=5,
+            model_id=SP_DENSE)
+        reps = {on: _run_sp_capacity_once(cfgs[SP_DENSE],
+                                          params[SP_DENSE], trace,
+                                          sharing=on)
+                for on in (False, True)}
+        toks = {on: {r.rid: tuple(r.generated)
+                     for r in reps[on].completed} for on in reps}
+        rows.append(_sp_pair_row(
+            f"serve_shared_prefix/o{o}", reps[False], reps[True],
+            {"overlap": o, "same_tokens": toks[True] == toks[False]}))
+    # churn pair: fixed 50% overlap, tight pooled budget
+    dense = shared_prefix_trace(
+        SP_N_DENSE, overlap=0.5, prompt_len=SP_PROMPT_LEN,
+        mean_interarrival=MEAN_INTERARRIVAL, gen_lens=(24,),
+        vocab_size=cfgs[SP_DENSE].vocab_size, seed=SP_CHURN_SEED,
+        model_id=SP_DENSE, resend_frac=SP_RESEND_FRAC)
+    moe = poisson_trace(
+        SP_N_MOE, mean_interarrival=4 * MEAN_INTERARRIVAL,
+        prompt_lens=(8, 16), gen_lens=(4, 8),
+        vocab_size=cfgs[SP_MOE].vocab_size, seed=7, model_id=SP_MOE)
+    for r in moe:
+        r.rid += 1000                   # owner ids distinct per tenant
+    trace = dense + moe
+    reps = {on: _run_sp_churn_once(cfgs, params, trace, reload_bps,
+                                   sharing=on)
+            for on in (False, True)}
+    shared = reps[True]
+    dev = _sp_greedy_deviation(
+        cfgs[SP_DENSE], params[SP_DENSE],
+        [r for r in shared.completed if r.model_id == SP_DENSE])
+    rows.append(_sp_pair_row(
+        "serve_shared_prefix/churn", reps[False], shared,
+        {"overlap": 0.5,
+         "repartitions_shared": shared.repartitions,
+         "greedy_dev": round(dev, 6)}))
+    return rows
+
+
 # --- fleet chaos scenario -------------------------------------------------------
 
 # replicated pools behind the demand-placement router on a diurnal
@@ -481,6 +636,8 @@ def run(scenario: str = "all", frontier: str = "full",
         rows += run_engine_vs_static()
     if scenario in ("all", "multi_tenant"):
         rows += run_multi_tenant(frontier)
+    if scenario in ("all", "shared_prefix"):
+        rows += run_shared_prefix(smoke)
     if scenario in ("all", "fleet_chaos"):
         rows += run_fleet_chaos(smoke)
     return rows
@@ -592,6 +749,47 @@ def check(rows) -> None:
             f"b{bmin}_s{smin}: {point['bounded'][1]} vs {point['full'][1]}"
         assert point["bounded"][0]["restream_bytes"] > 0, \
             "bounded slab never re-streamed (the trade is not exercised)"
+    sp = sorted((r for r in rows
+                 if r["name"].startswith("serve_shared_prefix/o")),
+                key=lambda r: r["overlap"])
+    for r in sp:                        # capacity pairs
+        assert r["same_tokens"], \
+            f"{r['name']}: sharing changed decode output " \
+            "(must be token-for-token equal to the unshared oracle)"
+        assert r["shared_page_hits"] > 0, \
+            f"{r['name']}: no page was ever admitted by reference"
+        assert r["prefill_tokens_shared"] < r["prefill_tokens_base"], \
+            f"{r['name']}: prefill compute did not drop"
+        if r["overlap"] >= 0.5:
+            assert r["kv_peak_shared"] < r["kv_peak_base"], \
+                f"{r['name']}: peak KV demand bytes did not drop"
+            # superlinear: the joint compute x capacity saving beats
+            # the linear share of the overlap
+            assert r["product_saved_frac"] > r["overlap"], \
+                f"{r['name']}: joint saving {r['product_saved_frac']} " \
+                f"not superlinear in overlap {r['overlap']}"
+    for lo, hi in zip(sp, sp[1:]):      # savings grow with overlap
+        assert hi["prefill_saved_frac"] > lo["prefill_saved_frac"], \
+            f"prefill saving not increasing: {lo['name']} -> " \
+            f"{hi['name']}"
+    churn = [r for r in rows if r["name"] == "serve_shared_prefix/churn"]
+    if churn:
+        (c,) = churn
+        assert c["greedy_dev"] <= SP_GREEDY_TOL, \
+            f"churn run tokens deviate {c['greedy_dev']} from the " \
+            "teacher-forced greedy oracle: shared/CoW pages corrupted"
+        assert c["cow_copies"] > 0, \
+            "no divergence write ever copied a shared page " \
+            "(the CoW path went unexercised)"
+        assert c["shared_page_hits"] > 0, \
+            "churn run never admitted a page by reference"
+        assert c["preemptions_shared"] > 0, \
+            "the tight page budget never forced a preempt"
+        assert c["repartitions_shared"] > 0, \
+            "epoch repartitioning never ran " \
+            "(invariants not exercised across lease moves)"
+        assert c["prefill_tokens_shared"] < c["prefill_tokens_base"], \
+            "churn run prefill compute did not drop"
     fleet = [r for r in rows if r["name"] == "serve_fleet_placement"]
     if fleet:                           # fleet_chaos scenario present
         (fp,) = fleet
@@ -621,7 +819,7 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenario", default="all",
                     choices=("all", "engine_vs_static", "multi_tenant",
-                             "fleet_chaos"))
+                             "shared_prefix", "fleet_chaos"))
     ap.add_argument("--frontier", default="full",
                     choices=("full", "smoke"),
                     help="budget x slab sweep size (smoke: one point, "

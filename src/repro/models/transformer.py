@@ -291,6 +291,76 @@ def write_prefill_pages(cfg, state: PagedDecodeState, kv, page_ids
         v_pages=L.paged_cache_write_prompt(state.v_pages, v, page_ids))
 
 
+def copy_kv_page(state: PagedDecodeState, src, dst) -> PagedDecodeState:
+    """Duplicate one physical page (all layers, K and V) — the
+    copy-on-write step when a request is about to append into a page
+    other requests still share. src/dst: scalar int32 page ids."""
+    return PagedDecodeState(
+        k_pages=state.k_pages.at[:, :, dst].set(state.k_pages[:, :, src]),
+        v_pages=state.v_pages.at[:, :, dst].set(state.v_pages[:, :, src]))
+
+
+def paged_prefill_shared(cfg, params, state: PagedDecodeState, batch,
+                         lengths, prefix_pages, prefix_len, *,
+                         constrain=None):
+    """Prefill only the suffix past a shared prefix already resident in
+    the page pool.
+
+    tokens (B, S) hold the suffix from the divergence token on (padded
+    past ``lengths``); ``prefix_pages`` (B, Mp) are the full pages
+    holding each row's shared prefix (dead entries -> trash page) and
+    ``prefix_len`` (B,) its token count (a page multiple). The cached
+    prefix KV was RoPE'd at its absolute positions when first written,
+    so suffix queries attend it directly — exactly like decode reading
+    the cache — while suffix positions are offset by ``prefix_len``.
+    Returns per-row last-live-suffix-token logits plus the raw suffix
+    KV (L, B, S, KV, dh) for the usual page scatter.
+    """
+    B, S = batch["tokens"].shape
+    page = state.k_pages.shape[3]
+    Mp = prefix_pages.shape[1]
+    Tp = Mp * page                       # static gathered-prefix length
+    KV, dh = cfg.num_kv_heads, cfg.head_dim
+    lengths = lengths.astype(jnp.int32)
+    prefix_len = prefix_len.astype(jnp.int32)
+
+    batch = dict(batch)
+    batch["positions"] = (prefix_len[:, None]
+                          + jnp.arange(S, dtype=jnp.int32))
+    batch = _default_batch(cfg, batch)
+    x = _embed(cfg, params, batch)
+
+    # cache layout per layer: [gathered prefix (Tp) | suffix slots (S)]
+    # keys:  prefix entries valid below prefix_len, suffix causal
+    qi = jnp.arange(S)[None, :, None]
+    kj = jnp.arange(Tp + S)[None, None, :]
+    pl = prefix_len[:, None, None]
+    mask = jnp.where(kj < Tp, kj < pl, kj - Tp <= qi)[:, None, None]
+
+    def gather(pages):                   # (L, KV, P, pg, dh) -> (L,B,Tp,..)
+        g = pages[:, :, prefix_pages]    # (L, KV, B, Mp, pg, dh)
+        g = g.reshape(g.shape[0], KV, B, Tp, dh)
+        return jnp.moveaxis(g, 1, 3)     # (L, B, Tp, KV, dh)
+
+    pk, pv = gather(state.k_pages), gather(state.v_pages)
+    zeros = jnp.zeros((B, S, KV, dh), pk.dtype)
+
+    def body(carry, xs):
+        p, lk, lv = xs
+        ck = jnp.concatenate([lk, zeros], axis=1)
+        cv = jnp.concatenate([lv, zeros], axis=1)
+        y, (k_full, v_full) = _block(cfg, p, carry, batch, mask,
+                                     cache=(ck, cv), cache_pos=Tp,
+                                     constrain=constrain)
+        return y, (k_full[:, Tp:], v_full[:, Tp:])
+
+    x, (k, v) = lax.scan(body, x, (params["blocks"], pk, pv))
+    logits = _head(cfg, params, x)
+    idx = (lengths - 1)[:, None, None]
+    last = jnp.take_along_axis(logits, idx, axis=1)[:, 0]
+    return last, (k.astype(L.COMPUTE_DTYPE), v.astype(L.COMPUTE_DTYPE))
+
+
 def _paged_block(cfg, p, x, batch, k_pages, v_pages, page_table,
                  page_ids, offsets, attn_lengths, constrain=None):
     """One decoder block over a paged cache, S == 1. k/v_pages: (KV, P,

@@ -14,13 +14,14 @@ from .fault_tolerance import (TRANSIENT_DEFAULT, Backoff, ElasticConfig,
                               TrainingSupervisor, TransientFault)
 from .fleet import (FleetConfig, FleetEngine, FleetReport, ModelDesc,
                     place_models, zoo_descs)
-from .kv_pager import TRASH_PAGE, PageAllocator, PagerConfig
+from .kv_pager import NEUTRAL_OWNER, TRASH_PAGE, PageAllocator, PagerConfig
 from .model_pool import (ModelEntry, ModelPool, PoolConfig, PoolError,
                          PoolPlan, calibrated_reload_bytes_per_step,
                          model_weight_bytes)
+from .prefix_index import PrefixIndex
 from .scheduler import (MultiQueueScheduler, Request, Scheduler,
                         diurnal_trace, multi_tenant_trace, poisson_trace,
-                        shifting_mix_trace)
+                        shared_prefix_trace, shifting_mix_trace)
 
 __all__ = ["ArenaConfig", "DeviceArena",
            "Engine", "EngineConfig", "EngineReport", "ENGINE_FAMILIES",
@@ -28,12 +29,13 @@ __all__ = ["ArenaConfig", "DeviceArena",
            "LatentBackend", "engine_backend", "resolve_backend",
            "PooledEngine", "PoolEngineConfig", "PooledReport",
            "run_static", "make_sampler", "vlm_extras_fn",
-           "PageAllocator", "PagerConfig", "TRASH_PAGE", "partition_pages",
+           "PageAllocator", "PagerConfig", "TRASH_PAGE", "NEUTRAL_OWNER",
+           "partition_pages", "PrefixIndex",
            "ModelPool", "ModelEntry", "PoolConfig", "PoolError", "PoolPlan",
            "model_weight_bytes", "calibrated_reload_bytes_per_step",
            "Request", "Scheduler", "MultiQueueScheduler",
            "poisson_trace", "multi_tenant_trace", "shifting_mix_trace",
-           "diurnal_trace",
+           "diurnal_trace", "shared_prefix_trace",
            "ElasticConfig", "RunReport", "StepTimeout",
            "TrainingSupervisor",
            "Backoff", "FaultEvent", "FaultSchedule", "StragglerDetector",

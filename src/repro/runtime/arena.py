@@ -33,6 +33,16 @@ stays in the arena's spare-byte bank). Invariants, asserted by
                  check) and leases never exceed the provisioned caps
   liveness       live_t <= lease_t at all times (free pages move, live
                  pages never do)
+  refcounts      every referenced page's refcount equals its holder
+                 count and no referenced page sits on the free list
+                 (allocator check); shared prefix pages — including the
+                 prefix index's tenant-neutral NEUTRAL_OWNER region —
+                 count as live, so an epoch shrink can never surrender
+                 a page something still references
+  demand floor   a tenant's lease never shrinks below its registered
+                 ``demand_floor`` (the largest admitted request's
+                 remaining page demand), so an epoch shrink cannot
+                 preempt-churn a request the engine already admitted
   ceiling        each weight sub-region's reported occupancy stays
                  within its own budget (pinned <= pin_bytes, slab_used
                  <= slab_bytes) — combined with KV conservation, the
@@ -133,6 +143,10 @@ class _Lease:
     watermark: int = 0                 # high-water live pages
     starved_steps: int = 0             # steps blocked on pages
     shortfall: int = 0                 # max pages short when blocked
+    # shrink floor: the largest admitted request's remaining page
+    # demand (engine-maintained) — an epoch shrink below this would
+    # force that request into preempt-churn it can never escape
+    demand_floor: int = 0
 
 
 class DeviceArena:
@@ -209,6 +223,7 @@ class DeviceArena:
             lease.watermark = 0
             lease.starved_steps = 0
             lease.shortfall = 0
+            lease.demand_floor = 0
         self._spare_bytes = 0
         if self._kv_bytes0 is not None:
             self._kv_bytes0 = self.kv_leased_bytes
@@ -218,6 +233,15 @@ class DeviceArena:
         self.clamped_grows = 0
         self.history = []
         self._starved_at = {}
+
+    def set_demand_floor(self, tenant: str, pages: int) -> None:
+        """Register the largest admitted request's remaining page demand
+        (the engine recomputes this every step over its occupied slots).
+        ``maybe_repartition`` never shrinks the lease below it — without
+        the floor, an epoch shrink to ``watermark + slack`` could leave
+        an already-admitted request unable to ever grow to its final
+        context, preempt-churning it until the next grow epoch."""
+        self._leases[tenant].demand_floor = pages
 
     def note_starved(self, tenant: str, step: int, want: int = 1) -> None:
         """Record that ``tenant`` was blocked on pages this step (counted
@@ -255,10 +279,15 @@ class DeviceArena:
         moves: list[dict] = []
         leases = self._leases
         # donors: free pages above (watermark + slack), never below the
-        # floor and never a live page
+        # floor, never a live page, and never below the largest admitted
+        # request's remaining demand (the watermark only records pages
+        # touched SO FAR — an admitted long request's future growth is
+        # invisible to it, and shrinking into that demand preempt-churns
+        # a request admission already committed to)
         surplus = {
             t: max(0, lease.pages - max(lease.watermark + a.slack_pages,
                                         lease.allocator.live_count,
+                                        lease.demand_floor,
                                         a.min_pages))
             for t, lease in leases.items()}
         starved = sorted(
@@ -313,6 +342,12 @@ class DeviceArena:
             "starved_steps": {t: leases[t].starved_steps
                               for t in self.tenants},
             "leases": {t: leases[t].pages for t in self.tenants},
+            "demand_floors": {t: leases[t].demand_floor
+                              for t in self.tenants},
+            "shared_pages": {t: leases[t].allocator.shared_count
+                             for t in self.tenants},
+            "neutral_pages": {t: leases[t].allocator.neutral_count
+                              for t in self.tenants},
             "spare_bytes": self._spare_bytes,
             "moves": moves,
         })
@@ -334,11 +369,13 @@ class DeviceArena:
         so the total modeled footprint can never exceed the budget."""
         for t, lease in self._leases.items():
             a = lease.allocator
-            a.check()                          # rows partition the pool
+            a.check()                          # rows + refcounts conserve
             assert a.live_count <= lease.pages, \
                 f"{t}: live {a.live_count} exceeds lease {lease.pages}"
             assert self.acfg.min_pages <= lease.pages <= lease.cap, \
                 f"{t}: lease {lease.pages} outside [min, cap]"
+            assert 0 <= a.demand_count <= a.live_count, \
+                f"{t}: demand {a.demand_count} outside [0, live]"
         if self._kv_bytes0 is not None:
             got = self.kv_leased_bytes + self._spare_bytes
             assert got == self._kv_bytes0, \
@@ -364,5 +401,8 @@ class DeviceArena:
                 "cap": lease.cap, "page_bytes": lease.page_bytes,
                 "watermark": lease.watermark,
                 "live": lease.allocator.live_count,
+                "demand_floor": lease.demand_floor,
+                "shared": lease.allocator.shared_count,
+                "neutral": lease.allocator.neutral_count,
             } for t, lease in self._leases.items()},
         }

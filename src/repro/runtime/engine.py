@@ -42,6 +42,7 @@ from ..models import get_model
 from .arena import ArenaConfig, DeviceArena, partition_pages  # noqa: F401
 from .kv_pager import PagerConfig, TRASH_PAGE
 from .model_pool import ModelPool
+from .prefix_index import PrefixIndex
 from .scheduler import MultiQueueScheduler, Request, Scheduler
 
 
@@ -56,6 +57,12 @@ class EngineConfig:
     temperature: float = 0.8
     seed: int = 0
     max_steps: int = 200_000
+    # cross-request KV prefix sharing: admission maps prompt prefixes
+    # already resident in the page pool (radix index over token ids)
+    # onto refcounted shared pages and prefills only the divergence
+    # suffix; a decode write into a still-shared page copies-on-write
+    # exactly that page. Backends opt in via their prefix_sharing flag.
+    prefix_sharing: bool = False
 
     def __post_init__(self):
         assert self.prefill_bucket % self.page_size == 0, \
@@ -103,6 +110,11 @@ class EngineReport:
     preemptions: int = 0
     completed: list[Request] = dataclasses.field(default_factory=list)
     peak_live_pages: int = 0
+    # prefix sharing
+    shared_page_hits: int = 0          # pages admitted by reference
+    cow_copies: int = 0                # divergence-write page copies
+    prefill_tokens_saved: int = 0      # bucketed tokens NOT recomputed
+    peak_demand_pages: int = 0         # live minus index-only cache
     page_bytes: int = 0                # 0 -> non-paged backend
     slot_state_bytes: int = 0          # per-slot non-paged state (hybrid)
     cache_bytes_alloc: int = 0         # full backing allocation
@@ -152,6 +164,19 @@ class EngineReport:
                     + self.slot_state_bytes)
         return self.cache_bytes_alloc
 
+    @property
+    def kv_demand_bytes_peak(self) -> int:
+        """Peak cache bytes some request actually references (shared
+        pages counted once, index-only warm cache excluded — those
+        pages are reclaimable on demand, like an OS page cache). This
+        is the fair peak-KV comparison against a run without sharing,
+        where demand == live and the metric degrades to kv_bytes_peak.
+        """
+        if self.page_bytes:
+            return (self.peak_demand_pages * self.page_bytes
+                    + self.slot_state_bytes)
+        return self.cache_bytes_alloc
+
     def latency_percentiles(self, qs=(50, 95)) -> dict[str, float]:
         lats = [r.latency_steps for r in self.completed] or [0]
         return {f"p{q}": float(np.percentile(lats, q)) for q in qs}
@@ -167,6 +192,10 @@ class EngineReport:
             "decode_tokens_per_step": round(self.decode_tokens_per_step, 3),
             "wasted_slot_fraction": round(self.wasted_slot_fraction, 3),
             "kv_bytes_peak": self.kv_bytes_peak,
+            "kv_demand_bytes_peak": self.kv_demand_bytes_peak,
+            "shared_page_hits": self.shared_page_hits,
+            "cow_copies": self.cow_copies,
+            "prefill_tokens_saved": self.prefill_tokens_saved,
             "preemptions": self.preemptions,
             "prefill_calls": self.prefill_calls,
             **{k: round(v, 1)
@@ -228,6 +257,7 @@ class _PagedBackendBase:
     paged = True
     slot_state_bytes = 0               # no per-slot non-paged state
     routed = False                     # no MoE drop population to replay
+    prefix_sharing = False             # opt-in per backend (dense only)
 
     @classmethod
     def supports(cls, cfg) -> bool:
@@ -269,9 +299,21 @@ class PagedTransformerBackend(_LinearPagedMixin):
         self.page_bytes = ecfg.pager.page_bytes(cfg)
         self.state = T.init_paged_decode_state(cfg, ecfg.num_pages,
                                                ecfg.page_size)
+        # vlm stays out: M-RoPE position triples and per-request patch
+        # embeds make "same token ids" insufficient for "same KV"
+        self.prefix_sharing = cfg.family == "dense"
 
         def prefill_write(params, state, batch, lengths, page_ids):
             last, (k, v) = T.paged_prefill(cfg, params, batch, lengths)
+            state = T.write_prefill_pages(cfg, state, (k[:, 0], v[:, 0]),
+                                          page_ids)
+            return last[0], state
+
+        def prefill_shared_write(params, state, batch, lengths, page_ids,
+                                 prefix_pages, prefix_len):
+            last, (k, v) = T.paged_prefill_shared(
+                cfg, params, state, batch, lengths, prefix_pages,
+                prefix_len)
             state = T.write_prefill_pages(cfg, state, (k[:, 0], v[:, 0]),
                                           page_ids)
             return last[0], state
@@ -281,6 +323,9 @@ class PagedTransformerBackend(_LinearPagedMixin):
                                        page_table, lengths, active)
 
         self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
+        self._prefill_shared = jax.jit(prefill_shared_write,
+                                       donate_argnums=(1,))
+        self._copy_page = jax.jit(T.copy_kv_page, donate_argnums=(0,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
 
     def prefill(self, ctx: np.ndarray, extras, slot: int,
@@ -296,6 +341,32 @@ class PagedTransformerBackend(_LinearPagedMixin):
             jnp.asarray([len(ctx)], jnp.int32), jnp.asarray(pids))
         return np.asarray(logits)
 
+    def prefill_shared(self, ctx: np.ndarray, extras, slot: int,
+                       page_ids: list[int], prefix_pages: list[int],
+                       prefix_tokens: int) -> np.ndarray:
+        """Prefill only the suffix past ``prefix_tokens`` (a page
+        multiple) whose KV already sits in ``prefix_pages``; scatter the
+        suffix KV into ``page_ids`` and return last-live-token logits.
+        The prefix-page operand is padded to the table width, so the jit
+        cache stays keyed on the suffix bucket alone."""
+        suffix = ctx[prefix_tokens:]
+        toks, pids = _bucket_prompt(suffix, self.ecfg, page_ids)
+        pref = np.full((1, self.ecfg.max_pages_per_seq), TRASH_PAGE,
+                       np.int32)
+        pref[0, :len(prefix_pages)] = prefix_pages
+        logits, self.state = self._prefill_shared(
+            self.params, self.state, {"tokens": jnp.asarray(toks)},
+            jnp.asarray([len(suffix)], jnp.int32), jnp.asarray(pids),
+            jnp.asarray(pref), jnp.asarray([prefix_tokens], jnp.int32))
+        return np.asarray(logits)
+
+    def copy_page(self, src: int, dst: int) -> None:
+        """Copy-on-write: duplicate page ``src`` into ``dst`` before a
+        shared page takes a divergence write."""
+        self.state = self._copy_page(self.state,
+                                     jnp.asarray(src, jnp.int32),
+                                     jnp.asarray(dst, jnp.int32))
+
 
 class RecurrentBackend:
     """ssm family (rwkv6): constant-size per-slot state, no paging.
@@ -310,6 +381,7 @@ class RecurrentBackend:
     page_bytes = 0
     slot_state_bytes = 0
     routed = False
+    prefix_sharing = False
 
     @classmethod
     def supports(cls, cfg) -> bool:
@@ -571,6 +643,56 @@ def resolve_backend(cfg):
     return cls
 
 
+# --- prefix sharing -------------------------------------------------------------
+
+
+class _PrefixSharing:
+    """Per-tenant prefix-sharing driver: the radix index plus the
+    admission plan (which leading pages to map by reference instead of
+    recomputing). One instance per eligible paged tenant — page ids are
+    tenant-local, and token-id equality only implies KV equality within
+    one model."""
+
+    def __init__(self, pgr: PagerConfig):
+        self.pgr = pgr
+        self.index = PrefixIndex(pgr.page_size)
+
+    def plan(self, req: Request, ctx) -> tuple[list[int], int]:
+        """-> (pages, tokens): the leading ``tokens`` of ``ctx`` are
+        already resident in ``pages`` and need no prefill.
+
+        A FRESH request always recomputes the page holding its last
+        prompt token — the prefill must produce that token's logits to
+        sample from — so coverage caps at the last page boundary strictly
+        below len(ctx) (and the suffix stays page-aligned). A
+        RE-ADMITTED request needs no logits (its next decode input is
+        generated[-1]), so full coverage is admissible, including a
+        partial-tail match against a longer cached continuation; a
+        later decode write into that shared tail page copies-on-write
+        first."""
+        P = self.pgr.page_size
+        tokens = [int(t) for t in ctx]
+        pages, covered = self.index.match(
+            tokens, allow_tail=bool(req.generated))
+        if not req.generated:
+            n = min(len(pages), (len(tokens) - 1) // P)
+            pages, covered = pages[:n], n * P
+        return pages, covered
+
+    def record(self, alloc, ctx, lengths: int, row) -> int:
+        """Index the full pages of a request's written context (its
+        page-table row) so later prompts can map them. Called after
+        prefill and again at preempt/finish — pages completed during
+        decode become matchable, and the index's NEUTRAL_OWNER refs
+        keep them warm after the request's own refs drop."""
+        n_full = int(lengths) // self.pgr.page_size
+        if n_full <= 0:
+            return 0
+        toks = [int(t) for t in ctx[:n_full * self.pgr.page_size]]
+        return self.index.insert(alloc, toks,
+                                 [int(p) for p in row[:n_full]])
+
+
 # --- engine --------------------------------------------------------------------
 
 
@@ -599,6 +721,9 @@ class Engine:
         alloc = arena.allocator("default") if paged else None
         if paged:
             arena.register_page_bytes("default", self.backend.page_bytes)
+        sharer = _PrefixSharing(pgr) if (
+            paged and e.prefix_sharing
+            and getattr(self.backend, "prefix_sharing", False)) else None
 
         slots: list[Request | None] = [None] * B
         page_table = np.zeros((B, M), np.int32)
@@ -616,6 +741,12 @@ class Engine:
 
         def clear_slot(s: int) -> None:
             req = slots[s]
+            if sharer is not None:
+                # index the pages this request completed (incl. during
+                # decode) BEFORE dropping its refs: the neutral refs
+                # keep the prefix warm for later prompts / re-admission
+                sharer.record(alloc, req.context_tokens, lengths[s],
+                              page_table[s])
             slots[s] = None
             page_table[s, :] = TRASH_PAGE
             lengths[s] = 0
@@ -659,30 +790,63 @@ class Engine:
                             req.done_step = step
                             rep.completed.append(req)
                             continue
-                        if not alloc.can_alloc(len(rows)):
+                        sh_pages, sh_tokens = (
+                            sharer.plan(req, ctx) if sharer is not None
+                            else ([], 0))
+                        need = len(rows) - len(sh_pages)
+                        if not alloc.can_alloc(need) and sharer is not None:
+                            # index-only pages are cache: reclaim them
+                            # before making the request wait
+                            sharer.index.evict_lru(
+                                alloc, need - alloc.free_count,
+                                protect=set(sh_pages))
+                        if not alloc.can_alloc(need):
                             admitting = False   # FCFS: wait for free pages
                             break
                         sched.pop_ready()
-                        pages = alloc.alloc(req.rid, len(rows))
+                        if sh_pages:
+                            alloc.share(req.rid, sh_pages)
+                            req.shared_pages += len(sh_pages)
+                            rep.shared_page_hits += len(sh_pages)
+                        pages = alloc.alloc(req.rid, need)
                         page_table[s, :] = TRASH_PAGE
-                        page_table[s, rows] = pages
-                        logits = _routed_prefill(self.backend, req, ctx,
-                                                 s, pages)
+                        page_table[s, rows] = sh_pages + pages
+                        if sh_tokens >= len(ctx):
+                            logits = None       # fully cached re-admission
+                        elif sh_tokens:
+                            logits = self.backend.prefill_shared(
+                                ctx, req.extras, s, pages, sh_pages,
+                                sh_tokens)
+                        else:
+                            logits = _routed_prefill(self.backend, req,
+                                                     ctx, s, pages)
+                        full = (-(-len(ctx) // e.prefill_bucket)
+                                * e.prefill_bucket)
+                        computed = 0 if sh_tokens >= len(ctx) else (
+                            -(-(len(ctx) - sh_tokens) // e.prefill_bucket)
+                            * e.prefill_bucket)
+                        rep.prefill_tokens += computed
+                        rep.prefill_tokens_saved += full - computed
+                        if computed:
+                            rep.prefill_calls += 1
+                            req.prefills += 1
+                        if sharer is not None:
+                            sharer.record(alloc, ctx, len(ctx),
+                                          page_table[s])
                     else:
                         sched.pop_ready()
                         logits = _routed_prefill(self.backend, req, ctx,
                                                  s, None)
-                    rep.prefill_calls += 1
-                    rep.prefill_tokens += (
-                        -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
-                        if paged else len(ctx))
-                    req.prefills += 1
+                        rep.prefill_calls += 1
+                        rep.prefill_tokens += len(ctx)
+                        req.prefills += 1
                     req.admitted_step = step
                     slots[s] = req
                     lengths[s] = len(ctx)
                     if req.generated:   # re-admission after preemption
                         pending[s] = req.generated[-1]
                     else:
+                        assert logits is not None
                         tok = self._sample(logits)
                         req.generated.append(tok)
                         pending[s] = tok
@@ -691,14 +855,53 @@ class Engine:
 
             active = [s for s in range(B) if slots[s] is not None]
 
-            # -- page growth / preemption --------------------------------
+            # -- page growth / CoW / preemption --------------------------
             if paged and active:
                 R = self.backend.ring_rows
+
+                def claim_one(s: int) -> bool:
+                    """Free one page for slot ``s``: index cache first,
+                    then victim preemption (whose pages may land in the
+                    index — evictable next iteration, so the loop still
+                    strictly shrinks live state). False if ``s`` itself
+                    was preempted."""
+                    while not alloc.can_alloc(1):
+                        if sharer is not None \
+                                and sharer.index.evict_lru(alloc, 1):
+                            continue
+                        victim = Scheduler.pick_victim(
+                            [(v, slots[v]) for v in active
+                             if slots[v] is not None], exclude=s)
+                        if victim is None or victim[0] == s:
+                            preempt(s)
+                            active.remove(s)
+                            return False
+                        preempt(victim[0])
+                        active.remove(victim[0])
+                    return True
+
                 for s in list(active):
                     if slots[s] is None:
                         continue
-                    need_page = lengths[s] % page == 0
-                    if not need_page:
+                    if lengths[s] % page != 0:
+                        # mid-page: the next decode appends into the
+                        # current tail page — if that page is still
+                        # shared (re-admission mapped a cached tail),
+                        # copy-on-write exactly that page first
+                        if sharer is None:
+                            continue
+                        row_i = lengths[s] // page
+                        old = int(page_table[s, row_i])
+                        if alloc.refcount(old) < 2:
+                            continue
+                        if not claim_one(s):
+                            continue
+                        new = alloc.alloc(slots[s].rid, 1)
+                        self.backend.copy_page(old, new[0])
+                        alloc.free_page(slots[s].rid, old)
+                        page_table[s, row_i] = new[0]
+                        slots[s].cow_copies += 1
+                        rep.cow_copies += 1
                         continue
                     pi = lengths[s] // page
                     if R is None and pi >= M:   # table row full: stop
@@ -708,17 +911,7 @@ class Engine:
                         continue
                     row = _growth_row(self.backend, alloc, page_table, s,
                                       pi, slots[s].rid)
-                    while not alloc.can_alloc(1):
-                        victim = Scheduler.pick_victim(
-                            [(v, slots[v]) for v in active
-                             if slots[v] is not None], exclude=s)
-                        if victim is None or victim[0] == s:
-                            preempt(s)
-                            active.remove(s)
-                            break
-                        preempt(victim[0])
-                        active.remove(victim[0])
-                    if slots[s] is None:
+                    if not claim_one(s):
                         continue
                     new = alloc.alloc(slots[s].rid, 1)
                     page_table[s, row] = new[0]
@@ -745,6 +938,8 @@ class Engine:
                 if paged:
                     rep.peak_live_pages = max(rep.peak_live_pages,
                                               alloc.live_count)
+                    rep.peak_demand_pages = max(rep.peak_demand_pages,
+                                                alloc.demand_count)
             elif not sched.exhausted:
                 nxt = sched.next_arrival()
                 if nxt is not None and nxt > step:
@@ -758,6 +953,8 @@ class Engine:
                 raise RuntimeError("engine exceeded max_steps")
 
         if paged:
+            if sharer is not None:      # drop the index's neutral refs
+                sharer.index.release_all(alloc)
             arena.check()
             assert alloc.live_count == 0, "pages leaked past completion"
         rep.preemptions = sched.preemptions
@@ -859,6 +1056,7 @@ class PooledReport(EngineReport):
     pages_moved: int = 0               # leases moved between tenants
     aging_blocks: int = 0              # admission scans blocked by aging
     peak_live_page_bytes: int = 0      # tenants' page sizes differ
+    peak_demand_page_bytes: int = 0    # live minus index-only, in bytes
     model_tokens: dict = dataclasses.field(default_factory=dict)
     stall_steps_by_model: dict = dataclasses.field(default_factory=dict)
 
@@ -869,6 +1067,14 @@ class PooledReport(EngineReport):
         pages * max(page_bytes) would materially overstate the peak)."""
         if self.page_bytes:
             return self.peak_live_page_bytes + self.slot_state_bytes
+        return self.cache_bytes_alloc
+
+    @property
+    def kv_demand_bytes_peak(self) -> int:
+        """Peak referenced-by-some-request cache bytes per tenant page
+        size (shared pages once, index-only cache excluded)."""
+        if self.page_bytes:
+            return self.peak_demand_page_bytes + self.slot_state_bytes
         return self.cache_bytes_alloc
 
     @property
@@ -999,6 +1205,12 @@ class PooledEngine:
         # run starts from the initial demand-proportional partition)
         self.arena.reset_runtime()
         self._allocs = {m: self.arena.allocator(m) for m in self.page_split}
+        # one prefix index per eligible tenant: page ids are tenant-local
+        # and token-id equality only implies KV equality within a model
+        self._sharers = {
+            m: _PrefixSharing(self._pgr[m]) for m in self.page_split
+            if e.prefix_sharing
+            and getattr(self.backends[m], "prefix_sharing", False)}
         pool.reset_runtime()
 
         B = e.num_slots
@@ -1050,6 +1262,14 @@ class PooledEngine:
         """Routing load signal: occupied slots + queued requests."""
         return self.occupied_slots() + self.backlog()
 
+    def oldest_queued_age(self) -> int:
+        """Steps the longest-waiting READY request has been queued.
+        Load alone hides a stuck head (two replicas at equal load, one
+        with a request aging behind a page-starved tenant), so the
+        fleet router folds this in as a tiebreak."""
+        arr = self._sched.oldest_ready_arrival()
+        return max(0, self.step - arr) if arr is not None else 0
+
     def drain(self) -> list[Request]:
         """Failover: preempt every in-flight request and pull the whole
         queue out, returning ALL unfinished requests for re-admission on
@@ -1064,6 +1284,12 @@ class PooledEngine:
 
     def _clear_slot(self, s: int) -> None:
         req = self._slots[s]
+        sharer = self._sharers.get(req.model_id)
+        if sharer is not None:
+            # index the completed pages before the refs drop: the
+            # neutral refs keep the prefix warm for later prompts
+            sharer.record(self._allocs[req.model_id], req.context_tokens,
+                          self._lengths[s], self._page_table[s])
         self._slots[s] = None
         self._page_table[s, :] = TRASH_PAGE
         self._lengths[s] = 0
@@ -1114,15 +1340,25 @@ class PooledEngine:
                     self._reject(sched.pop_ready(req))
                     break           # queues changed: rescan heads
                 rows = backend.admission_rows(pgr_t, ctx_len)
-                if self._allocs[req.model_id].can_alloc(len(rows)):
+                a = self._allocs[req.model_id]
+                need = len(rows)
+                sharer = self._sharers.get(req.model_id)
+                if sharer is not None:
+                    sh_pages, _ = sharer.plan(req, req.context_tokens)
+                    need -= len(sh_pages)
+                    if not a.can_alloc(need):
+                        # reclaim index-only cache pages, protecting the
+                        # ones the plan is about to map by reference
+                        sharer.index.evict_lru(a, need - a.free_count,
+                                               protect=set(sh_pages))
+                if a.can_alloc(need):
                     self._blocked_since.pop(req.rid, None)
                     return req
                 # page-blocked head: feed the arena's load signal and
                 # age it — an over-aged head stops the scan so later
                 # arrivals cannot bypass it indefinitely
                 first = self._blocked_since.setdefault(req.rid, step)
-                self.arena.note_starved(req.model_id, step,
-                                        want=len(rows))
+                self.arena.note_starved(req.model_id, step, want=need)
                 if e.max_bypass_steps \
                         and step - first >= e.max_bypass_steps:
                     self._rep.aging_blocks += 1
@@ -1236,29 +1472,55 @@ class PooledEngine:
                 assert len(ctx) >= 1, "empty prompts are not admissible"
                 if backend.paged:
                     sched.pop_ready(req)
+                    a = allocs[req.model_id]
                     rows = backend.admission_rows(
                         self._pgr[req.model_id], len(ctx))
-                    pages = allocs[req.model_id].alloc(req.rid,
-                                                       len(rows))
+                    sharer = self._sharers.get(req.model_id)
+                    sh_pages, sh_tokens = (
+                        sharer.plan(req, ctx) if sharer is not None
+                        else ([], 0))
+                    if sh_pages:
+                        a.share(req.rid, sh_pages)
+                        req.shared_pages += len(sh_pages)
+                        rep.shared_page_hits += len(sh_pages)
+                    pages = a.alloc(req.rid, len(rows) - len(sh_pages))
                     page_table[s, :] = TRASH_PAGE
-                    page_table[s, rows] = pages
-                    logits = _routed_prefill(backend, req, ctx, s,
-                                             pages)
+                    page_table[s, rows] = sh_pages + pages
+                    if sh_tokens >= len(ctx):
+                        logits = None   # fully cached re-admission
+                    elif sh_tokens:
+                        logits = backend.prefill_shared(
+                            ctx, req.extras, s, pages, sh_pages,
+                            sh_tokens)
+                    else:
+                        logits = _routed_prefill(backend, req, ctx, s,
+                                                 pages)
+                    full = (-(-len(ctx) // e.prefill_bucket)
+                            * e.prefill_bucket)
+                    computed = 0 if sh_tokens >= len(ctx) else (
+                        -(-(len(ctx) - sh_tokens) // e.prefill_bucket)
+                        * e.prefill_bucket)
+                    rep.prefill_tokens += computed
+                    rep.prefill_tokens_saved += full - computed
+                    if computed:
+                        rep.prefill_calls += 1
+                        req.prefills += 1
+                    if sharer is not None:
+                        sharer.record(a, ctx, len(ctx), page_table[s])
                 else:
                     sched.pop_ready(req)
                     logits = _routed_prefill(backend, req, ctx, s,
                                              None)
-                rep.prefill_calls += 1
-                rep.prefill_tokens += (
-                    -(-len(ctx) // e.prefill_bucket) * e.prefill_bucket
-                    if backend.paged else len(ctx))
-                req.prefills += 1
+                    rep.prefill_calls += 1
+                    rep.prefill_tokens += len(ctx)
+                    req.prefills += 1
                 req.admitted_step = self.step
                 slots[s] = req
                 lengths[s] = len(ctx)
                 if req.generated:   # re-admission after preemption
                     pending[s] = req.generated[-1]
                 else:
+                    assert logits is not None
                     tok = self._sample(logits)
                     req.generated.append(tok)
                     pending[s] = tok
@@ -1287,7 +1549,57 @@ class PooledEngine:
                     # every blocked step and orphan the previous
                     # page into the same table row
                     continue
+                a = allocs[mid]
+                sharer = self._sharers.get(mid)
+
+                def claim_one(s: int, mid: str = mid, a=a,
+                              sharer=sharer) -> bool:
+                    """Free one page for slot ``s``: index cache first,
+                    then same-tenant victim preemption (a victim's
+                    pages may land in the index — evictable next
+                    iteration, so the loop still strictly shrinks live
+                    state). False if ``s`` itself was preempted."""
+                    if not a.can_alloc(1):
+                        # growth pressure is the other load signal the
+                        # arena repartitions on (preempt == starvation)
+                        self.arena.note_starved(mid, self.step)
+                    while not a.can_alloc(1):
+                        if sharer is not None \
+                                and sharer.index.evict_lru(a, 1):
+                            continue
+                        # only same-tenant slots are useful victims —
+                        # the page-id space is partitioned, so a
+                        # neighbour's pages can never back this growth
+                        tenant_active = [
+                            (v, slots[v]) for v in range(B)
+                            if slots[v] is not None
+                            and slots[v].model_id == mid]
+                        victim = Scheduler.pick_victim(tenant_active,
+                                                       exclude=s)
+                        if victim is None or victim[0] == s:
+                            self._preempt(s)
+                            return False
+                        self._preempt(victim[0])
+                    return True
+
                 if lengths[s] % page != 0:
+                    # mid-page: the next decode appends into the tail
+                    # page — if it is still shared (re-admission mapped
+                    # a cached tail), copy-on-write exactly that page
+                    if sharer is None:
+                        continue
+                    row_i = lengths[s] // page
+                    old = int(page_table[s, row_i])
+                    if a.refcount(old) < 2:
+                        continue
+                    if not claim_one(s):
+                        continue
+                    new = a.alloc(slots[s].rid, 1)
+                    self.backends[mid].copy_page(old, new[0])
+                    a.free_page(slots[s].rid, old)
+                    page_table[s, row_i] = new[0]
+                    slots[s].cow_copies += 1
+                    rep.cow_copies += 1
                     continue
                 pi = lengths[s] // page
                 R = self.backends[mid].ring_rows
@@ -1295,28 +1607,9 @@ class PooledEngine:
                     slots[s].truncated = True
                     self._finish(s)
                     continue
-                a = allocs[mid]
                 row = _growth_row(self.backends[mid], a, page_table,
                                   s, pi, slots[s].rid)
-                if not a.can_alloc(1):
-                    # growth pressure is the other load signal the
-                    # arena repartitions on (preemption == starvation)
-                    self.arena.note_starved(mid, self.step)
-                while not a.can_alloc(1):
-                    # only same-tenant slots are useful victims — the
-                    # page-id space is partitioned, so a neighbour's
-                    # pages can never back this tenant's growth
-                    tenant_active = [
-                        (v, slots[v]) for v in range(B)
-                        if slots[v] is not None
-                        and slots[v].model_id == mid]
-                    victim = Scheduler.pick_victim(tenant_active,
-                                                   exclude=s)
-                    if victim is None or victim[0] == s:
-                        self._preempt(s)
-                        break
-                    self._preempt(victim[0])
-                if slots[s] is None:
+                if not claim_one(s):
                     continue
                 new = a.alloc(slots[s].rid, 1)
                 page_table[s, row] = new[0]
@@ -1368,6 +1661,13 @@ class PooledEngine:
                 rep.peak_live_page_bytes,
                 sum(a.live_count * self.backends[m].page_bytes
                     for m, a in allocs.items()))
+            rep.peak_demand_pages = max(
+                rep.peak_demand_pages,
+                sum(a.demand_count for a in allocs.values()))
+            rep.peak_demand_page_bytes = max(
+                rep.peak_demand_page_bytes,
+                sum(a.demand_count * self.backends[m].page_bytes
+                    for m, a in allocs.items()))
         elif not sched.exhausted:
             nxt = sched.next_arrival()
             if nxt is not None and nxt > self.step \
@@ -1390,6 +1690,22 @@ class PooledEngine:
             pool.stream_tick(pool.pcfg.reload_bytes_per_step)
 
         # -- arena bookkeeping: watermarks + epoch repartition -------
+        # Shrink floor: an ADMITTED request was judged feasible against
+        # its tenant's lease at admission; repartitioning must never cut
+        # the lease below what the largest in-flight request still needs
+        # to finish, or admission feasibility silently stops implying
+        # completability (lease churn strands requests in preempt loops)
+        for m in self.page_split:
+            floor = 0
+            for s in range(B):
+                r = slots[s]
+                if r is None or r.model_id != m:
+                    continue
+                R = self.backends[m].ring_rows
+                demand = self._pgr[m].pages_for(
+                    len(r.prompt) + r.max_new_tokens - 1)
+                floor = max(floor, min(demand, R) if R else demand)
+            self.arena.set_demand_floor(m, floor)
         self.arena.sample()
         if self.arena.maybe_repartition(self.step) is not None:
             # epoch boundary: weight-region occupancy joins the KV
@@ -1405,6 +1721,8 @@ class PooledEngine:
 
     def finish_run(self) -> PooledReport:
         pool, rep = self.pool, self._rep
+        for m, sharer in self._sharers.items():
+            sharer.index.release_all(self._allocs[m])
         self.arena.check(slab_used=pool.slab_used,
                          pinned_bytes=pool.plan.pinned_bytes)
         for a in self._allocs.values():

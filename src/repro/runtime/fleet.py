@@ -343,7 +343,12 @@ class FleetEngine:
         for r in open_:
             if r.idx == prim and not r.flagged:
                 return r
+        # load counts heads, not how long they have waited: two replicas
+        # at equal load can hide one whose head is stuck behind a page-
+        # starved tenant, and routing by load alone keeps feeding it.
+        # Queued age breaks the tie toward the replica that is draining.
         return min(open_, key=lambda r: (r.flagged, r.engine.load(),
+                                         r.engine.oldest_queued_age(),
                                          r.idx))
 
     # -- chaos --------------------------------------------------------------

@@ -12,6 +12,15 @@ allocator walking the D_m capacity axis.
 Page 0 is reserved as the *trash page*: dead page-table slots point at it
 so scatter/gather indices are always valid, and whatever lands there is
 never read back (attention lengths gate it out).
+
+Pages are refcounted so one physical page can back the same prompt
+prefix across many requests (cross-request prefix sharing): ``alloc``
+hands out exclusive pages at refcount 1, ``share`` adds an owner to an
+already-live page, and every free is a *drop-ref* — the row returns to
+the free list only when its last reference is gone. ``NEUTRAL_OWNER``
+is the pseudo-owner the prefix index uses to keep shared prefixes warm
+after every sharing request has finished; index-only pages are
+reclaimable cache, so ``demand_count`` excludes them.
 """
 
 from __future__ import annotations
@@ -19,6 +28,10 @@ from __future__ import annotations
 import dataclasses
 
 TRASH_PAGE = 0
+
+# Pseudo-owner for pages pinned by the prefix index (tenant-neutral
+# region: not any request's demand, evictable on pressure).
+NEUTRAL_OWNER = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,9 +85,18 @@ class PageAllocator:
     headroom (``set_limit`` refuses to cut below the live count), so a
     live page is never remapped.
 
-    Invariants (checked by ``check``): the free list and every owner's
-    page list partition ``{1, .., num_pages-1}``; no page is owned twice;
-    the trash page is never handed out; ``live_count <= limit``.
+    Pages are refcounted: ``alloc`` creates a page at refcount 1,
+    ``share`` registers additional owners on live pages, and
+    ``free_page`` / ``free_owner`` drop references — a row rejoins the
+    free list only at refcount zero. Freeing a page the owner does not
+    hold (double-free, or a page another owner still references under a
+    stale handle) raises instead of corrupting the free list.
+
+    Invariants (checked by ``check``): the free list and the distinct
+    referenced pages partition ``{1, .., num_pages-1}``; each page's
+    refcount equals the number of owner lists holding it; no owner holds
+    the same page twice; the trash page is never handed out;
+    ``live_count <= limit``.
     """
 
     def __init__(self, num_pages: int, limit: int | None = None):
@@ -84,6 +106,7 @@ class PageAllocator:
         # LIFO free list: recently freed pages are reused first (warm).
         self._free: list[int] = list(range(num_pages - 1, 0, -1))
         self._owned: dict[int, list[int]] = {}
+        self._refs: dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
@@ -93,6 +116,28 @@ class PageAllocator:
     @property
     def live_count(self) -> int:
         return (self.num_pages - 1) - len(self._free)
+
+    @property
+    def shared_count(self) -> int:
+        """Live pages referenced by two or more owners."""
+        return sum(1 for r in self._refs.values() if r >= 2)
+
+    @property
+    def neutral_count(self) -> int:
+        """Pages held ONLY by the prefix index (refcount 1 under
+        NEUTRAL_OWNER): warm cache, reclaimable on demand."""
+        return sum(1 for p in self._owned.get(NEUTRAL_OWNER, ())
+                   if self._refs[p] == 1)
+
+    @property
+    def demand_count(self) -> int:
+        """Live pages some request actually needs (index-only cache
+        pages excluded) — the fair basis for peak-KV-byte comparisons
+        against a runtime with no prefix index."""
+        return self.live_count - self.neutral_count
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def set_limit(self, limit: int) -> None:
         """Resize the usable lease. Growing is bounded by the physical
@@ -114,33 +159,72 @@ class PageAllocator:
         can't cover the request — the caller preempts or waits."""
         if n < 0:
             raise ValueError("negative page count")
+        if n == 0:
+            return []                   # no empty owner-list entries
         if self.free_count < n:
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._owned.setdefault(owner, []).extend(pages)
+        for p in pages:
+            self._refs[p] = 1
         return pages
 
+    def share(self, owner: int, pages: list[int]) -> None:
+        """Add ``owner`` as a reference holder on already-live pages
+        (prefix sharing: a new request maps its matched prefix onto
+        pages some other owner — or the index — already populated).
+        Consumes no free rows, so it never fails on capacity."""
+        if len(set(pages)) != len(pages):
+            raise ValueError("duplicate pages in share request")
+        held = self._owned.get(owner, ())
+        for p in pages:
+            if p not in self._refs:
+                raise ValueError(f"cannot share non-live page {p}")
+            if p in held:
+                raise ValueError(f"owner {owner} already holds page {p}")
+        lst = self._owned.setdefault(owner, [])
+        for p in pages:
+            self._refs[p] += 1
+            lst.append(p)
+
     def free_page(self, owner: int, page: int) -> None:
-        """Return ONE of ``owner``'s pages to the free list — the window
-        ring's recycle path (the page that slid out of the attention
-        window is released while the request keeps running)."""
+        """Drop ``owner``'s reference on ONE page — the window ring's
+        recycle path and the CoW unshare path. The row returns to the
+        free list only when the last reference is gone. Raises if the
+        owner does not hold the page (double-free guard)."""
         pages = self._owned.get(owner)
-        assert pages is not None and page in pages, \
-            f"owner {owner} does not hold page {page}"
+        if pages is None or page not in pages:
+            raise ValueError(
+                f"owner {owner} does not hold page {page} (double-free?)")
         pages.remove(page)
         if not pages:
             del self._owned[owner]
-        self._free.append(page)
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            del self._refs[page]
+            self._free.append(page)
 
     def free_owner(self, owner: int) -> int:
-        """Return all of ``owner``'s pages to the free list (slot recycle /
-        preemption). Returns the number of pages released."""
-        pages = self._owned.pop(owner, [])
-        self._free.extend(pages)
-        return len(pages)
+        """Drop all of ``owner``'s references (slot recycle / preemption).
+        Rows still referenced by other owners stay live. Returns the
+        number of rows actually returned to the free list. Raises on an
+        owner with no pages (double-free guard)."""
+        pages = self._owned.pop(owner, None)
+        if pages is None:
+            raise ValueError(
+                f"owner {owner} holds no pages (double-free?)")
+        released = 0
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+                released += 1
+        return released
 
     def check(self) -> None:
-        """Assert free-list conservation and ownership disjointness."""
+        """Assert free-list conservation, per-owner disjointness, and
+        refcount agreement with the owner lists."""
         assert self.live_count <= self.limit, \
             f"live {self.live_count} exceeds limit {self.limit}"
         seen: set[int] = set()
@@ -148,11 +232,20 @@ class PageAllocator:
             assert 0 < p < self.num_pages, f"free page {p} out of range"
             assert p not in seen, f"page {p} double-listed"
             seen.add(p)
+        holders: dict[int, int] = {}
         for owner, pages in self._owned.items():
+            assert pages, f"owner {owner} tracked with empty page list"
+            assert len(set(pages)) == len(pages), \
+                f"owner {owner} holds a page twice"
             for p in pages:
                 assert 0 < p < self.num_pages, \
                     f"owner {owner} holds out-of-range page {p}"
-                assert p not in seen, f"page {p} owned twice"
-                seen.add(p)
-        assert seen == set(range(1, self.num_pages)), \
-            "free list + owners do not partition the pool"
+                assert p not in seen, f"live page {p} also on free list"
+                holders[p] = holders.get(p, 0) + 1
+        assert holders.keys() == self._refs.keys(), \
+            "refcounted pages != pages held by owners"
+        for p, n in holders.items():
+            assert self._refs[p] == n, \
+                f"page {p} refcount {self._refs[p]} != {n} holders"
+        assert seen | holders.keys() == set(range(1, self.num_pages)), \
+            "free list + referenced pages do not partition the pool"

@@ -35,6 +35,8 @@ class Request:
     prefills: int = 0                  # 1 + number of preemption restarts
     truncated: bool = False            # hit the pager's max context
     route_trace: dict | None = None    # MoE first-prefill routing (replay)
+    shared_pages: int = 0              # pages admitted by reference
+    cow_copies: int = 0                # divergence-write page copies
 
     @property
     def context_tokens(self) -> np.ndarray:
@@ -73,6 +75,51 @@ def poisson_trace(n_requests: int, *, mean_interarrival: float,
         out.append(Request(
             rid=rid, prompt=prompt, max_new_tokens=glen, arrival=int(t),
             extras=extras_fn(rng) if extras_fn else None,
+            model_id=model_id))
+    return out
+
+
+def shared_prefix_trace(n_requests: int, *, overlap: float,
+                        prompt_len: int, mean_interarrival: float,
+                        gen_lens: tuple[int, ...], vocab_size: int,
+                        seed: int = 0, model_id: str = "default",
+                        n_groups: int = 1,
+                        resend_frac: float = 0.0) -> list[Request]:
+    """Poisson trace whose prompts share a common prefix — the serving
+    shape prefix caching exists for (one system prompt / few-shot header
+    across a burst of user turns).
+
+    Every prompt is exactly ``prompt_len`` tokens (one prefill jit
+    bucket): the leading ``round(overlap * prompt_len)`` tokens are one
+    of ``n_groups`` fixed prefixes (assigned round-robin so groups
+    interleave in arrival order) and the tail is per-request random.
+    ``overlap=0`` degenerates to fully independent prompts of the same
+    length — the no-sharing baseline with identical arithmetic.
+
+    ``resend_frac`` of the requests REUSE an earlier prompt verbatim
+    (a client re-sending the identical conversation). Under greedy
+    decoding such twins follow identical token paths, so a preempted
+    twin's re-admission can map a partially occupied page its sibling
+    completed — the trace shape that exercises copy-on-write.
+    """
+    assert 0.0 <= overlap <= 1.0
+    rng = np.random.default_rng(seed)
+    k = int(round(overlap * prompt_len))
+    prefixes = [rng.integers(0, vocab_size, size=k).astype(np.int32)
+                for _ in range(max(n_groups, 1))]
+    t = 0.0
+    out = []
+    for rid in range(n_requests):
+        t += rng.exponential(mean_interarrival)
+        if out and rng.random() < resend_frac:
+            prompt = out[int(rng.integers(len(out)))].prompt.copy()
+        else:
+            tail = rng.integers(0, vocab_size, size=prompt_len - k) \
+                .astype(np.int32)
+            prompt = np.concatenate([prefixes[rid % len(prefixes)], tail])
+        out.append(Request(
+            rid=rid, prompt=prompt,
+            max_new_tokens=int(rng.choice(gen_lens)), arrival=int(t),
             model_id=model_id))
     return out
 
@@ -290,6 +337,14 @@ class MultiQueueScheduler:
         """Earliest-arrival ready request among the allowed models."""
         heads = self.ready_heads(allowed)
         return heads[0] if heads else None
+
+    def oldest_ready_arrival(self) -> int | None:
+        """Earliest arrival step among ALL ready requests (regardless of
+        which models are servable right now) — the engine turns this
+        into a queued-age signal the fleet router ties on, so a replica
+        with a long-stuck head stops winning new traffic on load alone."""
+        heads = [q[0] for q in self._ready.values() if q]
+        return min((r.arrival for r in heads), default=None)
 
     def pop_ready(self, req: Request) -> Request:
         got = self._ready[req.model_id].popleft()

@@ -194,7 +194,9 @@ def test_arena_random_walk_invariants_hold():
                 else:
                     arena.note_starved(t, step, want=n)
             elif op == 1 and owners[t]:
-                alloc.free_owner(int(rng.integers(1, owners[t] + 1)))
+                o = int(rng.integers(1, owners[t] + 1))
+                if alloc.owned(o):      # double-free raises by design
+                    alloc.free_owner(o)
         arena.sample()
         before = {t: {o: sorted(arena.allocator(t).owned(o))
                       for o in range(1, owners[t] + 1)
@@ -225,3 +227,31 @@ def test_double_buffer_bytes_is_max_adjacent_pair():
     sched = [32, 144, 144, 32]
     assert double_buffer_bytes(sched) == 288
     assert double_buffer_bytes(sched) <= sum(sched)
+
+
+def test_arena_demand_floor_prevents_shrink_churn():
+    """Regression: an epoch shrink used to cut a tenant's lease down to
+    watermark + slack even when an already-admitted request still had
+    to grow past that — every later grow attempt then starved, preempt-
+    churning the request until a grow epoch won the pages back. The
+    engine now publishes the largest admitted request's full demand as
+    a floor the repartitioner may not shrink below."""
+    floor = 12
+    leases = {}
+    for floored in (False, True):
+        arena = _arena(epoch_steps=4)
+        a0 = arena.lease("a")
+        arena.allocator("a").alloc(1, 4)    # 4 pages touched so far...
+        arena.allocator("b").alloc(7, arena.lease("b"))
+        for step in range(1, 5):
+            if floored:                     # ...but demand is 12 pages
+                arena.set_demand_floor("a", floor)
+            arena.note_starved("b", step, want=16)
+            arena.sample()
+        assert arena.maybe_repartition(4), "no epoch repartition ran"
+        leases[floored] = arena.lease("a")
+        assert leases[floored] < a0         # b's starvation was funded
+        arena.check()
+    # on main, the shrink dove straight through the admitted demand
+    assert leases[False] < floor
+    assert leases[True] >= floor

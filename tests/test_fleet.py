@@ -144,3 +144,37 @@ def test_straggler_replica_detected_and_deprioritized(tiny_fleet_fixture):
         "4x straggler never tripped the health detector"
     clean = _run_fleet(tiny_fleet_fixture, None)
     assert rep.ticks > clean.ticks
+
+
+def test_route_ties_break_on_oldest_queued_age():
+    """Two unflagged replicas at equal load used to tie on (flagged,
+    load) and always route to the lower index — even when that
+    replica's queue head had been stuck for ages behind a page-starved
+    tenant. The router now folds each engine's oldest-queued age into
+    the key, steering new traffic to the replica that is draining."""
+    from types import SimpleNamespace as NS
+
+    from repro.runtime import Request
+    from repro.runtime.fleet import FleetConfig, FleetEngine
+
+    def replica(idx, load, age, flagged=False, live=True):
+        eng = NS(load=lambda: load, oldest_queued_age=lambda: age)
+        return NS(idx=idx, name=f"r{idx}", live=live, flagged=flagged,
+                  models=frozenset({"m"}), engine=eng)
+
+    fleet = FleetEngine.__new__(FleetEngine)
+    fleet.fcfg = FleetConfig(n_replicas=2, max_queue_per_replica=8)
+    fleet.primary = {}                      # no affinity fast-path
+    req = Request(rid=0, prompt=__import__("numpy").zeros(4, "int32"),
+                  max_new_tokens=4, model_id="m")
+
+    # equal load: the stuck replica 0 loses to the draining replica 1
+    fleet.replicas = [replica(0, load=3, age=40), replica(1, 3, 2)]
+    assert fleet._route(req).idx == 1
+    # load still dominates: a shorter queue beats a younger head
+    fleet.replicas = [replica(0, load=2, age=40), replica(1, 3, 0)]
+    assert fleet._route(req).idx == 0
+    # and a straggler flag outranks both
+    fleet.replicas = [replica(0, load=3, age=2, flagged=True),
+                      replica(1, 3, 40)]
+    assert fleet._route(req).idx == 1

@@ -1,0 +1,182 @@
+"""Property-based tests (hypothesis) for cross-request KV prefix
+sharing at the host level: the refcounted ``PageAllocator``, the radix
+``PrefixIndex``, and their interplay with the ``DeviceArena`` — no jax,
+no engine. The invariants:
+
+ * refcount conservation — every page's refcount equals its holder
+   count at every step, and free ∪ referenced partitions the pool;
+ * no live shared page is ever handed out again by ``alloc``;
+ * a divergence write copies exactly one page — after the CoW dance the
+   writer holds one fresh private page, every other holder's mapping is
+   untouched, and total live pages grow by exactly one;
+ * arena invariants (``check``) hold while an index pins NEUTRAL pages
+   across epoch repartitioning, and index pages never count as demand.
+
+The seeded hypothesis-free twins live in test_runtime.py so the
+properties are exercised even where hypothesis is not installed."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.runtime import (ArenaConfig, DeviceArena, NEUTRAL_OWNER,  # noqa: E402
+                           PageAllocator, PrefixIndex)
+
+OWNERS = tuple(range(1, 6))
+
+
+@st.composite
+def share_walks(draw):
+    return draw(st.lists(
+        st.tuples(st.integers(min_value=0, max_value=4),   # op kind
+                  st.integers(min_value=0, max_value=4),   # owner index
+                  st.integers(min_value=0, max_value=6)),  # operand
+        min_size=1, max_size=120))
+
+
+@settings(max_examples=60, deadline=None)
+@given(share_walks())
+def test_refcount_conservation_under_random_walk(walk):
+    a = PageAllocator(17, limit=12)
+    model: dict[int, set[int]] = {}     # page -> holders
+    held = {o: [] for o in OWNERS}
+    for kind, oi, n in walk:
+        o = OWNERS[oi % len(OWNERS)]
+        if kind == 0:                   # alloc fresh pages
+            want = 1 + n % 3
+            if a.can_alloc(want):
+                for p in a.alloc(o, want):
+                    # no live (referenced) page is ever reused
+                    assert p not in model
+                    model[p] = {o}
+                    held[o].append(p)
+        elif kind == 1:                 # share another owner's page
+            src = OWNERS[(oi + 1) % len(OWNERS)]
+            cand = [p for p in held[src] if o not in model[p]]
+            if cand:
+                p = cand[n % len(cand)]
+                a.share(o, [p])
+                model[p].add(o)
+                held[o].append(p)
+        elif kind == 2:                 # drop one reference
+            if held[o]:
+                p = held[o].pop(n % len(held[o]))
+                a.free_page(o, p)
+                model[p].discard(o)
+                if not model[p]:
+                    del model[p]
+        elif kind == 3:                 # drop the whole owner
+            if held[o]:
+                a.free_owner(o)
+                for p in held[o]:
+                    model[p].discard(o)
+                    if not model[p]:
+                        del model[p]
+                held[o] = []
+            else:                       # double-free raises by design
+                with pytest.raises(ValueError):
+                    a.free_owner(o)
+        elif kind == 4:                 # double free_page raises
+            if held[o]:
+                p = held[o].pop(n % len(held[o]))
+                a.free_page(o, p)
+                model[p].discard(o)
+                if not model[p]:
+                    del model[p]
+                with pytest.raises(ValueError):
+                    a.free_page(o, p)
+        a.check()
+        assert a.live_count == len(model)
+        assert a.shared_count == sum(len(h) >= 2 for h in model.values())
+        for p, holders in model.items():
+            assert a.refcount(p) == len(holders)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=2, max_value=5),
+       st.integers(min_value=0, max_value=4))
+def test_cow_copies_exactly_one_page(n_holders, row):
+    """A divergence write = alloc one private page + drop the shared
+    ref: live pages grow by exactly one, nobody else's mapping moves."""
+    a = PageAllocator(33, limit=32)
+    writer = 1
+    pages = a.alloc(writer, 5)
+    a.share(NEUTRAL_OWNER, pages)       # the index pins the row
+    for o in range(2, n_holders + 1):   # twins map the same row
+        a.share(o, pages)
+    target = pages[row]
+    before = {o: tuple(sorted(a.owned(o)))
+              for o in range(2, n_holders + 1)}
+    live0, ref0 = a.live_count, a.refcount(target)
+    assert ref0 == n_holders + 1
+    new = a.alloc(writer, 1)[0]         # CoW: copy, then drop the ref
+    a.free_page(writer, target)
+    assert a.live_count == live0 + 1
+    assert a.refcount(target) == ref0 - 1
+    assert a.refcount(new) == 1
+    for o in range(2, n_holders + 1):   # other holders untouched
+        assert tuple(sorted(a.owned(o))) == before[o]
+    assert sorted(a.owned(writer)) \
+        == sorted([p for p in pages if p != target] + [new])
+    a.check()
+
+
+@st.composite
+def admission_traces(draw):
+    # small alphabet so prompts collide on prefixes
+    return draw(st.lists(
+        st.tuples(st.lists(st.integers(min_value=0, max_value=2),
+                           min_size=4, max_size=16),
+                  st.integers(min_value=0, max_value=3)),  # finish pick
+        min_size=1, max_size=60))
+
+
+@settings(max_examples=40, deadline=None)
+@given(admission_traces())
+def test_index_arena_invariants_across_repartitioning(trace):
+    """An admission-shaped walk: match -> share -> alloc -> insert, LRU
+    eviction under pressure, finishes dropping owners, with the arena
+    repartitioning every few steps. Index pages are cache, not demand."""
+    P = 4
+    arena = DeviceArena(
+        ArenaConfig(kv_pages=24, repartition="epoch", epoch_steps=3),
+        {"m": 1.0, "n": 1.0})
+    arena.register_page_bytes("m", 64)
+    arena.register_page_bytes("n", 64)
+    alloc = arena.allocator("m")
+    idx = PrefixIndex(P)
+    live: dict[int, int] = {}
+    rid = 0
+    for step, (tokens, fin) in enumerate(trace, start=1):
+        shared, covered = idx.match(tokens)
+        need = len(tokens) // P - len(shared)
+        if not alloc.can_alloc(need):
+            idx.evict_lru(alloc, need - alloc.free_count,
+                          protect=set(shared))
+        if alloc.can_alloc(need):
+            rid += 1
+            if shared:
+                alloc.share(rid, shared)
+            row = shared + alloc.alloc(rid, need)
+            idx.insert(alloc, tokens, row)
+            live[rid] = None
+        else:
+            arena.note_starved("m", step, want=need)
+        if fin == 0 and live:           # a request finishes
+            done = next(iter(live))
+            del live[done]
+            alloc.free_owner(done)
+        arena.sample()
+        arena.maybe_repartition(step)
+        arena.check()
+        alloc.check()
+        # index-held pages are reclaimable cache, never demand
+        assert alloc.demand_count \
+            == alloc.live_count - alloc.neutral_count
+        assert alloc.neutral_count <= len(idx)
+    idx.release_all(alloc)
+    for r in live:
+        alloc.free_owner(r)
+    assert alloc.live_count == 0
+    arena.check()

@@ -9,8 +9,10 @@ import pytest
 
 from repro.configs import get_config
 from repro.models import get_model, transformer as T
-from repro.runtime import (Engine, EngineConfig, PageAllocator, PagerConfig,
-                           Request, Scheduler, poisson_trace, run_static)
+from repro.runtime import (Engine, EngineConfig, MultiQueueScheduler,
+                           NEUTRAL_OWNER, PageAllocator, PagerConfig,
+                           PrefixIndex, Request, Scheduler, poisson_trace,
+                           run_static, shared_prefix_trace)
 
 # --- kv_pager ------------------------------------------------------------------------
 
@@ -29,7 +31,8 @@ def test_allocator_conservation():
     assert a.free_count == 4
     a.check()
     assert a.free_owner(1) == 5
-    assert a.free_owner(1) == 0             # double-free is a no-op
+    with pytest.raises(ValueError):         # double-free raises
+        a.free_owner(1)
     assert a.free_count == 9
     p3 = a.alloc(3, 9)
     assert len(p3) == 9 and not set(p3) & set(p2)
@@ -312,3 +315,205 @@ def test_engine_rejects_unsupported_family():
     params = get_model(cfg).init_params(cfg, jax.random.PRNGKey(0))
     with pytest.raises(ValueError, match="no engine backend"):
         Engine(cfg, params, ECFG)
+
+
+# --- prefix sharing ------------------------------------------------------------------
+
+
+def test_allocator_share_guards_and_reclaimable_accounting():
+    a = PageAllocator(9, limit=8)
+    pages = a.alloc(1, 3)
+    a.share(2, pages[:2])
+    assert a.refcount(pages[0]) == 2
+    assert a.shared_count == 2
+    with pytest.raises(ValueError):
+        a.share(2, pages[:1])               # already held by 2
+    with pytest.raises(ValueError):
+        a.share(3, [pages[0], pages[0]])    # duplicate in one call
+    with pytest.raises(ValueError):
+        a.share(3, [0])                     # not a live page
+    a.free_owner(1)         # drops refs; the shared rows stay live
+    assert a.live_count == 2
+    with pytest.raises(ValueError):
+        a.free_page(1, pages[0])            # 1 no longer holds it
+    a.share(NEUTRAL_OWNER, pages[:2])
+    assert a.neutral_count == 0             # still demanded by owner 2
+    assert a.demand_count == 2
+    a.free_owner(2)
+    assert a.neutral_count == 2             # index-only: reclaimable
+    assert a.demand_count == 0
+    a.free_owner(NEUTRAL_OWNER)
+    assert a.live_count == 0
+    a.check()
+
+
+def test_allocator_cow_copies_exactly_one_page():
+    """The divergence-write dance: alloc one private page and drop the
+    shared ref — live pages grow by one, no other holder's row moves."""
+    a = PageAllocator(17, limit=16)
+    row = a.alloc(1, 4)
+    a.share(NEUTRAL_OWNER, row)             # index pins the row
+    a.share(2, row)                         # a twin maps it too
+    live0 = a.live_count
+    target = row[2]
+    new = a.alloc(1, 1)[0]                  # CoW by owner 1
+    a.free_page(1, target)
+    assert a.live_count == live0 + 1
+    assert a.refcount(target) == 2 and a.refcount(new) == 1
+    assert sorted(a.owned(2)) == sorted(row)
+    assert sorted(a.owned(NEUTRAL_OWNER)) == sorted(row)
+    assert sorted(a.owned(1)) \
+        == sorted([p for p in row if p != target] + [new])
+    a.check()
+
+
+def test_allocator_refcount_conservation_walk():
+    """Seeded random walk over alloc/share/free_page/free_owner against
+    a holder model (hypothesis-free twin of the property suite)."""
+    rng = np.random.default_rng(0)
+    a = PageAllocator(17, limit=12)
+    owners = tuple(range(1, 6))
+    model, held = {}, {o: [] for o in owners}
+    for _ in range(300):
+        kind = int(rng.integers(0, 4))
+        o = owners[int(rng.integers(len(owners)))]
+        if kind == 0:
+            want = int(rng.integers(1, 4))
+            if a.can_alloc(want):
+                for p in a.alloc(o, want):
+                    assert p not in model   # live pages never reused
+                    model[p] = {o}
+                    held[o].append(p)
+        elif kind == 1:
+            src = owners[int(rng.integers(len(owners)))]
+            cand = [p for p in held[src] if o not in model[p]]
+            if cand:
+                p = cand[int(rng.integers(len(cand)))]
+                a.share(o, [p])
+                model[p].add(o)
+                held[o].append(p)
+        elif kind == 2 and held[o]:
+            p = held[o].pop(int(rng.integers(len(held[o]))))
+            a.free_page(o, p)
+            model[p].discard(o)
+            if not model[p]:
+                del model[p]
+        elif kind == 3:
+            if held[o]:
+                a.free_owner(o)
+                for p in held[o]:
+                    model[p].discard(o)
+                    if not model[p]:
+                        del model[p]
+                held[o] = []
+            else:                           # double-free raises
+                with pytest.raises(ValueError):
+                    a.free_owner(o)
+        a.check()
+        assert a.live_count == len(model)
+        assert a.shared_count == sum(len(h) >= 2 for h in model.values())
+        for p, holders in model.items():
+            assert a.refcount(p) == len(holders)
+
+
+def test_prefix_index_match_insert_evict_lru():
+    a = PageAllocator(17, limit=12)
+    idx = PrefixIndex(4)
+    toks = [1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3]
+    row = a.alloc(7, 3)
+    assert idx.insert(a, toks, row) == 3
+    assert all(a.refcount(p) == 2 for p in row)
+    pages, covered = idx.match([1, 1, 1, 1, 2, 2, 2, 2, 9])
+    assert pages == row[:2] and covered == 8
+    # a partial last page that PREFIXES an indexed key tail-matches
+    pages, covered = idx.match([1, 1, 1, 1, 2, 2, 2, 2, 3, 3],
+                               allow_tail=True)
+    assert pages == row and covered == 10
+    # dedup: a twin row over the same tokens adds nothing
+    row_b = a.alloc(8, 3)
+    assert idx.insert(a, toks, row_b) == 0
+    a.free_owner(8)
+    # the populating request finishes; pages stay warm as cache
+    a.free_owner(7)
+    assert a.neutral_count == 3 and a.demand_count == 0
+    # eviction is LRU over refcount-1 leaves; dropping a leaf exposes
+    # its parent as the next candidate
+    assert idx.evict_lru(a, 2) == 2
+    pages, covered = idx.match(toks)
+    assert covered == 4                     # only the root chunk left
+    assert idx.release_all(a) == 1
+    assert a.live_count == 0
+    a.check()
+
+
+def test_multi_queue_scheduler_oldest_ready_arrival():
+    mk = lambda rid, arr, m: Request(
+        rid=rid, prompt=np.zeros(4, np.int32), max_new_tokens=4,
+        arrival=arr, model_id=m)
+    s = MultiQueueScheduler([mk(0, 2, "a"), mk(1, 5, "b"), mk(2, 9, "a")])
+    assert s.oldest_ready_arrival() is None
+    s.release_arrivals(6)
+    assert s.oldest_ready_arrival() == 2    # head of a's queue
+    head = s.peek_ready(["a"])
+    assert s.pop_ready(head).rid == 0
+    assert s.oldest_ready_arrival() == 5    # b's head is now oldest
+    s.release_arrivals(9)
+    assert s.oldest_ready_arrival() == 5
+
+
+def test_engine_prefix_sharing_equal_tokens_and_less_prefill():
+    """Loose page budget, matched concurrency: sharing must reproduce
+    the unshared run token-for-token while both prefill compute and
+    peak KV demand drop."""
+    cfg, params = _dense_setup()
+    trace = shared_prefix_trace(12, overlap=0.5, prompt_len=32,
+                                mean_interarrival=0.25, gen_lens=(8, 16),
+                                vocab_size=cfg.vocab_size, seed=5)
+    mk = lambda sharing: EngineConfig(
+        num_slots=8, page_size=8, num_pages=80, max_pages_per_seq=16,
+        prefill_bucket=8, prefix_sharing=sharing)
+    base = Engine(cfg, params, mk(False)).run(copy.deepcopy(trace))
+    shared = Engine(cfg, params, mk(True)).run(copy.deepcopy(trace))
+    assert {r.rid: tuple(r.generated) for r in base.completed} \
+        == {r.rid: tuple(r.generated) for r in shared.completed}
+    assert shared.shared_page_hits > 0
+    assert shared.prefill_tokens < base.prefill_tokens
+    assert shared.prefill_tokens_saved > 0
+    assert shared.kv_demand_bytes_peak < base.kv_demand_bytes_peak
+    # run() asserts the index released every neutral ref and the
+    # allocator drained; reaching here means no page leaked.
+
+
+def test_engine_prefix_sharing_cow_under_churn_is_greedy_consistent():
+    """Tight budget + verbatim re-sends: preempt/re-admit twins land a
+    divergence write in a still-shared tail page, so CoW must fire. At
+    bf16 the argmax gap between differently-bucketed compute paths is
+    often a single quantum, so strict equality against the unshared run
+    is ill-posed; instead teacher-force every generated sequence
+    through a clean full-context forward and require each chosen token
+    to sit within a few quanta of that position's argmax — KV
+    corruption would show up as O(1) deviations."""
+    import jax.numpy as jnp
+    cfg, params = _dense_setup()
+    trace = shared_prefix_trace(24, overlap=0.5, prompt_len=32,
+                                mean_interarrival=0.25, gen_lens=(24,),
+                                vocab_size=cfg.vocab_size, seed=11,
+                                resend_frac=0.5)
+    ecfg = EngineConfig(num_slots=8, page_size=8, num_pages=21,
+                        max_pages_per_seq=16, prefill_bucket=8,
+                        prefix_sharing=True)
+    rep = Engine(cfg, params, ecfg).run(copy.deepcopy(trace))
+    assert rep.cow_copies > 0, "the CoW path went unexercised"
+    assert rep.preemptions > 0 and rep.shared_page_hits > 0
+    worst = 0.0
+    for r in rep.completed:
+        seq = jnp.asarray([list(r.prompt) + list(r.generated)],
+                          dtype=jnp.int32)
+        logits = np.asarray(T.forward(cfg, params, {"tokens": seq})[0],
+                            np.float64)
+        start = len(r.prompt)
+        for i, tok in enumerate(r.generated):
+            v = logits[start + i - 1]
+            worst = max(worst, float(v.max() - v[tok]))
+    assert worst <= 0.0625, \
+        f"decode deviates {worst} from the greedy oracle"
