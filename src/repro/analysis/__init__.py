@@ -1,0 +1,17 @@
+"""Domain-aware static analysis for the repro codebase.
+
+Run ``python -m repro.analysis [paths]`` (see ``--help``). Rules:
+
+- RA1xx  jit/Pallas recompile hazards (rules_jit)
+- RA2xx  donation-after-use (rules_donation)
+- RA3xx  allocator ownership discipline (rules_ownership)
+- RA4xx  packing/residency plan verification (plan_checks)
+
+Suppress inline with ``# repro: noqa RA301 -- justification``.
+"""
+
+from .core import (Finding, Module, Project, Rule, all_rules, build_project,
+                   main, run_rules)
+
+__all__ = ["Finding", "Module", "Project", "Rule", "all_rules",
+           "build_project", "main", "run_rules"]

@@ -1,0 +1,313 @@
+"""Shared AST plumbing: parent links, scope-aware def lookup, and the
+jit-site model every jit/donation rule consumes.
+
+A *jit site* is one ``jax.jit`` / ``pl.pallas_call`` wrapping event —
+a direct call, a ``@jax.jit`` decorator, or a
+``@functools.partial(jax.jit, ...)`` decorator — resolved to the
+function object it wraps (when that is statically visible), its
+static/donated argument positions, and the name or attribute the
+wrapped callable is bound to (so call sites can be found later).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .core import Module
+
+JIT_NAMES = {("jax", "jit"), (None, "jit")}
+PALLAS_NAMES = {("pl", "pallas_call"), ("pallas", "pallas_call"),
+                (None, "pallas_call")}
+
+
+def build_parents(tree: ast.AST) -> dict[ast.AST, ast.AST]:
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+    return parents
+
+
+def enclosing(node: ast.AST, parents: dict[ast.AST, ast.AST],
+              kinds: tuple[type, ...]) -> ast.AST | None:
+    cur = parents.get(node)
+    while cur is not None:
+        if isinstance(cur, kinds):
+            return cur
+        cur = parents.get(cur)
+    return None
+
+
+def enclosing_statement(node: ast.AST,
+                        parents: dict[ast.AST, ast.AST]) -> ast.stmt | None:
+    cur: ast.AST | None = node
+    while cur is not None and not isinstance(cur, ast.stmt):
+        cur = parents.get(cur)
+    return cur
+
+
+def dotted(node: ast.AST) -> tuple[str | None, str] | None:
+    """``pl.pallas_call`` -> ("pl", "pallas_call"); ``jit`` -> (None, "jit");
+    deeper attribute chains use only the last two components."""
+    if isinstance(node, ast.Name):
+        return (None, node.id)
+    if isinstance(node, ast.Attribute):
+        base = node.value
+        if isinstance(base, ast.Name):
+            return (base.id, node.attr)
+        if isinstance(base, ast.Attribute):
+            return (base.attr, node.attr)
+        return (None, node.attr)
+    return None
+
+
+def is_jit_callable(node: ast.AST) -> bool:
+    return dotted(node) in JIT_NAMES
+
+
+def is_pallas_callable(node: ast.AST) -> bool:
+    return dotted(node) in PALLAS_NAMES
+
+
+def _const_int_tuple(node: ast.AST | None) -> tuple[int, ...] | None:
+    """Literal int or tuple/list of ints, else None (dynamic)."""
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, int) \
+            and not isinstance(node.value, bool):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, int):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+def _const_str_tuple(node: ast.AST | None) -> tuple[str, ...] | None:
+    if node is None:
+        return None
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for e in node.elts:
+            if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                out.append(e.value)
+            else:
+                return None
+        return tuple(out)
+    return None
+
+
+@dataclasses.dataclass
+class JitSite:
+    node: ast.AST                       # the wrapping Call / decorator
+    kind: str                           # "jit" | "pallas"
+    func_node: ast.AST | None           # FunctionDef / Lambda when visible
+    static_argnums: tuple[int, ...]
+    static_argnames: tuple[str, ...]
+    donate_argnums: tuple[int, ...]
+    bound_to: tuple[str, str] | None    # ("name"|"attr", identifier)
+    bound_method: bool = False          # wrapped via ``self.foo`` access
+
+    def _positional_names(self) -> list[str]:
+        fn = self.func_node
+        if fn is None:
+            return []
+        args = fn.args
+        names = [a.arg for a in args.posonlyargs + args.args]
+        # ``jax.jit(self.foo)`` wraps the BOUND method: jit never sees
+        # self, so argnums index from the next param. A decorator wraps
+        # the unbound function and argnum 0 is self itself.
+        if self.bound_method and names and names[0] in ("self", "cls"):
+            names = names[1:]
+        return names
+
+    def traced_params(self) -> list[str]:
+        """Positional params of the wrapped function that are traced
+        (non-static). Empty when the function is not visible."""
+        out = []
+        for i, n in enumerate(self._positional_names()):
+            if i in self.static_argnums or n in self.static_argnames:
+                continue
+            out.append(n)
+        return out
+
+    def static_params(self) -> set[str]:
+        names = self._positional_names()
+        out = set(self.static_argnames)
+        for i in self.static_argnums:
+            if 0 <= i < len(names):
+                out.add(names[i])
+        return out
+
+
+def _local_defs(scope: ast.AST) -> dict[str, ast.AST]:
+    """Function/lambda defs bound to names directly inside ``scope``
+    (no recursion into nested scopes)."""
+    out: dict[str, ast.AST] = {}
+    body = getattr(scope, "body", [])
+    if not isinstance(body, list):
+        return out
+    for stmt in body:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            out[stmt.name] = stmt
+        elif isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and isinstance(stmt.value, ast.Lambda):
+            out[stmt.targets[0].id] = stmt.value
+    return out
+
+
+def resolve_function(name_node: ast.AST, parents: dict[ast.AST, ast.AST]
+                     ) -> ast.AST | None:
+    """The FunctionDef/Lambda a reference in a jit wrap points at, if it
+    is a plain name defined in an enclosing scope (innermost first) or a
+    ``self.<method>`` of the enclosing class."""
+    if isinstance(name_node, ast.Lambda):
+        return name_node
+    if isinstance(name_node, ast.Attribute) \
+            and isinstance(name_node.value, ast.Name) \
+            and name_node.value.id in ("self", "cls"):
+        cls = enclosing(name_node, parents, (ast.ClassDef,))
+        if cls is not None:
+            for stmt in cls.body:
+                if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and stmt.name == name_node.attr:
+                    return stmt
+        return None
+    if not isinstance(name_node, ast.Name):
+        return None
+    scope: ast.AST | None = name_node
+    while scope is not None:
+        scope = enclosing(scope, parents,
+                          (ast.FunctionDef, ast.AsyncFunctionDef,
+                           ast.Module))
+        if scope is None:
+            return None
+        hit = _local_defs(scope).get(name_node.id)
+        if hit is not None:
+            return hit
+        if isinstance(scope, ast.Module):
+            return None
+    return None
+
+
+def _binding(call: ast.Call, parents: dict[ast.AST, ast.AST]
+             ) -> tuple[str, str] | None:
+    parent = parents.get(call)
+    if isinstance(parent, ast.Assign) and len(parent.targets) == 1:
+        t = parent.targets[0]
+        if isinstance(t, ast.Name):
+            return ("name", t.id)
+        if isinstance(t, ast.Attribute):
+            return ("attr", t.attr)
+    return None
+
+
+def collect_jit_sites(module: Module,
+                      parents: dict[ast.AST, ast.AST] | None = None
+                      ) -> list[JitSite]:
+    parents = parents if parents is not None else build_parents(module.tree)
+    sites: list[JitSite] = []
+
+    def kwargs_of(call: ast.Call) -> dict[str, ast.AST]:
+        return {k.arg: k.value for k in call.keywords if k.arg}
+
+    def make(node: ast.AST, kind: str, func_node: ast.AST | None,
+             kw: dict[str, ast.AST], bound: tuple[str, str] | None,
+             bound_method: bool = False) -> JitSite:
+        return JitSite(
+            node=node, kind=kind, func_node=func_node,
+            static_argnums=_const_int_tuple(kw.get("static_argnums")) or (),
+            static_argnames=_const_str_tuple(kw.get("static_argnames"))
+            or (),
+            donate_argnums=_const_int_tuple(kw.get("donate_argnums")) or (),
+            bound_to=bound, bound_method=bound_method)
+
+    def is_self_attr(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in ("self", "cls"))
+
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Call):
+            if is_jit_callable(node.func) and node.args:
+                fn = resolve_function(node.args[0], parents)
+                sites.append(make(node, "jit", fn, kwargs_of(node),
+                                  _binding(node, parents),
+                                  is_self_attr(node.args[0])))
+            elif is_pallas_callable(node.func) and node.args:
+                fn = resolve_function(node.args[0], parents)
+                sites.append(make(node, "pallas", fn, kwargs_of(node),
+                                  _binding(node, parents),
+                                  is_self_attr(node.args[0])))
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if is_jit_callable(dec):
+                    sites.append(make(dec, "jit", node, {},
+                                      ("name", node.name)))
+                elif isinstance(dec, ast.Call):
+                    d = dotted(dec.func)
+                    if d in {("functools", "partial"), (None, "partial")} \
+                            and dec.args and is_jit_callable(dec.args[0]):
+                        sites.append(make(dec, "jit", node, kwargs_of(dec),
+                                          ("name", node.name)))
+    return sites
+
+
+def call_sites_of(module: Module, bound: tuple[str, str],
+                  parents: dict[ast.AST, ast.AST] | None = None,
+                  scope: ast.AST | None = None) -> list[ast.Call]:
+    """Calls in ``module`` that invoke a callable bound as ``bound``
+    (plain name, or ``<anything>.<attr>`` for attribute bindings).
+
+    ``scope`` (with ``parents``) restricts attribute matches to calls in
+    the same class — two backends binding ``self._prefill`` to different
+    wrappers must not see each other's call sites."""
+    kind, ident = bound
+    out = []
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if kind == "name" and isinstance(f, ast.Name) and f.id == ident:
+            out.append(node)
+        elif kind == "attr" and isinstance(f, ast.Attribute) \
+                and f.attr == ident:
+            if scope is not None and parents is not None \
+                    and enclosing(node, parents, (ast.ClassDef,)) is not scope:
+                continue
+            out.append(node)
+    return out
+
+
+def symbol_of(node: ast.AST) -> str | None:
+    """A stable textual identity for a Name or dotted-attribute operand
+    (``state`` / ``self.state``); None for anything else."""
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = symbol_of(node.value)
+        return f"{base}.{node.attr}" if base else None
+    return None
+
+
+def assigned_symbols(target: ast.AST) -> set[str]:
+    """Symbols a statement target rebinds (tuple targets unpacked)."""
+    out: set[str] = set()
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            out |= assigned_symbols(e)
+    else:
+        s = symbol_of(target)
+        if s:
+            out.add(s)
+        if isinstance(target, ast.Starred):
+            out |= assigned_symbols(target.value)
+    return out

@@ -1,0 +1,243 @@
+"""Rule-engine core for the domain-aware static analyzer.
+
+The runtime enforces its hardest invariants only at runtime today
+(``PageAllocator.check()``, the arena's epoch assertions, the jit-cache
+discipline the engine comments keep re-stating); this package moves the
+same invariants to analysis time. A :class:`Rule` sees the whole parsed
+project (every target module plus the repo's ``tests/`` tree for
+cross-reference) and emits :class:`Finding` rows with stable IDs, so a
+violation is a CI failure in seconds instead of a churn-bench surprise.
+
+Suppression is inline and justified at the site::
+
+    alloc.free_page(owner, p)  # repro: noqa RA301 -- test harness owns pool
+
+A bare ``# repro: noqa`` (no IDs) suppresses every rule on that line.
+Findings are reported as ``path:line:col RAnnn message`` and optionally
+as JSON (the nightly artifact).
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import sys
+from pathlib import Path
+
+_NOQA_RE = re.compile(
+    r"#\s*repro:\s*noqa(?P<ids>(?:\s+RA\d+(?:\s*,\s*RA\d+)*)?)"
+    r"(?:\s*--\s*(?P<why>.*))?", re.IGNORECASE)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    severity: str                      # "error" | "warning"
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col} "
+                f"{self.rule} [{self.severity}] {self.message}")
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Module:
+    """One parsed source file: AST + per-line noqa suppressions."""
+
+    def __init__(self, path: Path, source: str, display: str | None = None):
+        self.path = path
+        self.display = display or str(path)
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        # line -> set of suppressed rule ids ("*" = all rules)
+        self.noqa: dict[int, set[str]] = {}
+        for i, line in enumerate(source.splitlines(), start=1):
+            m = _NOQA_RE.search(line)
+            if not m:
+                continue
+            ids = {s.strip().upper()
+                   for s in re.split(r"[,\s]+", m.group("ids") or "")
+                   if s.strip()}
+            self.noqa[i] = ids or {"*"}
+
+    def suppressed(self, rule: str, line: int) -> bool:
+        ids = self.noqa.get(line)
+        return ids is not None and ("*" in ids or rule.upper() in ids)
+
+    def finding(self, rule: "Rule", node: ast.AST | None,
+                message: str) -> Finding:
+        line = getattr(node, "lineno", 0) if node is not None else 0
+        col = getattr(node, "col_offset", 0) if node is not None else 0
+        return Finding(rule.id, rule.severity, self.display, line, col,
+                       message)
+
+
+class Project:
+    """The unit a rule analyzes: target modules plus reference modules
+    (the repo's ``tests/`` tree, parsed for cross-reference even when it
+    is not itself a target — RA302 needs it to decide whether a mutating
+    allocator method is exercised by a ``check()``-asserting test)."""
+
+    def __init__(self, modules: list[Module],
+                 reference_modules: list[Module] | None = None):
+        self.modules = modules
+        self.reference_modules = reference_modules or []
+
+    @property
+    def test_modules(self) -> list[Module]:
+        """Every parsed module living under a ``tests`` directory,
+        whether it arrived as a target or as a reference."""
+        seen: dict[str, Module] = {}
+        for m in self.modules + self.reference_modules:
+            if "tests" in Path(m.display).parts:
+                seen.setdefault(m.display, m)
+        return list(seen.values())
+
+
+class Rule:
+    """Base class: subclasses set ``id``/``doc`` and implement
+    ``analyze(project) -> list[Finding]`` (suppressions are filtered by
+    the driver, not the rule)."""
+
+    id: str = "RA000"
+    severity: str = "error"
+    doc: str = ""
+
+    def analyze(self, project: Project) -> list[Finding]:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, type[Rule]] = {}
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    assert cls.id not in _REGISTRY, f"duplicate rule id {cls.id}"
+    _REGISTRY[cls.id] = cls
+    return cls
+
+
+def all_rules() -> list[Rule]:
+    """Instantiate the full registered battery, id-ordered."""
+    # imported here so registering modules can import core freely
+    from . import rules_donation, rules_jit, rules_ownership  # noqa: F401
+    return [_REGISTRY[k]() for k in sorted(_REGISTRY)]
+
+
+# --- driver --------------------------------------------------------------------
+
+
+def _iter_py_files(paths: list[Path]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(f for f in p.rglob("*.py")
+                              if "__pycache__" not in f.parts))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def load_module(path: Path, root: Path | None = None) -> Module | None:
+    try:
+        source = path.read_text()
+    except (OSError, UnicodeDecodeError):
+        return None
+    display = str(path)
+    if root is not None:
+        try:
+            display = str(path.relative_to(root))
+        except ValueError:
+            pass
+    try:
+        return Module(path, source, display)
+    except SyntaxError:
+        # ruff's E9 tier owns syntax errors; don't double-report
+        return None
+
+
+def build_project(paths: list[str | Path],
+                  root: str | Path | None = None) -> Project:
+    root = Path(root) if root is not None else Path.cwd()
+    targets = [Path(p) for p in paths]
+    modules = [m for f in _iter_py_files(targets)
+               if (m := load_module(f, root)) is not None]
+    # always parse the repo's tests/ for cross-reference rules, even
+    # when tests/ is not an analysis target itself
+    covered = {m.display for m in modules}
+    refs = []
+    tests_dir = root / "tests"
+    if tests_dir.is_dir():
+        refs = [m for f in _iter_py_files([tests_dir])
+                if (m := load_module(f, root)) is not None
+                and m.display not in covered]
+    return Project(modules, refs)
+
+
+def run_rules(project: Project,
+              rules: list[Rule] | None = None) -> list[Finding]:
+    findings: list[Finding] = []
+    seen: set[Finding] = set()
+    by_display = {m.display: m for m in project.modules}
+    for rule in rules or all_rules():
+        for f in rule.analyze(project):
+            mod = by_display.get(f.path)
+            if mod is not None and mod.suppressed(f.rule, f.line):
+                continue
+            if f in seen:       # e.g. one call matching two aliased sites
+                continue
+            seen.add(f)
+            findings.append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return findings
+
+
+def main(argv: list[str] | None = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Domain-aware static analysis: jit/Pallas hazards, "
+                    "allocator ownership, packing-plan verification.")
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="also write findings as a JSON array")
+    ap.add_argument("--no-plans", action="store_true",
+                    help="skip the dynamic packing-plan verification pass "
+                         "(RA4xx) — AST rules only")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule battery and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from .plan_checks import PLAN_RULES
+        rows = [(r.id, r.severity, r.doc) for r in all_rules()]
+        rows += [(rid, "error", doc) for rid, doc in PLAN_RULES]
+        for rid, sev, doc in sorted(rows):
+            print(f"{rid}  [{sev}]  {doc}")
+        return 0
+
+    project = build_project(args.paths)
+    findings = run_rules(project)
+    if not args.no_plans:
+        from .plan_checks import run_plan_checks
+        findings.extend(run_plan_checks())
+
+    for f in findings:
+        print(f.format())
+    if args.json:
+        Path(args.json).write_text(
+            json.dumps([f.to_json() for f in findings], indent=1))
+    n_err = sum(1 for f in findings if f.severity == "error")
+    n_warn = len(findings) - n_err
+    tag = "clean" if not findings else f"{n_err} error(s), {n_warn} warning(s)"
+    print(f"repro.analysis: {len(project.modules)} file(s), {tag}",
+          file=sys.stderr)
+    return 1 if findings else 0

@@ -1,0 +1,358 @@
+"""Packing/residency plan verification (RA4xx) — the analysis-time twin
+of the paper's core claim: packed weights must be provably
+non-overlapping and capacity-feasible *before* anything runs.
+
+Unlike the AST rules this pass LOADS the plan constructors reachable
+from ``repro.planner`` and ``repro.core`` — ``pack_canvas`` layouts over
+per-config projection batteries plus chunking edge cases, ``pack()``
+plans over the MLPerf-Tiny workloads, ``layer_schedule`` /
+``plan_residency`` / ``double_buffer_bytes`` over every registry config
+— and verifies the statically-known shapes the kernels then trust
+blindly:
+
+RA401  canvas placements overlap (virtual plane or source coverage)
+RA402  capacity violated (plane bounds; macro D_m occupancy; one tile
+       of a layer per macro)
+RA403  plan does not partition its inventory (layer-schedule byte
+       conservation / include-subset alignment; residency decisions;
+       packer streamed/on-chip split)
+RA404  double_buffer_bytes is not the max adjacent schedule pair
+
+Each verifier is importable on its own so tests can feed deliberately
+corrupted plans and assert rejection.
+"""
+
+from __future__ import annotations
+
+from .core import Finding
+
+PLAN_RULES = [
+    ("RA401", "canvas placements overlap on the virtual plane or in "
+              "source coordinates"),
+    ("RA402", "capacity violated: placement outside the R x C plane, "
+              "macro occupancy above D_m, or two tiles of one layer "
+              "in the same macro"),
+    ("RA403", "plan does not partition its inventory (schedule bytes, "
+              "residency decisions, streamed/on-chip split)"),
+    ("RA404", "double_buffer_bytes is not the max adjacent pair of the "
+              "reload schedule"),
+]
+
+
+def _f(rule: str, origin: str, message: str) -> Finding:
+    return Finding(rule, "error", origin, 0, 0, message)
+
+
+# --- canvas layouts (planner.mxu_pack) -----------------------------------------
+
+
+def verify_layout(mats, layout, origin: str) -> list[Finding]:
+    """RA401/RA402 on one PackedLayout: in-bounds, pairwise disjoint
+    rectangles, and every matrix covered exactly once in source
+    coordinates."""
+    import numpy as np
+
+    out: list[Finding] = []
+    rects = []                  # (x0, x1, y0, y1, name)
+    for name, chunks in layout.placements.items():
+        for p in chunks:
+            rects.append((p.x_off, p.x_off + p.rows,
+                          p.y_off, p.y_off + p.cols, name))
+            if p.x_off < 0 or p.y_off < 0 or p.x_off + p.rows > layout.R \
+                    or p.y_off + p.cols > layout.C:
+                out.append(_f(
+                    "RA402", origin,
+                    f"chunk of {name!r} at ({p.x_off},{p.y_off}) size "
+                    f"{p.rows}x{p.cols} exceeds the {layout.R}x{layout.C} "
+                    f"plane"))
+    rects.sort()
+    for i, (ax0, ax1, ay0, ay1, an) in enumerate(rects):
+        for bx0, bx1, by0, by1, bn in rects[i + 1:]:
+            if bx0 >= ax1:
+                break           # sorted by x0: no later rect can overlap
+            if ay0 < by1 and by0 < ay1:
+                out.append(_f(
+                    "RA401", origin,
+                    f"chunks of {an!r} and {bn!r} overlap on the virtual "
+                    f"plane: [{ax0}:{ax1})x[{ay0}:{ay1}) vs "
+                    f"[{bx0}:{bx1})x[{by0}:{by1})"))
+    by_name = {m.name: m for m in mats}
+    for name, m in by_name.items():
+        chunks = layout.placements.get(name, ())
+        cover = np.zeros((m.rows, m.cols), np.int64)
+        for p in chunks:
+            cover[p.src_row:p.src_row + p.rows,
+                  p.src_col:p.src_col + p.cols] += 1
+        if not (cover == 1).all():
+            missing = int((cover == 0).sum())
+            dup = int((cover > 1).sum())
+            out.append(_f(
+                "RA401", origin,
+                f"{name!r} source coverage broken: {missing} cells "
+                f"unplaced, {dup} cells placed more than once"))
+    return out
+
+
+def _canvas_batteries():
+    """Projection batteries the layout engine must place correctly: one
+    per registry family (reduced dims) plus the chunking edge cases."""
+    from ..configs import REGISTRY
+    from ..planner import WeightMatrix
+
+    batteries: list[tuple[str, list, dict]] = []
+    for name, cfg in sorted(REGISTRY.items()):
+        r = cfg.reduced()
+        D, F = r.d_model, r.d_ff
+        mats = []
+        for layer in range(2):
+            g = f"qkv{layer}"
+            mats += [WeightMatrix(f"l{layer}.wq", D, D, share_group=g),
+                     WeightMatrix(f"l{layer}.wk", D, D, share_group=g),
+                     WeightMatrix(f"l{layer}.wv", D, D, share_group=g),
+                     WeightMatrix(f"l{layer}.wo", D, D),
+                     WeightMatrix(f"l{layer}.up", D, F),
+                     WeightMatrix(f"l{layer}.dn", F, D)]
+        batteries.append((f"canvas:{name}", mats, {}))
+    batteries += [
+        ("canvas:subblock-tiles",
+         [WeightMatrix(f"t{i}", 24, 24) for i in range(20)], {}),
+        ("canvas:col-chunked",
+         [WeightMatrix("wide", 128, 9000)], {"max_tile_cols": 4096}),
+        ("canvas:row-folded",
+         [WeightMatrix("tall", 5000, 256)], {"max_tile_rows": 512}),
+        ("canvas:mixed-fold-share",
+         [WeightMatrix("a", 700, 96, share_group="g"),
+          WeightMatrix("b", 700, 64, share_group="g"),
+          WeightMatrix("c", 130, 200)], {"max_tile_rows": 256}),
+    ]
+    return batteries
+
+
+def check_canvas_layouts() -> list[Finding]:
+    from ..planner import pack_canvas
+
+    out: list[Finding] = []
+    for origin, mats, kw in _canvas_batteries():
+        layout = pack_canvas(mats, **kw)
+        out.extend(verify_layout(mats, layout, f"<plan:{origin}>"))
+    return out
+
+
+# --- IMC packing plans (core.packer) -------------------------------------------
+
+
+def verify_packing_plan(plan, origin: str) -> list[Finding]:
+    """RA402/RA403 on one PackingPlan: per-macro occupancy within D_m,
+    at most one tile of a layer per macro, and the streamed/on-chip
+    split partitioning the workload."""
+    out: list[Finding] = []
+    cap = plan.arch.D_m
+    occ = []
+    for i, cols in enumerate(plan.allocation.macros):
+        height = sum(c.height for c in cols)
+        occ.append(height)
+        names: set[str] = set()
+        for c in cols:
+            dup = names & c.layer_names
+            if dup:
+                out.append(_f(
+                    "RA402", origin,
+                    f"macro {i} holds more than one tile of layer(s) "
+                    f"{sorted(dup)} — tiles of a layer must spread "
+                    f"across D_h to run in parallel"))
+            names |= c.layer_names
+        if height > cap:
+            out.append(_f(
+                "RA402", origin,
+                f"macro {i} occupancy {height} exceeds D_m={cap}"))
+    if occ and plan.allocation.min_D_m != max(occ):
+        out.append(_f(
+            "RA402", origin,
+            f"min_D_m={plan.allocation.min_D_m} but tallest macro "
+            f"occupancy is {max(occ)}"))
+    layer_names = {l.name for l in plan.workload.layers}
+    on_chip = {l.name for l in plan.on_chip_layers}
+    streamed = set(plan.streamed_layers)
+    if (on_chip | streamed) != layer_names or (on_chip & streamed):
+        out.append(_f(
+            "RA403", origin,
+            f"streamed/on-chip split does not partition the workload: "
+            f"on_chip={sorted(on_chip)} streamed={sorted(streamed)} "
+            f"layers={sorted(layer_names)}"))
+    return out
+
+
+def check_packing_plans() -> list[Finding]:
+    from ..core.imc_arch import a_imc, d_imc
+    from ..core.packer import pack
+    from ..core.workloads import mlperf_tiny_suite
+
+    out: list[Finding] = []
+    for wl in mlperf_tiny_suite():
+        for arch_fn, dims in ((d_imc, (1, 4096)), (d_imc, (4, 1024)),
+                              (a_imc, (8, 512))):
+            arch = arch_fn(*dims)
+            plan = pack(wl, arch, bounded=True)
+            out.extend(verify_packing_plan(
+                plan, f"<plan:pack:{wl.name}:D_h{dims[0]}xD_m{dims[1]}>"))
+    return out
+
+
+# --- layer schedules + residency (planner.residency) ---------------------------
+
+
+def verify_layer_schedule(cfg, origin: str,
+                          param_bytes: int = 2) -> list[Finding]:
+    from ..planner import layer_schedule, weight_inventory
+
+    out: list[Finding] = []
+    inv = weight_inventory(cfg)
+    sched = layer_schedule(cfg, param_bytes=param_bytes)
+    total = param_bytes * sum(t.params for t in inv)
+    got = sum(s.nbytes for s in sched)
+    if got != total:
+        out.append(_f(
+            "RA403", origin,
+            f"layer schedule sums to {got} bytes but the inventory "
+            f"holds {total} — slices must partition the serving copy"))
+    experts = cfg.moe.num_experts if cfg.moe else 0
+    want_n = 2 + cfg.num_layers * (1 + experts)
+    if len(sched) != want_n:
+        out.append(_f(
+            "RA403", origin,
+            f"layer schedule has {len(sched)} slices, expected {want_n} "
+            f"(embed + per-layer(+experts) + head)"))
+    if any(s.nbytes < 0 for s in sched):
+        out.append(_f("RA403", origin, "negative slice size"))
+    # include-subset alignment: the restricted schedule must keep the
+    # slice structure so pinned subsets subtract slice-by-slice
+    subset = frozenset(t.name for t in inv[: max(1, len(inv) // 2)])
+    sub = layer_schedule(cfg, param_bytes=param_bytes, include=subset)
+    if [s.name for s in sub] != [s.name for s in sched]:
+        out.append(_f(
+            "RA403", origin,
+            f"include-subset schedule is not slice-aligned with the "
+            f"full schedule ({len(sub)} vs {len(sched)} slices)"))
+    sub_total = param_bytes * sum(t.params for t in inv
+                                  if t.name in subset)
+    if sum(s.nbytes for s in sub) != sub_total:
+        out.append(_f(
+            "RA403", origin,
+            f"include-subset schedule does not conserve the subset's "
+            f"bytes"))
+    return out
+
+
+def verify_residency(cfg, origin: str) -> list[Finding]:
+    from ..planner import plan_residency, weight_inventory
+
+    out: list[Finding] = []
+    inv_names = [t.name for t in weight_inventory(cfg)]
+    for tp, dp, hbm in ((1, 1, 16.0), (4, 8, 16.0), (8, 16, 0.5)):
+        plan = plan_residency(cfg, tp=tp, dp=dp, train=False, hbm_gb=hbm)
+        decided = [d.tensor.name for d in plan.decisions]
+        if sorted(decided) != sorted(inv_names):
+            out.append(_f(
+                "RA403", origin,
+                f"residency plan (tp={tp}, dp={dp}) decides "
+                f"{sorted(decided)} but the inventory is "
+                f"{sorted(inv_names)} — every tensor exactly once"))
+        bad_modes = [d.tensor.name for d in plan.decisions
+                     if d.mode not in ("resident", "streamed")
+                     or d.bytes_per_chip < 0 or d.stream_bytes_per_step < 0]
+        if bad_modes:
+            out.append(_f(
+                "RA403", origin,
+                f"malformed residency decisions (tp={tp}, dp={dp}): "
+                f"{bad_modes}"))
+        if dp == 1 and plan.streamed:
+            out.append(_f(
+                "RA403", origin,
+                f"dp=1 plan streams {sorted(plan.streamed)} — streaming "
+                f"all-gathers over the data axis, which does not exist"))
+        resident_traffic = [d for d in plan.decisions
+                            if d.mode == "resident"
+                            and d.stream_bytes_per_step]
+        if resident_traffic:
+            out.append(_f(
+                "RA403", origin,
+                f"resident tensors report per-step stream traffic: "
+                f"{[d.tensor.name for d in resident_traffic]}"))
+    return out
+
+
+def verify_double_buffer(schedule, origin: str) -> list[Finding]:
+    """RA404: independent recomputation of the 2-slice working set —
+    the bounded streaming slab trusts this number for its allocation."""
+    from ..planner.residency import double_buffer_bytes
+
+    sizes = [int(b) for b in schedule]
+    got = double_buffer_bytes(sizes)
+    if not sizes:
+        want = 0
+    elif len(sizes) == 1:
+        want = sizes[0]
+    else:
+        want = 0
+        for i in range(len(sizes) - 1):     # brute-force adjacent walk
+            want = max(want, sizes[i] + sizes[i + 1])
+    if got != want:
+        return [_f(
+            "RA404", origin,
+            f"double_buffer_bytes returned {got}; the max adjacent pair "
+            f"of the schedule is {want}")]
+    return []
+
+
+def check_schedules() -> list[Finding]:
+    from ..configs import REGISTRY
+    from ..planner import layer_schedule
+
+    out: list[Finding] = []
+    for name, cfg in sorted(REGISTRY.items()):
+        origin = f"<plan:schedule:{name}>"
+        out.extend(verify_layer_schedule(cfg, origin))
+        out.extend(verify_residency(cfg, f"<plan:residency:{name}>"))
+        sched = [s.nbytes for s in layer_schedule(cfg)]
+        out.extend(verify_double_buffer(
+            sched, f"<plan:double_buffer:{name}>"))
+    # synthetic shapes the registry never hits
+    for label, sizes in (("empty", []), ("single", [7]),
+                         ("spike-head", [100, 1, 1, 1]),
+                         ("spike-tail", [1, 1, 1, 100]),
+                         ("plateau", [5, 5, 5, 5])):
+        out.extend(verify_double_buffer(
+            sizes, f"<plan:double_buffer:{label}>"))
+    return out
+
+
+# --- entry point ---------------------------------------------------------------
+
+
+def run_plan_checks() -> list[Finding]:
+    try:
+        # the planner stack needs both; probe before importing it
+        import jax  # noqa: F401
+        import numpy  # noqa: F401
+    except ImportError as e:                       # pragma: no cover
+        return [Finding("RA400", "warning", "<plan:environment>", 0, 0,
+                        f"plan verification skipped: {e}")]
+    out: list[Finding] = []
+    out.extend(check_canvas_layouts())
+    out.extend(check_packing_plans())
+    out.extend(check_schedules())
+    return out
+
+
+# convenience for tests: a corrupted layout builder lives here so the
+# "rejects a deliberately corrupted plan" fixture has one canonical shape
+def corrupted_overlap_layout():
+    """A PackedLayout whose two placements overlap — RA401 must fire."""
+    from ..planner import ChunkPlacement, PackedLayout, WeightMatrix
+
+    mats = [WeightMatrix("a", 64, 64), WeightMatrix("b", 64, 64)]
+    layout = PackedLayout(
+        R=128, C=128,
+        placements={"a": (ChunkPlacement(0, 0, 64, 64),),
+                    "b": (ChunkPlacement(32, 32, 64, 64),)})
+    return mats, layout

@@ -1,0 +1,79 @@
+"""Donation-after-use rule (RA201).
+
+``donate_argnums`` hands a buffer to XLA for in-place reuse: the Python
+reference that was passed in is invalidated the moment the jitted call
+runs. The only safe idiom this repo uses is *rebind from the result in
+the same statement*::
+
+    logits, self.state = self._decode(self.params, self.state, ...)
+
+A donated operand that is NOT rebound by the enclosing assignment leaves
+a dangling reference in scope — any later read raises a
+``RuntimeError: invalid buffer`` on device backends, and silently reads
+stale memory in some donation-ignoring paths (CPU warns only). The CoW
+``copy_kv_page`` path (donated state, page copied in place) is exactly
+where PR 7 made this live.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from . import astutil
+from .core import Finding, Module, Project, Rule, register
+
+
+@register
+class DonationAfterUse(Rule):
+    id = "RA201"
+    doc = ("argument donated via donate_argnums is not rebound from the "
+           "jitted call's result — later reads in the same scope see an "
+           "invalidated buffer")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for mod in project.modules:
+            parents = astutil.build_parents(mod.tree)
+            for site in astutil.collect_jit_sites(mod, parents):
+                if not site.donate_argnums or site.bound_to is None:
+                    continue
+                out.extend(self._check_calls(mod, parents, site))
+        return out
+
+    def _check_calls(self, mod: Module, parents, site) -> list[Finding]:
+        out = []
+        scope = astutil.enclosing(site.node, parents, (ast.ClassDef,))
+        for call in astutil.call_sites_of(mod, site.bound_to, parents, scope):
+            if call is site.node:
+                continue
+            for pos in site.donate_argnums:
+                if pos >= len(call.args):
+                    continue
+                operand = call.args[pos]
+                sym = astutil.symbol_of(operand)
+                if sym is None:
+                    continue    # fresh expression: nothing left to dangle
+                if self._rebinds(call, parents, sym):
+                    continue
+                out.append(mod.finding(
+                    self, operand,
+                    f"{sym!r} is donated (donate_argnums position {pos}) "
+                    f"to {site.bound_to[1]!r} but not rebound from the "
+                    f"call result; the reference left in scope is an "
+                    f"invalidated buffer"))
+        return out
+
+    @staticmethod
+    def _rebinds(call: ast.Call, parents, sym: str) -> bool:
+        stmt = astutil.enclosing_statement(call, parents)
+        if isinstance(stmt, ast.Assign):
+            rebound: set[str] = set()
+            for t in stmt.targets:
+                rebound |= astutil.assigned_symbols(t)
+            return sym in rebound
+        if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)) \
+                and stmt.target is not None:
+            return sym in astutil.assigned_symbols(stmt.target)
+        if isinstance(stmt, ast.Return):
+            return True         # result leaves the scope with the call
+        return False

@@ -1,0 +1,317 @@
+"""jit / Pallas recompile-hazard rules (RA1xx).
+
+Each rule encodes a bug class this repo has shipped or actively guards
+against in comments: static arguments that cannot key a compile cache
+(RA101), compile caches rebuilt or keyed per step (RA102), and Python
+control flow on traced operands inside jitted functions (RA103 — the
+``if x > 0`` on a tracer that either crashes at trace time or silently
+bakes one branch into the compiled program).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from . import astutil
+from .core import Finding, Module, Project, Rule, register
+
+MUTABLE_DISPLAYS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                    ast.SetComp, ast.GeneratorExp)
+MUTABLE_CTORS = {"list", "dict", "set", "bytearray"}
+
+# identifiers the serving loop varies every step / request — an f-string
+# cache key interpolating one of these keys a compile cache on an
+# unbounded value (the PR-4 "static-keyed MoE routing" bug class)
+PER_STEP_NAME = re.compile(
+    r"(?i)(^|_)(step|steps|rid|request|arrival|tick|clock|time|wall|seed|"
+    r"epoch|iter|count|token|tokens|slot)(_|$)")
+CACHE_NAME = re.compile(r"(?i)(cache|jit|compiled|traced)")
+
+
+def _is_mutable_value(node: ast.AST) -> bool:
+    if isinstance(node, MUTABLE_DISPLAYS):
+        return True
+    return (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+            and node.func.id in MUTABLE_CTORS)
+
+
+@register
+class JitUnhashableStatic(Rule):
+    id = "RA101"
+    doc = ("static jit argument (static_argnums/static_argnames) receives "
+           "an unhashable value — dict/list/set defaults or literals "
+           "cannot key the compile cache")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for mod in project.modules:
+            parents = astutil.build_parents(mod.tree)
+            for site in astutil.collect_jit_sites(mod, parents):
+                if site.kind != "jit":
+                    continue
+                out.extend(self._check_defaults(mod, site))
+                out.extend(self._check_call_sites(mod, parents, site))
+        return out
+
+    def _check_defaults(self, mod: Module, site) -> list[Finding]:
+        fn = site.func_node
+        if fn is None or isinstance(fn, ast.Lambda):
+            return []
+        static = site.static_params()
+        if not static:
+            return []
+        out = []
+        args = fn.args
+        pos = args.posonlyargs + args.args
+        defaults = args.defaults
+        # defaults align to the tail of the positional list
+        for a, d in zip(pos[len(pos) - len(defaults):], defaults):
+            if a.arg in static and _is_mutable_value(d):
+                out.append(mod.finding(
+                    self, d,
+                    f"static parameter {a.arg!r} of jitted function "
+                    f"{getattr(fn, 'name', '<lambda>')!r} defaults to an "
+                    f"unhashable {type(d).__name__.lower()}"))
+        for a, d in zip(args.kwonlyargs, args.kw_defaults):
+            if d is not None and a.arg in static and _is_mutable_value(d):
+                out.append(mod.finding(
+                    self, d,
+                    f"static parameter {a.arg!r} of jitted function "
+                    f"{getattr(fn, 'name', '<lambda>')!r} defaults to an "
+                    f"unhashable {type(d).__name__.lower()}"))
+        return out
+
+    def _check_call_sites(self, mod: Module, parents, site) -> list[Finding]:
+        if site.bound_to is None or not (site.static_argnums
+                                         or site.static_argnames):
+            return []
+        out = []
+        static_names = site.static_params()
+        scope = astutil.enclosing(site.node, parents, (ast.ClassDef,))
+        for call in astutil.call_sites_of(mod, site.bound_to, parents, scope):
+            for i, arg in enumerate(call.args):
+                if i in site.static_argnums and _is_mutable_value(arg):
+                    out.append(mod.finding(
+                        self, arg,
+                        f"call to jitted {site.bound_to[1]!r} passes an "
+                        f"unhashable {type(arg).__name__.lower()} at "
+                        f"static position {i}"))
+            for kw in call.keywords:
+                if kw.arg in static_names and _is_mutable_value(kw.value):
+                    out.append(mod.finding(
+                        self, kw.value,
+                        f"call to jitted {site.bound_to[1]!r} passes an "
+                        f"unhashable {type(kw.value).__name__.lower()} "
+                        f"for static argument {kw.arg!r}"))
+        return out
+
+
+@register
+class JitCacheChurn(Rule):
+    id = "RA102"
+    doc = ("compile cache churned or keyed per step: jax.jit/pallas_call "
+           "invoked inside a loop (fresh cache each iteration), an "
+           "f-string cache key interpolating a per-step-varying value, or "
+           "a static jit argument named like a per-step quantity")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for mod in project.modules:
+            parents = astutil.build_parents(mod.tree)
+            out.extend(self._jit_in_loop(mod, parents))
+            out.extend(self._fstring_keys(mod))
+            out.extend(self._per_step_static(mod, parents))
+        return out
+
+    def _per_step_static(self, mod: Module, parents) -> list[Finding]:
+        """A static jit argument keys one full compile per distinct value;
+        a param named slot/step/rid/... varies per request or per step, so
+        the cache grows with the serving dimension instead of the shape
+        bucket (the engine's traced-slot comment is the fix)."""
+        out = []
+        for site in astutil.collect_jit_sites(mod, parents):
+            if site.kind != "jit":
+                continue
+            for name in sorted(site.static_params()):
+                if PER_STEP_NAME.search(name):
+                    out.append(mod.finding(
+                        self, site.node,
+                        f"static jit argument {name!r} looks per-step/"
+                        f"per-request-varying: each distinct value compiles "
+                        f"a fresh program — pass it traced "
+                        f"(jnp.asarray(..., jnp.int32)) or bucket it"))
+        return out
+
+    def _jit_in_loop(self, mod: Module, parents) -> list[Finding]:
+        out = []
+        for site in astutil.collect_jit_sites(mod, parents):
+            node = site.node
+            if not isinstance(node, ast.Call):
+                continue        # decorators execute once at def time
+            cur = parents.get(node)
+            while cur is not None:
+                if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                    ast.Lambda)):
+                    break       # wrap happens at (deferred) call time
+                if isinstance(cur, (ast.For, ast.While)):
+                    what = "jax.jit" if site.kind == "jit" \
+                        else "pl.pallas_call"
+                    out.append(mod.finding(
+                        self, node,
+                        f"{what} invoked inside a loop: every iteration "
+                        f"builds a fresh wrapper with an empty compile "
+                        f"cache — hoist the wrap or memoize it"))
+                    break
+                cur = parents.get(cur)
+        return out
+
+    def _fstring_keys(self, mod: Module) -> list[Finding]:
+        out = []
+        for node in ast.walk(mod.tree):
+            target = None
+            key = None
+            if isinstance(node, ast.Subscript):
+                target, key = node.value, node.slice
+            elif isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in ("setdefault", "get") and node.args:
+                target, key = node.func.value, node.args[0]
+            if target is None or not isinstance(key, ast.JoinedStr):
+                continue
+            sym = astutil.symbol_of(target) or ""
+            if not CACHE_NAME.search(sym):
+                continue
+            for part in key.values:
+                if not isinstance(part, ast.FormattedValue):
+                    continue
+                bad = self._per_step_expr(part.value)
+                if bad:
+                    out.append(mod.finding(
+                        self, key,
+                        f"f-string key on {sym!r} interpolates "
+                        f"per-step-varying {bad!r}: the cache grows one "
+                        f"entry (and one compile) per distinct value — "
+                        f"key on a bounded bucket instead"))
+                    break
+        return out
+
+    @staticmethod
+    def _per_step_expr(expr: ast.AST) -> str | None:
+        for n in ast.walk(expr):
+            if isinstance(n, ast.Name) and PER_STEP_NAME.search(n.id):
+                return n.id
+            if isinstance(n, ast.Attribute) and PER_STEP_NAME.search(n.attr):
+                return n.attr
+            if isinstance(n, ast.Call):
+                d = astutil.dotted(n.func)
+                if d and (d[1] == "len" or PER_STEP_NAME.search(d[1])):
+                    return ast.unparse(n.func) + "()"
+        return None
+
+
+SAFE_ATTRS = {"shape", "ndim", "dtype", "size", "aval", "sharding"}
+SAFE_CALLS = {"len", "isinstance", "hasattr", "getattr", "type", "callable"}
+
+
+@register
+class JitTracedBranch(Rule):
+    id = "RA103"
+    doc = ("Python branch (if/while/assert) on a traced operand inside a "
+           "jitted or Pallas kernel function — trace-time crash, or one "
+           "branch silently baked into the compiled program")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for mod in project.modules:
+            parents = astutil.build_parents(mod.tree)
+            seen: set[int] = set()
+            for site in astutil.collect_jit_sites(mod, parents):
+                fn = site.func_node
+                if fn is None or id(fn) in seen:
+                    continue
+                seen.add(id(fn))
+                traced = set(site.traced_params())
+                if site.kind == "pallas":
+                    # kernel refs are traced too; params are Refs
+                    traced = {a.arg for a in fn.args.posonlyargs
+                              + fn.args.args} if not isinstance(
+                                  fn, ast.Lambda) else traced
+                if not traced:
+                    continue
+                out.extend(self._scan_body(mod, fn, traced))
+        return out
+
+    def _scan_body(self, mod: Module, fn, traced: set[str]) -> list[Finding]:
+        out = []
+        name = getattr(fn, "name", "<lambda>")
+
+        def visit(node: ast.AST, live: set[str]) -> None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)) and node is not fn:
+                # nested scope: a captured tracer is still a hazard, but
+                # the nested function's own params shadow outer names
+                a = node.args
+                shadowed = {p.arg for p in a.posonlyargs + a.args
+                            + a.kwonlyargs}
+                live = live - shadowed
+                if not live:
+                    return
+            test = kind = None
+            if isinstance(node, (ast.If, ast.While)):
+                test, kind = node.test, type(node).__name__.lower()
+            elif isinstance(node, ast.IfExp):
+                test, kind = node.test, "conditional expression"
+            elif isinstance(node, ast.Assert):
+                test, kind = node.test, "assert"
+            if test is not None:
+                offender = self._traced_load(test, live)
+                if offender is not None:
+                    out.append(mod.finding(
+                        self, test,
+                        f"{kind} on traced operand {offender!r} inside "
+                        f"jitted function {name!r}: use lax.cond/"
+                        f"jnp.where, or mark the argument static"))
+            for child in ast.iter_child_nodes(node):
+                visit(child, live)
+
+        body = fn.body if isinstance(fn.body, list) else [fn.body]
+        for stmt in body:
+            visit(stmt, set(traced))
+        return out
+
+    @classmethod
+    def _traced_load(cls, expr: ast.AST, traced: set[str]) -> str | None:
+        """First traced-parameter load reached outside a safe context
+        (.shape/.dtype/..., len()/isinstance(), ``is None`` checks)."""
+        if isinstance(expr, ast.Attribute):
+            if expr.attr in SAFE_ATTRS:
+                return None
+            return cls._traced_load(expr.value, traced)
+        if isinstance(expr, ast.Call):
+            d = astutil.dotted(expr.func)
+            if d and d[1] in SAFE_CALLS:
+                return None
+            hit = cls._traced_load(expr.func, traced)
+            if hit:
+                return hit
+            for a in expr.args:
+                hit = cls._traced_load(a, traced)
+                if hit:
+                    return hit
+            return None
+        if isinstance(expr, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in expr.ops):
+                return None     # `x is None` identity checks are static
+            for sub in [expr.left, *expr.comparators]:
+                hit = cls._traced_load(sub, traced)
+                if hit:
+                    return hit
+            return None
+        if isinstance(expr, ast.Name):
+            return expr.id if expr.id in traced else None
+        for child in ast.iter_child_nodes(expr):
+            hit = cls._traced_load(child, traced)
+            if hit:
+                return hit
+        return None

@@ -1,0 +1,127 @@
+"""Allocator ownership-discipline rules (RA3xx).
+
+The refcounted ``PageAllocator`` and the ``DeviceArena`` keep hard
+invariants (refs == holders, free/referenced partition, byte
+conservation) that only hold because a small set of modules is allowed
+to mutate them: the pager itself, the engines, the arena, and the
+prefix index. RA301 rejects mutation calls from anywhere else; RA302
+rejects growing the mutation surface without invariant coverage — every
+public mutating method on those classes must be exercised by at least
+one test that also asserts ``check()``.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from . import astutil
+from .core import Finding, Project, Rule, register
+
+# modules allowed to mutate allocator / arena state (basename match);
+# tests exercise the invariants on purpose and are exempt by path
+OWNING_MODULES = {"kv_pager.py", "engine.py", "arena.py", "prefix_index.py"}
+OWNED_CALLS = {"free_page", "free_owner", "share"}
+
+GUARDED_CLASSES = {"PageAllocator", "DeviceArena"}
+MUTATOR_METHOD_CALLS = {"append", "pop", "add", "remove", "discard", "clear",
+                        "update", "extend", "insert", "setdefault",
+                        "popitem"}
+
+
+def _is_exempt(display: str) -> bool:
+    parts = Path(display).parts
+    return Path(display).name in OWNING_MODULES or "tests" in parts
+
+
+@register
+class AllocatorOwnership(Rule):
+    id = "RA301"
+    doc = ("PageAllocator.free_page/free_owner/share called outside the "
+           "owning modules (kv_pager, engine, arena, prefix_index) — "
+           "refcount discipline belongs to the owners")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for mod in project.modules:
+            if _is_exempt(mod.display):
+                continue
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in OWNED_CALLS:
+                    out.append(mod.finding(
+                        self, node,
+                        f".{node.func.attr}() called outside the "
+                        f"allocator's owning modules "
+                        f"({', '.join(sorted(OWNING_MODULES))}); route "
+                        f"page lifetime through the engine or pager"))
+        return out
+
+
+@register
+class UncheckedMutator(Rule):
+    id = "RA302"
+    doc = ("public mutating method on PageAllocator/DeviceArena with no "
+           "test that references it AND asserts check() — invariant "
+           "surface grew without invariant coverage")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        tests = project.test_modules
+        if not tests:
+            return []           # nothing to cross-reference against
+        # attribute names referenced per test module, plus whether that
+        # module asserts the invariant checker
+        coverage: list[set[str]] = []
+        for t in tests:
+            attrs = {n.attr for n in ast.walk(t.tree)
+                     if isinstance(n, ast.Attribute)}
+            if "check" in attrs:
+                coverage.append(attrs)
+        out: list[Finding] = []
+        for mod in project.modules:
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.ClassDef) \
+                        or node.name not in GUARDED_CLASSES:
+                    continue
+                for meth in node.body:
+                    if not isinstance(meth, (ast.FunctionDef,
+                                             ast.AsyncFunctionDef)):
+                        continue
+                    if meth.name.startswith("_") \
+                            or not self._mutates_self(meth):
+                        continue
+                    if any(meth.name in attrs for attrs in coverage):
+                        continue
+                    out.append(mod.finding(
+                        self, meth,
+                        f"{node.name}.{meth.name} mutates allocator state "
+                        f"but no check()-asserting test references it; "
+                        f"add it to an invariant test (see tests/"
+                        f"test_arena.py) or prefix it with '_'"))
+        return out
+
+    @staticmethod
+    def _mutates_self(meth: ast.FunctionDef) -> bool:
+        if any(astutil.dotted(d) == (None, "property")
+               for d in meth.decorator_list):
+            return False
+        for node in ast.walk(meth):
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = node.targets if isinstance(node, ast.Assign) \
+                    else [node.target]
+                for t in targets:
+                    if t is None:
+                        continue
+                    base = t.value if isinstance(
+                        t, (ast.Attribute, ast.Subscript)) else None
+                    for b in ast.walk(base) if base is not None else []:
+                        if isinstance(b, ast.Name) and b.id == "self":
+                            return True
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in MUTATOR_METHOD_CALLS:
+                sym = astutil.symbol_of(node.func.value) or ""
+                if sym.startswith("self."):
+                    return True
+        return False

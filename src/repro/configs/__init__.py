@@ -27,7 +27,7 @@ def get_config(arch_id: str) -> ModelConfig:
 def shapes_for(arch_id: str) -> tuple[str, ...]:
     base = ("train_4k", "prefill_32k", "decode_32k")
     if REGISTRY[arch_id].family in ("ssm", "hybrid"):
-        return base + ("long_500k",)
+        return (*base, "long_500k")
     return base
 
 

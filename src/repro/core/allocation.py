@@ -15,7 +15,7 @@ per-inference reload).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 from .columns import Column
 from .imc_arch import IMCArchitecture

@@ -17,7 +17,7 @@ the TPU `packed_canvas` kernel layout (planner/mxu_pack.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Sequence
+from collections.abc import Iterable, Sequence
 
 from .imc_arch import IMCArchitecture
 from .supertiles import SuperTile, TileInstance, expand_instances, generate_supertiles

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from .imc_arch import IMCArchitecture
 from .loops import LayerSpec, Workload

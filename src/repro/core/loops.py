@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Iterable, Mapping, Sequence
+from collections.abc import Iterable, Mapping, Sequence
 
 # Loop names. K is *input-irrelevant* (unrolled on D_i); C/FX/FY are
 # *output-irrelevant* (unrolled on D_o); OX/OY are never weight-relevant and
@@ -69,7 +69,7 @@ def best_subproduct(factors: Sequence[int], cap: int) -> tuple[int, tuple[int, .
         for prod, chosen in best.items():
             np_ = prod * f
             if np_ <= cap and np_ not in best and np_ not in updates:
-                updates[np_] = tuple(sorted(chosen + (f,)))
+                updates[np_] = tuple(sorted((*chosen, f)))
         best.update(updates)
     bp = max(best)
     return bp, best[bp]

@@ -11,7 +11,7 @@ cost model consumes plans; the TPU planner reuses the column placements.
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 from .allocation import Allocation, allocate_columns
 from .columns import Column, generate_columns

@@ -16,7 +16,7 @@ ST_m is the sum of member heights.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 from .tiles import Tile
 

@@ -20,7 +20,7 @@ read-modify-writes, while K steps multiplexed in time keep inputs stationary
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 from .imc_arch import IMCArchitecture
 from .loops import (C, FX, FY, K, LayerSpec, best_subproduct, prime_factors,

@@ -86,7 +86,7 @@ def run_static(cfg, params, args):
     key, ks = jax.random.split(key)
     tok = jax.random.categorical(ks, logits / args.temperature, -1)
     t0 = time.monotonic()
-    for i in range(args.gen):
+    for _ in range(args.gen):
         toks.append(np.asarray(tok))
         logits, state = serve(params, state, tok)
         key, ks = jax.random.split(key)

@@ -24,7 +24,7 @@ traffic the plan minimizes).
 from __future__ import annotations
 
 import re
-from typing import Mapping
+from collections.abc import Mapping
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P

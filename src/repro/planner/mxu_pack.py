@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Mapping, Sequence
+from collections.abc import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -225,7 +225,7 @@ def _lay_out(ordered, *, mode: str) -> PackedLayout:
     placements: dict[str, list[ChunkPlacement]] = {}
     x_off = 0
     y_off = 0
-    for key, members in ordered:
+    for _key, members in ordered:
         h = max(ch[0] for _, ch in members)
         w = sum(ch[1] for _, ch in members)
         if mode == "snapped":

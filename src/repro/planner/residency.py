@@ -23,7 +23,7 @@ compute copy of each parameter.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from collections.abc import Iterable
 
 GiB = 1 << 30
 

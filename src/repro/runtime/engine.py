@@ -400,11 +400,12 @@ class RecurrentBackend:
             lambda params, state, tokens: self.api.decode_step(
                 cfg, params, state, tokens),
             donate_argnums=(1,))
-        self._write = jax.jit(self._write_slot, static_argnums=(2,),
-                              donate_argnums=(0,))
+        # slot is a traced scalar (``.at[:, slot]`` takes traced indices),
+        # so admission compiles once total — not once per batch slot
+        self._write = jax.jit(self._write_slot, donate_argnums=(0,))
 
     @staticmethod
-    def _write_slot(state, single, slot: int):
+    def _write_slot(state, single, slot):
         """Copy a B=1 prefill state into batch slot ``slot`` (every data
         leaf of RwkvState carries batch on axis 1; pos is lockstep-only
         and unused by the engine)."""
@@ -418,7 +419,8 @@ class RecurrentBackend:
                 page_ids=None) -> np.ndarray:
         batch = {"tokens": jnp.asarray(ctx[None].astype(np.int32))}
         logits, single = self._prefill(self.params, batch)
-        self.state = self._write(self.state, single, slot)
+        self.state = self._write(self.state, single,
+                                 jnp.asarray(slot, jnp.int32))
         return np.asarray(logits[0])
 
     def decode(self, tokens, page_table, lengths, active) -> np.ndarray:

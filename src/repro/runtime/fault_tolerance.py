@@ -37,7 +37,8 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 from ..checkpoint import CheckpointManager
 

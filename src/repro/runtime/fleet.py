@@ -149,7 +149,8 @@ class FleetConfig:
     fill_frac: float = 0.62
     max_queue_per_replica: int = 32    # admission refusal threshold
     straggler_factor: float = 3.0      # routing-health detection ratio
-    backoff: Backoff = Backoff(base=1, factor=2.0, cap=16)
+    backoff: Backoff = dataclasses.field(
+        default_factory=lambda: Backoff(base=1, factor=2.0, cap=16))
     max_ticks: int = 200_000
 
 

@@ -1,0 +1,485 @@
+"""Tests for the repro.analysis static analyzer.
+
+Each AST rule gets a paired good/bad fixture (the bad one must fire, the
+good one must stay silent); the plan verifiers get a real plan (clean)
+and a deliberately corrupted one (rejected); and a self-check asserts
+the repo's own source tree is analyzer-clean, which is what the CI fast
+gate enforces.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis import Project, run_rules
+from repro.analysis.core import Module
+from repro.analysis import plan_checks
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _findings(src, name="mod.py", tests_src=None):
+    mods = [Module(Path(name), textwrap.dedent(src), name)]
+    refs = []
+    if tests_src is not None:
+        refs = [Module(Path("tests/test_fixture.py"),
+                       textwrap.dedent(tests_src), "tests/test_fixture.py")]
+    return run_rules(Project(mods, refs))
+
+
+def _rules(src, **kw):
+    return {f.rule for f in _findings(src, **kw)}
+
+
+# --- RA101: unhashable static arguments ----------------------------------------
+
+RA101_BAD_DEFAULT = """
+    import jax
+
+    def f(x, opts=[]):
+        return x
+
+    g = jax.jit(f, static_argnames=("opts",))
+"""
+
+RA101_GOOD_DEFAULT = """
+    import jax
+
+    def f(x, opts=()):
+        return x
+
+    g = jax.jit(f, static_argnames=("opts",))
+"""
+
+RA101_BAD_CALL = """
+    import jax
+
+    def f(x, shape):
+        return x
+
+    g = jax.jit(f, static_argnums=(1,))
+    y = g(x, [4, 4])
+"""
+
+RA101_GOOD_CALL = """
+    import jax
+
+    def f(x, shape):
+        return x
+
+    g = jax.jit(f, static_argnums=(1,))
+    y = g(x, (4, 4))
+"""
+
+
+def test_ra101_fires_on_mutable_default():
+    assert "RA101" in _rules(RA101_BAD_DEFAULT)
+    assert "RA101" not in _rules(RA101_GOOD_DEFAULT)
+
+
+def test_ra101_fires_on_mutable_call_arg():
+    assert "RA101" in _rules(RA101_BAD_CALL)
+    assert "RA101" not in _rules(RA101_GOOD_CALL)
+
+
+# --- RA102: compile-cache churn ------------------------------------------------
+
+RA102_BAD_LOOP = """
+    import jax
+
+    def run(fn, xs):
+        out = []
+        for x in xs:
+            out.append(jax.jit(fn)(x))
+        return out
+"""
+
+RA102_GOOD_LOOP = """
+    import jax
+
+    def run(fn, xs):
+        step = jax.jit(fn)
+        out = []
+        for x in xs:
+            out.append(step(x))
+        return out
+"""
+
+RA102_BAD_FSTRING = """
+    def lookup(jit_cache, step, fn):
+        return jit_cache.setdefault(f"k{step}", fn)
+"""
+
+RA102_GOOD_FSTRING = """
+    def lookup(jit_cache, bucket, fn):
+        return jit_cache.setdefault(f"b{bucket}", fn)
+"""
+
+RA102_BAD_STATIC = """
+    import jax
+
+    def write(state, single, slot):
+        return state
+
+    w = jax.jit(write, static_argnums=(2,))
+"""
+
+RA102_GOOD_STATIC = """
+    import jax
+
+    def write(state, single, slot):
+        return state
+
+    w = jax.jit(write, donate_argnums=(0,))
+"""
+
+
+def test_ra102_fires_on_jit_in_loop():
+    assert "RA102" in _rules(RA102_BAD_LOOP)
+    assert "RA102" not in _rules(RA102_GOOD_LOOP)
+
+
+def test_ra102_fires_on_per_step_fstring_key():
+    assert "RA102" in _rules(RA102_BAD_FSTRING)
+    assert "RA102" not in _rules(RA102_GOOD_FSTRING)
+
+
+def test_ra102_fires_on_per_step_static_arg():
+    assert "RA102" in _rules(RA102_BAD_STATIC)
+    assert "RA102" not in _rules(RA102_GOOD_STATIC)
+
+
+def test_ra102_fires_on_bound_method_static_slot():
+    # the engine regression: jax.jit(self._write_slot, static_argnums=(2,))
+    # on a staticmethod — argnums must map through the self.<attr> access
+    src = """
+        import jax
+
+        class Backend:
+            def __init__(self):
+                self._write = jax.jit(self._write_slot,
+                                      static_argnums=(2,))
+
+            @staticmethod
+            def _write_slot(state, single, slot):
+                return state
+    """
+    assert "RA102" in _rules(src)
+
+
+def test_ra102_decorated_method_argnum_zero_is_self():
+    # @partial(jax.jit, static_argnums=0) on an UNBOUND method: argnum 0
+    # is self, not the first real parameter — must stay silent
+    src = """
+        import jax
+        from functools import partial
+
+        class Stream:
+            @partial(jax.jit, static_argnums=0)
+            def _rows(self, step, rows):
+                return rows
+    """
+    assert "RA102" not in _rules(src)
+
+
+# --- RA103: traced branches ----------------------------------------------------
+
+RA103_BAD = """
+    import jax
+
+    def f(x):
+        if x > 0:
+            return x
+        return -x
+
+    g = jax.jit(f)
+"""
+
+RA103_GOOD = """
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        if x.shape[0] > 4:
+            return x
+        if x is None:
+            return x
+        return jnp.where(x > 0, x, -x)
+
+    g = jax.jit(f)
+"""
+
+RA103_BAD_PALLAS = """
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        if x_ref[0] > 0:
+            o_ref[0] = 1
+
+    out = pl.pallas_call(kernel)
+"""
+
+RA103_GOOD_STATIC_BRANCH = """
+    import jax
+
+    def f(x, mode):
+        if mode == "fast":
+            return x
+        return -x
+
+    g = jax.jit(f, static_argnames=("mode",))
+"""
+
+
+def test_ra103_fires_on_traced_if():
+    assert "RA103" in _rules(RA103_BAD)
+    assert "RA103" not in _rules(RA103_GOOD)
+
+
+def test_ra103_fires_in_pallas_kernel():
+    assert "RA103" in _rules(RA103_BAD_PALLAS)
+
+
+def test_ra103_static_arg_branch_is_fine():
+    assert "RA103" not in _rules(RA103_GOOD_STATIC_BRANCH)
+
+
+def test_ra103_nested_shadowing_param_is_fine():
+    src = """
+        import jax
+
+        def f(x, items):
+            def claim(s, x=0):
+                if x > 0:
+                    return s
+                return s
+            return claim(x)
+
+        g = jax.jit(f)
+    """
+    assert "RA103" not in _rules(src)
+
+
+# --- RA201: donation after use -------------------------------------------------
+
+RA201_BAD = """
+    import jax
+
+    class Backend:
+        def __init__(self, step):
+            self._step = jax.jit(step, donate_argnums=(0,))
+
+        def run(self, tokens):
+            logits = self._step(self.state, tokens)
+            return logits, self.state
+"""
+
+RA201_GOOD = """
+    import jax
+
+    class Backend:
+        def __init__(self, step):
+            self._step = jax.jit(step, donate_argnums=(0,))
+
+        def run(self, tokens):
+            logits, self.state = self._step(self.state, tokens)
+            return logits
+"""
+
+
+def test_ra201_fires_when_donated_arg_not_rebound():
+    assert "RA201" in _rules(RA201_BAD)
+    assert "RA201" not in _rules(RA201_GOOD)
+
+
+def test_ra201_scoped_to_the_binding_class():
+    # another class binding the same attr name WITHOUT donation must not
+    # inherit the first class's donate_argnums
+    src = RA201_GOOD + """
+
+    class Other:
+        def __init__(self, step):
+            self._step = jax.jit(step)
+
+        def run(self, tokens):
+            logits = self._step(self.state, tokens)
+            return logits, self.state
+    """
+    assert "RA201" not in _rules(src)
+
+
+# --- RA301/RA302: allocator ownership ------------------------------------------
+
+RA301_SRC = """
+    def evict(alloc, owner, page):
+        alloc.free_page(owner, page)
+"""
+
+
+def test_ra301_fires_outside_owning_modules():
+    assert "RA301" in _rules(RA301_SRC, name="src/scheduler.py")
+    assert "RA301" not in _rules(RA301_SRC, name="src/kv_pager.py")
+
+
+def test_ra301_noqa_suppression():
+    suppressed = """
+        def evict(alloc, owner, page):
+            alloc.free_page(owner, page)  # repro: noqa RA301 -- harness owns pool
+    """
+    assert _findings(suppressed, name="src/scheduler.py") == []
+    bare = """
+        def evict(alloc, owner, page):
+            alloc.free_page(owner, page)  # repro: noqa
+    """
+    assert _findings(bare, name="src/scheduler.py") == []
+
+
+RA302_SRC = """
+    class PageAllocator:
+        def grab(self, n):
+            self.pages.append(n)
+
+        def _internal(self):
+            self.pages.pop()
+"""
+
+RA302_COVERED_TESTS = """
+    def test_grab():
+        a = make_allocator()
+        a.grab(1)
+        a.check()
+"""
+
+RA302_UNCOVERED_TESTS = """
+    def test_other():
+        a = make_allocator()
+        a.check()
+"""
+
+
+def test_ra302_requires_check_asserting_coverage():
+    bad = _findings(RA302_SRC, name="src/pool.py",
+                    tests_src=RA302_UNCOVERED_TESTS)
+    assert {f.rule for f in bad} == {"RA302"}
+    assert "grab" in bad[0].message          # public mutator flagged
+    assert all("_internal" not in f.message for f in bad)
+    good = _findings(RA302_SRC, name="src/pool.py",
+                     tests_src=RA302_COVERED_TESTS)
+    assert good == []
+
+
+# --- RA4xx: plan verification --------------------------------------------------
+
+
+def test_ra401_rejects_corrupted_overlapping_layout():
+    mats, layout = plan_checks.corrupted_overlap_layout()
+    rules = {f.rule for f in plan_checks.verify_layout(mats, layout, "<t>")}
+    assert "RA401" in rules
+
+
+def test_ra401_real_layout_is_clean():
+    from repro.planner import WeightMatrix, pack_canvas
+
+    mats = [WeightMatrix("q", 96, 96, share_group="g"),
+            WeightMatrix("k", 96, 96, share_group="g"),
+            WeightMatrix("o", 200, 64)]
+    layout = pack_canvas(mats)
+    assert plan_checks.verify_layout(mats, layout, "<t>") == []
+
+
+def test_ra401_missing_coverage_detected():
+    from repro.planner import ChunkPlacement, PackedLayout, WeightMatrix
+
+    mats = [WeightMatrix("a", 64, 64)]
+    layout = PackedLayout(R=128, C=128,
+                          placements={"a": (ChunkPlacement(0, 0, 32, 64),)})
+    findings = plan_checks.verify_layout(mats, layout, "<t>")
+    assert any(f.rule == "RA401" and "unplaced" in f.message
+               for f in findings)
+
+
+def _fake_plan(macros, min_D_m, D_m, layers, on_chip, streamed):
+    return SimpleNamespace(
+        arch=SimpleNamespace(D_m=D_m),
+        allocation=SimpleNamespace(macros=macros, min_D_m=min_D_m),
+        workload=SimpleNamespace(
+            layers=[SimpleNamespace(name=n) for n in layers]),
+        on_chip_layers=[SimpleNamespace(name=n) for n in on_chip],
+        streamed_layers=frozenset(streamed))
+
+
+def test_ra402_rejects_overfull_macro_and_duplicate_layer():
+    col = SimpleNamespace(height=5, layer_names={"a"})
+    plan = _fake_plan(macros=((col, col),), min_D_m=10, D_m=8,
+                      layers=["a"], on_chip=["a"], streamed=())
+    rules = [f.rule for f in plan_checks.verify_packing_plan(plan, "<t>")]
+    assert rules.count("RA402") == 2     # occupancy > D_m AND dup layer
+
+
+def test_ra403_rejects_broken_streamed_split():
+    col = SimpleNamespace(height=2, layer_names={"a"})
+    plan = _fake_plan(macros=((col,),), min_D_m=2, D_m=8,
+                      layers=["a", "b"], on_chip=["a"], streamed=["a"])
+    rules = {f.rule for f in plan_checks.verify_packing_plan(plan, "<t>")}
+    assert "RA403" in rules
+
+
+def test_real_packing_plan_is_clean():
+    from repro.core.imc_arch import d_imc
+    from repro.core.packer import pack
+    from repro.core.workloads import resnet8
+
+    plan = pack(resnet8(), d_imc(4, 1024), bounded=True)
+    assert plan_checks.verify_packing_plan(plan, "<t>") == []
+
+
+def test_real_schedules_are_clean():
+    from repro.configs import REGISTRY
+
+    cfg = REGISTRY["codeqwen1.5-7b"].reduced()
+    assert plan_checks.verify_layer_schedule(cfg, "<t>") == []
+    assert plan_checks.verify_residency(cfg, "<t>") == []
+
+
+def test_ra404_rejects_wrong_double_buffer(monkeypatch):
+    import repro.planner.residency as residency
+
+    assert plan_checks.verify_double_buffer([3, 1, 4], "<t>") == []
+    monkeypatch.setattr(residency, "double_buffer_bytes", lambda s: 0)
+    findings = plan_checks.verify_double_buffer([3, 1, 4], "<t>")
+    assert [f.rule for f in findings] == ["RA404"]
+
+
+# --- CLI + repo self-check -----------------------------------------------------
+
+
+def test_cli_json_output_and_exit_code(tmp_path):
+    from repro.analysis import main
+
+    bad = tmp_path / "bad.py"
+    bad.write_text(textwrap.dedent(RA301_SRC))
+    out = tmp_path / "findings.json"
+    rc = main([str(bad), "--no-plans", "--json", str(out)])
+    assert rc == 1
+    rows = json.loads(out.read_text())
+    assert rows and rows[0]["rule"] == "RA301"
+    assert {"rule", "severity", "path", "line", "col",
+            "message"} <= rows[0].keys()
+
+
+def test_repo_is_analyzer_clean():
+    """The CI fast-gate contract: the analyzer (AST rules + plan
+    verification) exits 0 over the repo's own source tree."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         "src", "benchmarks", "examples"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, f"analyzer found issues:\n{r.stdout}\n{r.stderr}"

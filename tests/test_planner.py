@@ -48,7 +48,7 @@ def _check_layout_invariants(mats, layout):
         for p in chunks:
             spans.append((p.y_off, p.y_off + p.cols, name))
     spans.sort()
-    for (a0, a1, an), (b0, b1, bn) in zip(spans, spans[1:]):
+    for (_a0, a1, an), (b0, _b1, bn) in zip(spans, spans[1:]):
         assert a1 <= b0, (an, bn)
     # 3. tiles sharing row intervals must share the input (same group+slice)
     rows = {}

@@ -118,7 +118,7 @@ def test_cow_copies_exactly_one_page(n_holders, row):
     for o in range(2, n_holders + 1):   # other holders untouched
         assert tuple(sorted(a.owned(o))) == before[o]
     assert sorted(a.owned(writer)) \
-        == sorted([p for p in pages if p != target] + [new])
+        == sorted([*(p for p in pages if p != target), new])
     a.check()
 
 

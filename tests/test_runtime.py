@@ -363,7 +363,7 @@ def test_allocator_cow_copies_exactly_one_page():
     assert sorted(a.owned(2)) == sorted(row)
     assert sorted(a.owned(NEUTRAL_OWNER)) == sorted(row)
     assert sorted(a.owned(1)) \
-        == sorted([p for p in row if p != target] + [new])
+        == sorted([*(p for p in row if p != target), new])
     a.check()
 
 
