@@ -60,8 +60,10 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.kernels import ops, ref
+from repro.launch.cli import add_streaming_args
 from repro.models import get_model
 from repro.models.transformer import forward as dense_forward
+from repro.planner.residency import double_buffer_bytes
 from repro.runtime import (Engine, EngineConfig, FaultSchedule, FleetConfig,
                            FleetEngine, ModelPool, PoolConfig,
                            PoolEngineConfig, PooledEngine,
@@ -189,11 +191,12 @@ SMOKE_SLABS = (0.4,)
 
 
 def _pool_cfg(budget_kib: int, slab_frac: float, reload_bps: int,
-              slab_mode: str = "full") -> PoolConfig:
+              slab_mode: str = "full", quant: str = "off") -> PoolConfig:
     return PoolConfig(hbm_budget_bytes=budget_kib << 10,
                       slab_frac=slab_frac,
                       reload_bytes_per_step=reload_bps,
-                      hysteresis_steps=32, slab_mode=slab_mode)
+                      hysteresis_steps=32, slab_mode=slab_mode,
+                      quant=quant)
 
 
 def _pool_row(rep, plan, name: str) -> dict:
@@ -255,14 +258,41 @@ def _run_pool(cfgs, params, trace, pcfg, policy, stream, *,
     return rep, plan, eng
 
 
-def run_multi_tenant(frontier: str = "full") -> list[dict]:
+def _quant_stats(plan) -> dict:
+    """Plan-level compressed-streaming quantities per non-resident
+    model: the (precision-encoded) reload set, the 2-slice double-buffer
+    bytes of its reload schedule — the slab-granularity metric the quant
+    claims are made on — and what the slab actually reserves."""
+    out = {}
+    for e in plan.entries:
+        if e.residency == "resident":
+            continue
+        out[e.model_id] = {
+            "reload_bytes": e.reload_bytes,
+            "double_buffer_bytes": double_buffer_bytes(e.reload_schedule),
+            "slab_need": e.slab_need,
+        }
+    return out
+
+
+def _pool_tokens(rep) -> dict:
+    return {r.rid: tuple(r.generated) for r in rep.completed}
+
+
+def run_multi_tenant(frontier: str = "full", quant: str = "int8",
+                     reload_kib: int = 0, stream: str = "layer",
+                     slab_mode: str = "full") -> list[dict]:
+    # the frontier loops below reuse `stream`/`slab_mode` as loop
+    # variables; keep the CLI-requested values for the quant base leg
+    cli_stream, cli_slab_mode = stream, slab_mode
     cfgs, params, tenants = _zoo()
     trace = multi_tenant_trace(
         tenants, POOL_N_REQUESTS, mean_interarrival=MEAN_INTERARRIVAL,
         prompt_lens=(8, 16), gen_lens=(4, 8, 24), seed=3)
     # one clock with the kernel benches: the roofline decode-cell lower
     # bound times the off-chip DMA bandwidth, scaled to the reduced zoo
-    reload_bps = calibrated_reload_bytes_per_step(
+    # (overridable from the shared streaming CLI)
+    reload_bps = reload_kib * 1024 or calibrated_reload_bytes_per_step(
         (a, cfgs[a]) for a, _ in ZOO)
     base_cfg = _pool_cfg(POOL_BUDGET_KIB, POOL_SLAB_FRAC, reload_bps)
 
@@ -370,6 +400,70 @@ def run_multi_tenant(frontier: str = "full") -> list[dict]:
                     f"_{stream}_{slab_mode}")
                 row.update(budget_kib=budget_kib, slab_frac=slab)
                 rows.append(row)
+
+    # -- compressed weight streaming (quant axis) ------------------------
+    # Streamed slices travel int8/int4 with per-channel scales
+    # (kernels.dequant dequantizes in the epilogue; planner.quant_bytes
+    # is the byte model), so the reload set, the double-buffer pairs,
+    # and the restream traffic all shrink by the encoding ratio.
+    # Two legs: the base budget pins accounting + token equality per
+    # mode, and the PR-5 flip point (tightest budget x slab) shows the
+    # headline — rwkv6's working set compresses INTO the slab, so
+    # full-mode servability flips without the bounded restream tax.
+    qmodes = ("off", "int8", "int4", "auto") if frontier == "full" \
+        else ("off", quant if quant != "off" else "int8")
+    bmin, smin = min(budgets), min(slabs)
+    qbase = {}
+    for qm in qmodes:
+        # the base leg honours the shared streaming CLI (--stream /
+        # --slab-mode); CI and the nightly run the layer/full defaults,
+        # which is what check() pins ratios against
+        rep, plan, _ = _run_pool(
+            cfgs, params, trace,
+            _pool_cfg(POOL_BUDGET_KIB, POOL_SLAB_FRAC, reload_bps,
+                      cli_slab_mode, quant=qm),
+            "reload_aware", cli_stream)
+        qbase[qm] = (rep, plan)
+        row = _pool_row(rep, plan, f"serve_pool_quant/{qm}")
+        row.update(quant=qm, quant_stats=_quant_stats(plan))
+        rows.append(row)
+    for qm in qmodes:
+        for slab_mode in ("full", "bounded"):
+            rep, plan, _ = _run_pool(
+                cfgs, params, trace,
+                _pool_cfg(bmin, smin, reload_bps, slab_mode, quant=qm),
+                "reload_aware", "layer")
+            row = _pool_row(
+                rep, plan,
+                f"serve_pool_quant_frontier/b{bmin}_s{smin}"
+                f"_{qm}_{slab_mode}")
+            row.update(budget_kib=bmin, slab_frac=smin, quant=qm,
+                       quant_stats=_quant_stats(plan))
+            rows.append(row)
+
+    def _plan_totals(plan):
+        st = _quant_stats(plan)
+        return (sum(v["reload_bytes"] for v in st.values()),
+                sum(v["double_buffer_bytes"] for v in st.values()))
+
+    base_rep, base_plan = qbase["off"]
+    base_reload, base_db = _plan_totals(base_plan)
+    modes = {}
+    for qm in qmodes[1:]:
+        rep, plan = qbase[qm]
+        q_reload, q_db = _plan_totals(plan)
+        modes[qm] = {
+            "plan_reload_ratio": round(base_reload / max(q_reload, 1), 3),
+            "double_buffer_ratio": round(base_db / max(q_db, 1), 3),
+            "run_reload_ratio": round(
+                base_rep.reload_bytes / max(rep.reload_bytes, 1), 3),
+            "stall_steps": rep.stall_steps,
+            "same_tokens": _pool_tokens(rep) == _pool_tokens(base_rep),
+        }
+    rows.append({"name": "serve_pool_quant_speedup",
+                 "stream": cli_stream, "slab_mode": cli_slab_mode,
+                 "stall_steps_off": base_rep.stall_steps,
+                 "modes": modes})
     return rows
 
 
@@ -630,12 +724,18 @@ def _fleet_tokens(rep) -> dict:
 
 
 def run(scenario: str = "all", frontier: str = "full",
-        smoke: bool = False) -> list[dict]:
+        smoke: bool = False, quant: str = "int8",
+        reload_kib: int = 0, stream: str = "layer",
+        slab_mode: str = "full") -> list[dict]:
+    if smoke:                           # --smoke shrinks every scenario
+        frontier = "smoke"
     rows = []
     if scenario in ("all", "engine_vs_static"):
         rows += run_engine_vs_static()
     if scenario in ("all", "multi_tenant"):
-        rows += run_multi_tenant(frontier)
+        rows += run_multi_tenant(frontier, quant=quant,
+                                 reload_kib=reload_kib,
+                                 stream=stream, slab_mode=slab_mode)
     if scenario in ("all", "shared_prefix"):
         rows += run_shared_prefix(smoke)
     if scenario in ("all", "fleet_chaos"):
@@ -749,6 +849,64 @@ def check(rows) -> None:
             f"b{bmin}_s{smin}: {point['bounded'][1]} vs {point['full'][1]}"
         assert point["bounded"][0]["restream_bytes"] > 0, \
             "bounded slab never re-streamed (the trade is not exercised)"
+        # compressed weight streaming: quantized slices must shrink the
+        # planned reload set and the double-buffer pairs by the encoding
+        # ratio (int8 payload is exactly 1/2 + per-channel scales, hence
+        # the 1.9 floor; int4 packs two rows per byte), without changing
+        # a single generated token at the base budget.
+        qsp = [x for x in rows if x["name"] == "serve_pool_quant_speedup"]
+        (qs,) = qsp
+        # auto's floor equals int8's: the reduced configs keep so few
+        # layers that the sensitivity policy (embed/head/first/last at
+        # int8) can cover a whole model; its gain over int8 — interior
+        # and expert slices at int4 — is asserted as an ordering below
+        plan_floor = {"int8": 1.9, "int4": 3.5, "auto": 1.9}
+        for qm, m in qs["modes"].items():
+            floor = plan_floor[qm]
+            assert m["plan_reload_ratio"] >= floor, \
+                f"quant {qm}: planned reload bytes only " \
+                f"{m['plan_reload_ratio']}x smaller (need {floor}x)"
+            assert m["double_buffer_ratio"] >= floor, \
+                f"quant {qm}: double-buffer slab only " \
+                f"{m['double_buffer_ratio']}x smaller (need {floor}x)"
+            if qs["stream"] == "layer" and qs["slab_mode"] == "full":
+                assert m["same_tokens"], \
+                    f"quant {qm}: streamed quantization changed the " \
+                    "generated tokens (byte accounting must not leak " \
+                    "into decode math)"
+                assert m["stall_steps"] <= qs["stall_steps_off"], \
+                    f"quant {qm}: fewer reload bytes but MORE stalls " \
+                    f"({m['stall_steps']} vs {qs['stall_steps_off']})"
+        if {"int8", "int4", "auto"} <= set(qs["modes"]):
+            i8, i4, au = (qs["modes"][k]["plan_reload_ratio"]
+                          for k in ("int8", "int4", "auto"))
+            assert i8 <= au <= i4, \
+                f"auto policy not between int8 and int4: {i8}/{au}/{i4}"
+        # the PR-5 flip point: compression moves >= 1 tenant's working
+        # set INSIDE the slab, so full-mode servability flips without
+        # paying the bounded restream tax — and in bounded mode the
+        # restream traffic (charged per decode burst) collapses.
+        qf = {(x["quant"], x["slab_mode"]): x for x in rows
+              if x["name"].startswith("serve_pool_quant_frontier/")}
+        qon = next(qm for qm in qs["modes"] if (qm, "full") in qf)
+        off_full, on_full = qf[("off", "full")], qf[(qon, "full")]
+        off_srv = set(off_full["servable_models"])
+        flipped = set(on_full["servable_models"]) - off_srv
+        assert len(flipped) >= 1, \
+            f"quant {qon}: no additional tenant became servable at the " \
+            "tightest frontier point"
+        assert on_full["new_tokens"] > off_full["new_tokens"], \
+            f"quant {qon}: the newly servable tenant generated nothing"
+        off_b, on_b = qf[("off", "bounded")], qf[(qon, "bounded")]
+        assert on_b["restream_bytes"] < off_b["restream_bytes"], \
+            f"quant {qon}: bounded restream traffic did not shrink " \
+            f"({on_b['restream_bytes']} vs {off_b['restream_bytes']})"
+        off_moved = off_b["reload_bytes"] + off_b["restream_bytes"]
+        on_moved = on_b["reload_bytes"] + on_b["restream_bytes"]
+        assert off_moved / max(on_moved, 1) >= 2.0, \
+            f"quant {qon}: bounded-mode DMA traffic only " \
+            f"{off_moved / max(on_moved, 1):.2f}x smaller (need 2x: " \
+            "compression should also collapse the restream tax)"
     sp = sorted((r for r in rows
                  if r["name"].startswith("serve_shared_prefix/o")),
                 key=lambda r: r["overlap"])
@@ -825,10 +983,14 @@ if __name__ == "__main__":
                     help="budget x slab sweep size (smoke: one point, "
                          "for CI)")
     ap.add_argument("--smoke", action="store_true",
-                    help="fleet_chaos at 1x volume with a single kill "
-                         "(for CI)")
+                    help="CI size: frontier at one point, fleet_chaos "
+                         "at 1x volume with a single kill, quant axis "
+                         "at off + --quant only")
+    add_streaming_args(ap)     # shared with launch.serve: --quant etc.
     args = ap.parse_args()
-    rows = run(args.scenario, args.frontier, args.smoke)
+    rows = run(args.scenario, args.frontier, args.smoke,
+               quant=args.quant, reload_kib=args.reload_kib_per_step,
+               stream=args.stream, slab_mode=args.slab_mode)
     for r in rows:
         print(json.dumps(r))
     check(rows)

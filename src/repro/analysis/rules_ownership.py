@@ -6,8 +6,10 @@ conservation) that only hold because a small set of modules is allowed
 to mutate them: the pager itself, the engines, the arena, and the
 prefix index. RA301 rejects mutation calls from anywhere else; RA302
 rejects growing the mutation surface without invariant coverage — every
-public mutating method on those classes must be exercised by at least
-one test that also asserts ``check()``.
+public mutating method on those classes (and on the ``DmaChannel``
+transfer ledger, whose FIFO/byte-conservation invariants back the
+streaming benchmarks) must be exercised by at least one test that also
+asserts ``check()``.
 """
 
 from __future__ import annotations
@@ -23,7 +25,7 @@ from .core import Finding, Project, Rule, register
 OWNING_MODULES = {"kv_pager.py", "engine.py", "arena.py", "prefix_index.py"}
 OWNED_CALLS = {"free_page", "free_owner", "share"}
 
-GUARDED_CLASSES = {"PageAllocator", "DeviceArena"}
+GUARDED_CLASSES = {"PageAllocator", "DeviceArena", "DmaChannel"}
 MUTATOR_METHOD_CALLS = {"append", "pop", "add", "remove", "discard", "clear",
                         "update", "extend", "insert", "setdefault",
                         "popitem"}
@@ -62,9 +64,9 @@ class AllocatorOwnership(Rule):
 @register
 class UncheckedMutator(Rule):
     id = "RA302"
-    doc = ("public mutating method on PageAllocator/DeviceArena with no "
-           "test that references it AND asserts check() — invariant "
-           "surface grew without invariant coverage")
+    doc = ("public mutating method on PageAllocator/DeviceArena/"
+           "DmaChannel with no test that references it AND asserts "
+           "check() — invariant surface grew without invariant coverage")
 
     def analyze(self, project: Project) -> list[Finding]:
         tests = project.test_modules

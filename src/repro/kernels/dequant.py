@@ -1,0 +1,261 @@
+"""Dequant epilogue for the packed canvas: quantized blocks in, fp out.
+
+Compressed weight streaming (planner.residency ``quant_bytes``) moves
+layer slices over the DMA as int8 or int4 payloads plus per-channel bf16
+scales. This module is the compute half of that trade: the packed-canvas
+block loop consumes the QUANTIZED blocks directly and dequantizes inside
+the kernel, the way ``packed_canvas_matmul`` already fuses
+bias/activation — the bf16 weight plane is never materialized in HBM, so
+the slab holds exactly the bytes the DMA delivered.
+
+Encoding, per 128x128 MXU block and output channel (column) c:
+
+  * scale[g, c] = max(|W[g, :, c]|) / qmax   (symmetric, per-channel);
+  * int8: q = round(W / scale) in [-127, 127], stored as int8
+    (G, 128, 128);
+  * int4: q in [-8, 7] stored biased by +8 in [0, 15], row pairs
+    (2r, 2r+1) packed into one byte (low, high nibble): (G, 64, 128)
+    uint8 — halving the payload again.
+
+``quantize_blocks``/``dequantize_blocks`` are the pure-jnp oracle pair
+the Pallas kernel is pinned against; ``packed_canvas_matmul_dq`` is the
+kernel. Model-layout helpers ``quantize_tensor``/``dequantize_tensor``
+apply the same per-channel encoding to arbitrary 2D weights for
+output-quality differentials.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .packed_canvas import (ACTIVATIONS, BLK, META_CB, META_FIRST,
+                            META_KB, META_LAST)
+
+#: symmetric integer range per precision
+QMAX = {"int8": 127, "int4": 7}
+
+
+def _scales(w: jax.Array, precision: str) -> jax.Array:
+    """Per-(block, output-channel) scales, f32, never zero."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
+    return jnp.maximum(amax / QMAX[precision], 1e-12)
+
+
+def quantize_blocks(w_blocks: jax.Array, precision: str,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(G, 128, 128) fp blocks -> (payload, scales (G, 128) f32).
+
+    payload: int8 (G, 128, 128) for ``int8``; uint8 (G, 64, 128) with
+    two biased nibbles per byte for ``int4``.
+    """
+    assert precision in QMAX, precision
+    w = jnp.asarray(w_blocks)
+    assert w.ndim == 3 and w.shape[1] == BLK and w.shape[2] == BLK, w.shape
+    scales = _scales(w, precision)
+    q = jnp.round(w.astype(jnp.float32) / scales[:, None, :])
+    qmax = QMAX[precision]
+    q = jnp.clip(q, -qmax - 1 if precision == "int4" else -qmax, qmax)
+    if precision == "int8":
+        return q.astype(jnp.int8), scales
+    biased = (q + 8).astype(jnp.uint8)             # [-8, 7] -> [0, 15]
+    lo, hi = biased[:, 0::2, :], biased[:, 1::2, :]
+    return lo | (hi << 4), scales
+
+
+def dequantize_blocks(payload: jax.Array, scales: jax.Array,
+                      precision: str) -> jax.Array:
+    """Oracle inverse of ``quantize_blocks`` -> f32 (G, 128, 128)."""
+    assert precision in QMAX, precision
+    s = scales.astype(jnp.float32)[:, None, :]
+    if precision == "int8":
+        return payload.astype(jnp.float32) * s
+    lo = (payload & jnp.uint8(0xF)).astype(jnp.float32) - 8.0
+    hi = ((payload >> 4) & jnp.uint8(0xF)).astype(jnp.float32) - 8.0
+    G = payload.shape[0]
+    w = jnp.stack([lo, hi], axis=2).reshape(G, BLK, BLK)
+    return w * s
+
+
+def _deq(wq, scale, precision: str):
+    """In-kernel dequant of one block: wq is the (unit-leading-axis
+    stripped) payload block, scale the (BLK,) per-channel scales."""
+    s = scale.astype(jnp.float32)[None, :]
+    if precision == "int8":
+        return wq.astype(jnp.float32) * s
+    lo = (wq & jnp.uint8(0xF)).astype(jnp.float32) - 8.0
+    hi = ((wq >> 4) & jnp.uint8(0xF)).astype(jnp.float32) - 8.0
+    return jnp.stack([lo, hi], axis=1).reshape(BLK, BLK) * s
+
+
+def _kernel_dq(meta_ref, x_ref, wq_ref, scale_ref, o_ref, acc_ref, *,
+               precision: str):
+    g = pl.program_id(1)
+
+    @pl.when(meta_ref[META_FIRST, g] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _deq(wq_ref[0], scale_ref[0], precision)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(meta_ref[META_LAST, g] == 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _kernel_dq_epilogue(meta_ref, x_ref, wq_ref, scale_ref, bias_ref,
+                        res_ref, o_ref, acc_ref, *, precision: str,
+                        activation: str):
+    g = pl.program_id(1)
+
+    @pl.when(meta_ref[META_FIRST, g] == 1)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = _deq(wq_ref[0], scale_ref[0], precision)
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...].astype(jnp.float32), w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(meta_ref[META_LAST, g] == 1)
+    def _flush():
+        y = acc_ref[...] + bias_ref[0].astype(jnp.float32)
+        y = ACTIVATIONS[activation](y)
+        y = y + res_ref[...].astype(jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def packed_canvas_matmul_dq(x_packed: jax.Array, wq_blocks: jax.Array,
+                            scales: jax.Array, meta: jax.Array, *,
+                            precision: str, c_blocks: int | None = None,
+                            bb: int = 128, interpret: bool = False,
+                            bias: jax.Array | None = None,
+                            residual: jax.Array | None = None,
+                            activation: str | None = None) -> jax.Array:
+    """``packed_canvas_matmul`` over QUANTIZED blocks: dequant is fused
+    into the block loop (each block is expanded once, in VMEM, right
+    before its MXU pass), and the optional bias/activation/residual
+    epilogue fuses at the flush exactly as in the fp kernel.
+
+    wq_blocks/scales from ``quantize_blocks``; meta (4, G) from
+    ``build_block_meta``; the fp-kernel contract otherwise applies.
+    """
+    assert precision in QMAX, precision
+    if c_blocks is None:                 # only valid outside a jit trace
+        c_blocks = int(np.asarray(meta)[META_CB].max()) + 1
+    if bias is None and residual is None and activation is None:
+        return _matmul_dq(x_packed, wq_blocks, scales, meta,
+                          precision=precision, c_blocks=c_blocks, bb=bb,
+                          interpret=interpret)
+    activation = activation or "none"
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    B = x_packed.shape[0]
+    C = c_blocks * BLK
+    if bias is None:
+        bias = jnp.zeros((C,), x_packed.dtype)
+    if residual is None:
+        residual = jnp.zeros((B, C), x_packed.dtype)
+    return _matmul_dq_epilogue(x_packed, wq_blocks, scales, meta, bias,
+                               residual, precision=precision,
+                               c_blocks=c_blocks, bb=bb,
+                               activation=activation, interpret=interpret)
+
+
+def _grid_spec_dq(G: int, B: int, bb: int, precision: str, *, extra_in=()):
+    """The packed-canvas grid spec with the weight BlockSpec swapped for
+    the quantized payload's shape and the per-channel scales riding in
+    as one extra (1, BLK) input per block."""
+    rows = BLK if precision == "int8" else BLK // 2
+    return pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B // bb, G),
+        in_specs=[
+            pl.BlockSpec((bb, BLK), lambda b, g, m: (b, m[META_KB, g])),
+            pl.BlockSpec((1, rows, BLK), lambda b, g, m: (g, 0, 0)),
+            pl.BlockSpec((1, BLK), lambda b, g, m: (g, 0)),
+            *extra_in,
+        ],
+        out_specs=pl.BlockSpec((bb, BLK),
+                               lambda b, g, m: (b, m[META_CB, g])),
+        scratch_shapes=[pltpu.VMEM((bb, BLK), jnp.float32)],
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "c_blocks", "bb",
+                                             "interpret"))
+def _matmul_dq(x_packed, wq_blocks, scales, meta, *, precision: str,
+               c_blocks: int, bb: int, interpret: bool) -> jax.Array:
+    B = x_packed.shape[0]
+    G = wq_blocks.shape[0]
+    C = c_blocks * BLK
+    return pl.pallas_call(
+        functools.partial(_kernel_dq, precision=precision),
+        grid_spec=_grid_spec_dq(G, B, bb, precision),
+        out_shape=jax.ShapeDtypeStruct((B, C), x_packed.dtype),
+        interpret=interpret,
+    )(meta, x_packed, wq_blocks, scales)
+
+
+@functools.partial(jax.jit, static_argnames=("precision", "c_blocks", "bb",
+                                             "activation", "interpret"))
+def _matmul_dq_epilogue(x_packed, wq_blocks, scales, meta, bias, residual,
+                        *, precision: str, c_blocks: int, bb: int,
+                        activation: str, interpret: bool) -> jax.Array:
+    B = x_packed.shape[0]
+    G = wq_blocks.shape[0]
+    C = c_blocks * BLK
+    extra = (
+        pl.BlockSpec((1, BLK), lambda b, g, m: (0, m[META_CB, g])),
+        pl.BlockSpec((bb, BLK), lambda b, g, m: (b, m[META_CB, g])),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_dq_epilogue, precision=precision,
+                          activation=activation),
+        grid_spec=_grid_spec_dq(G, B, bb, precision, extra_in=extra),
+        out_shape=jax.ShapeDtypeStruct((B, C), x_packed.dtype),
+        interpret=interpret,
+    )(meta, x_packed, wq_blocks, scales, bias.reshape(1, C), residual)
+
+
+# --- model-layout helpers (output-quality differentials) --------------------
+
+
+def quantize_tensor(w: jax.Array, precision: str,
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric quantization of a model-layout 2D
+    weight (in_dim, out_dim) WITHOUT block packing: returns (q f32
+    integer grid, scales (out_dim,) f32). Used to measure end-to-end
+    output quality of a precision choice; the byte model for it lives in
+    planner.residency.quant_bytes."""
+    assert precision in QMAX, precision
+    w = jnp.asarray(w)
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+    scales = jnp.maximum(amax / QMAX[precision], 1e-12)
+    qmax = QMAX[precision]
+    lo = -qmax - 1 if precision == "int4" else -qmax
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scales), lo, qmax)
+    return q, scales
+
+
+def dequantize_tensor(q: jax.Array, scales: jax.Array,
+                      dtype=jnp.float32) -> jax.Array:
+    return (q * scales).astype(dtype)
+
+
+def fake_quant(w: jax.Array, precision: str) -> jax.Array:
+    """Round-trip a model-layout 2D weight through ``precision`` (the
+    standard quality-eval trick: same values the kernel would compute,
+    fp layout)."""
+    if precision in ("fp", "off"):
+        return w
+    q, s = quantize_tensor(w, precision)
+    return dequantize_tensor(q, s, w.dtype)

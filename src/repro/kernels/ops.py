@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import decode_attention as _dec
+from . import dequant as _dq
 from . import flash_attention as _fa
 from . import packed_canvas as _pc
 from . import packed_mvm as _pm
@@ -149,6 +150,29 @@ def packed_canvas_matmul(x_packed, w_blocks, meta, *, impl: str = "auto",
                                     interpret=(impl == "interpret"),
                                     bias=bias, residual=residual,
                                     activation=activation)
+
+
+def packed_canvas_matmul_dq(x_packed, wq_blocks, scales, meta, *,
+                            precision: str, impl: str = "auto", bb=128,
+                            bias=None, residual=None, activation=None):
+    """Packed-canvas MVM over quantized blocks (compressed weight
+    streaming): int8/int4 payload + per-channel scales from
+    ``dequant.quantize_blocks``, dequantized inside the block loop.
+
+    The ref path dequantizes via the jnp oracle and reuses the fp ref —
+    bit-identical semantics to the kernel's in-loop dequant, which is
+    exactly what the golden differentials pin.
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        w_blocks = _dq.dequantize_blocks(wq_blocks, scales, precision)
+        return packed_canvas_matmul(
+            x_packed, w_blocks.astype(x_packed.dtype), meta, impl="ref",
+            bb=bb, bias=bias, residual=residual, activation=activation)
+    bb = min(bb, x_packed.shape[0])
+    return _dq.packed_canvas_matmul_dq(
+        x_packed, wq_blocks, scales, meta, precision=precision, bb=bb,
+        interpret=(impl == "interpret"), bias=bias, residual=residual,
+        activation=activation)
 
 
 build_block_meta = _pc.build_block_meta

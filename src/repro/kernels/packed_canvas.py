@@ -83,6 +83,11 @@ def _kernel_epilogue(meta_ref, x_ref, w_ref, bias_ref, res_ref, o_ref,
 
 
 _META_CACHE: dict[tuple, tuple[np.ndarray, np.ndarray]] = {}
+# id() fast path: maps id(blocks) -> (strong ref to blocks, result). The
+# strong reference keeps the keyed array alive, so its id cannot be
+# recycled by another object while the entry exists; the `is` re-check on
+# hit makes a stale id merely miss, never alias.
+_META_ID_CACHE: dict[int, tuple[np.ndarray, tuple]] = {}
 
 
 def build_block_meta(blocks: np.ndarray) -> np.ndarray:
@@ -92,27 +97,39 @@ def build_block_meta(blocks: np.ndarray) -> np.ndarray:
     The caller guarantees every cb in [0, C/128) appears at least once
     (y_packed has no gaps), so no sentinel entries are needed.
 
-    Memoized on the block-coord bytes: a serving layout's meta is built
-    once per process lifetime, not once per step. Callers must treat the
-    returned arrays as read-only.
+    Memoized on the block-coord bytes — a serving layout's meta is built
+    once per process lifetime, not once per step — with an ``id()`` fast
+    path in front so the decode hot loop, which passes the SAME layout
+    array every step, skips hashing the full block table. Callers must
+    treat the returned arrays as read-only and must not mutate a block
+    table in place after passing it here (serving layouts are immutable).
     """
-    blocks = np.asarray(blocks, np.int32)
-    key = (blocks.shape, blocks.tobytes())
-    hit = _META_CACHE.get(key)
-    if hit is not None:
-        return hit
-    if len(_META_CACHE) >= 256:             # bound like pack_canvas's lru
-        _META_CACHE.pop(next(iter(_META_CACHE)))
-    order = np.lexsort((blocks[:, 0], blocks[:, 1]))
-    kb, cb = blocks[order, 0], blocks[order, 1]
-    first = np.ones_like(cb)
-    first[1:] = cb[1:] != cb[:-1]
-    last = np.ones_like(cb)
-    last[:-1] = cb[:-1] != cb[1:]
-    meta = np.ascontiguousarray(
-        np.stack([kb, cb, first, last]).astype(np.int32))
-    _META_CACHE[key] = (meta, order)
-    return meta, order
+    if isinstance(blocks, np.ndarray):
+        hit = _META_ID_CACHE.get(id(blocks))
+        if hit is not None and hit[0] is blocks:
+            return hit[1]
+    else:
+        blocks = np.asarray(blocks, np.int32)
+    key = (blocks.shape, blocks.astype(np.int32, copy=False).tobytes())
+    out = _META_CACHE.get(key)
+    if out is None:
+        if len(_META_CACHE) >= 256:         # bound like pack_canvas's lru
+            _META_CACHE.pop(next(iter(_META_CACHE)))
+        b = blocks.astype(np.int32, copy=False)
+        order = np.lexsort((b[:, 0], b[:, 1]))
+        kb, cb = b[order, 0], b[order, 1]
+        first = np.ones_like(cb)
+        first[1:] = cb[1:] != cb[:-1]
+        last = np.ones_like(cb)
+        last[:-1] = cb[:-1] != cb[1:]
+        meta = np.ascontiguousarray(
+            np.stack([kb, cb, first, last]).astype(np.int32))
+        out = (meta, order)
+        _META_CACHE[key] = out
+    if len(_META_ID_CACHE) >= 256:
+        _META_ID_CACHE.pop(next(iter(_META_ID_CACHE)))
+    _META_ID_CACHE[id(blocks)] = (blocks, out)
+    return out
 
 
 def packed_canvas_matmul(x_packed: jax.Array, w_blocks: jax.Array,

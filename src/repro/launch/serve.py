@@ -56,6 +56,7 @@ from ..runtime import (Engine, EngineConfig, ModelPool, PoolConfig,
                        multi_tenant_trace, poisson_trace,
                        shifting_mix_trace, vlm_extras_fn)
 from . import sharding as sh
+from .cli import add_streaming_args
 from .mesh import make_host_mesh, make_production_mesh
 from .steps import make_prefill_step, make_serve_step
 
@@ -228,7 +229,8 @@ def _zoo_setup(args):
     pcfg = PoolConfig(hbm_budget_bytes=budget, slab_frac=s,
                       reload_bytes_per_step=reload_bps,
                       hysteresis_steps=args.hysteresis,
-                      slab_mode=args.slab_mode)
+                      slab_mode=args.slab_mode,
+                      quant=args.quant)
     return zoo, cfgs, params, tenants, pcfg
 
 
@@ -295,18 +297,7 @@ def main(argv=None):
                     help="pool mode model-zoo spec: arch[:share],..")
     ap.add_argument("--policy", default="reload_aware",
                     choices=("reload_aware", "round_robin"))
-    ap.add_argument("--stream", default="layer",
-                    choices=("layer", "model"),
-                    help="reload granularity: 'layer' overlaps the "
-                         "per-layer schedule behind compute, 'model' "
-                         "charges the whole reload as serial stalls")
-    ap.add_argument("--slab-mode", default="full",
-                    choices=("full", "bounded"),
-                    help="slab reservation per hot streamed model: "
-                         "'full' keeps the whole reload working set, "
-                         "'bounded' keeps a 2-slice double buffer and "
-                         "re-streams the rest per decode burst "
-                         "(requires --stream layer)")
+    add_streaming_args(ap)          # --stream/--slab-mode/--reload-kib/--quant
     ap.add_argument("--repartition", default="off",
                     choices=("off", "epoch"),
                     help="KV page leases: 'off' freezes the init-time "
@@ -324,9 +315,6 @@ def main(argv=None):
                     help="pool HBM budget (0 -> auto-size from the zoo)")
     ap.add_argument("--slab-frac", type=float, default=0.5,
                     help="pool budget fraction reserved for weight swaps")
-    ap.add_argument("--reload-kib-per-step", type=int, default=0,
-                    help="weight-reload bandwidth in KiB per engine step "
-                         "(0 -> calibrate from the roofline decode cells)")
     ap.add_argument("--hysteresis", type=int, default=32,
                     help="min steps a model stays hot before eviction")
     ap.add_argument("--rr-quantum", type=int, default=16,

@@ -27,6 +27,64 @@ from collections.abc import Iterable
 
 GiB = 1 << 30
 
+# --- compressed streaming: per-slice precision + quantized byte accounting -----
+
+#: streaming quantization modes (the CLI surface): ``off`` streams the
+#: bf16 serving copy verbatim; ``int8``/``int4`` quantize every streamed
+#: slice; ``auto`` picks per layer by the sensitivity/byte-savings policy
+#: (``stream_precisions``).
+QUANT_MODES = ("off", "int8", "int4", "auto")
+
+#: params covered by one per-channel scale group — matches the kernel's
+#: per-output-channel scales on 128x128 MXU blocks (kernels.dequant).
+SCALE_GROUP = 128
+SCALE_BYTES = 2                         # bf16 scales
+
+_QUANT_BITS = {"int8": 8, "int4": 4}
+
+
+def quant_bytes(fp_nbytes: int, precision: str, param_bytes: int = 2) -> int:
+    """Stored bytes of ``fp_nbytes`` of bf16 weights re-encoded at
+    ``precision``: the integer payload plus one bf16 scale per
+    ``SCALE_GROUP`` params (the kernel's per-channel block scales).
+
+    ``"fp"`` is the identity. int8 lands at ~1.97x smaller, int4 at
+    ~3.9x — the scale overhead is 1/64 of the fp bytes either way.
+    """
+    if precision == "fp" or fp_nbytes == 0:
+        return fp_nbytes
+    bits = _QUANT_BITS[precision]
+    payload = -(-fp_nbytes * bits // (8 * param_bytes))
+    scales = SCALE_BYTES * -(-fp_nbytes // (param_bytes * SCALE_GROUP))
+    return payload + scales
+
+
+def stream_precisions(names, quant: str) -> tuple[str, ...]:
+    """Per-slice streaming precision for a ``layer_schedule`` slice-name
+    sequence — LRMP's per-layer mixed precision, chosen by a simple
+    sensitivity/byte-savings rule instead of a calibration run:
+
+      * ``off``            -> everything ``fp``;
+      * ``int8``/``int4``  -> every slice at that precision;
+      * ``auto``           -> the quality-sensitive boundary slices
+        (embed table, lm head, first and last decode layer: the ends of
+        the network where quantization error has no depth to wash out)
+        keep int8, everything interior — including routed expert slices,
+        whose reuse per byte is the lowest in the model — drops to int4.
+    """
+    assert quant in QUANT_MODES, quant
+    names = list(names)
+    if quant == "off":
+        return tuple("fp" for _ in names)
+    if quant in _QUANT_BITS:
+        return tuple(quant for _ in names)
+    layers = sorted({n.split("/")[0] for n in names
+                     if n.startswith("layer")})
+    sensitive = {"embed", "head"}
+    if layers:
+        sensitive |= {layers[0], layers[-1]}
+    return tuple("int8" if n in sensitive else "int4" for n in names)
+
 
 @dataclasses.dataclass(frozen=True)
 class ParamTensor:
@@ -97,13 +155,22 @@ def weight_inventory(cfg) -> list[ParamTensor]:
 class LayerSlice:
     """One forward-order slice of a model's serving weight copy — the unit
     of layer-granular streaming (fetch slice k+1 while slice k computes,
-    the paper's folded-tile pipelining at serving scale)."""
+    the paper's folded-tile pipelining at serving scale).
+
+    ``nbytes`` is always the bf16 (fp) size; ``precision`` is the
+    encoding the slice travels over DMA in, and ``stream_nbytes`` the
+    bytes that encoding actually moves (``quant_bytes``)."""
     name: str
     nbytes: int
+    precision: str = "fp"
+
+    def stream_nbytes(self, param_bytes: int = 2) -> int:
+        return quant_bytes(self.nbytes, self.precision, param_bytes)
 
 
 def layer_schedule(cfg, param_bytes: int = 2,
                    include: frozenset[str] | set[str] | None = None,
+                   quant: str = "off",
                    ) -> tuple[LayerSlice, ...]:
     """Ordered per-layer byte schedule of the serving weight copy.
 
@@ -125,6 +192,11 @@ def layer_schedule(cfg, param_bytes: int = 2,
     ``weight_inventory`` tensor names while keeping the slice structure
     aligned, so a pinned-tensor subset can be subtracted slice-by-slice
     from the full schedule.
+
+    ``quant`` stamps each slice with its streaming precision via
+    ``stream_precisions``; slice ``nbytes`` stay fp so byte conservation
+    against ``weight_inventory`` and include-subset alignment hold
+    regardless of mode — quantized sizes live in ``stream_nbytes``.
     """
     inv = weight_inventory(cfg)
     if include is not None:
@@ -159,7 +231,9 @@ def layer_schedule(cfg, param_bytes: int = 2,
                               base + (1 if i < rem else 0))
                    for i in range(L)]
     slices.append(LayerSlice("head", tail))
-    return tuple(slices)
+    precs = stream_precisions((s.name for s in slices), quant)
+    return tuple(dataclasses.replace(s, precision=p)
+                 for s, p in zip(slices, precs))
 
 
 def double_buffer_bytes(schedule) -> int:

@@ -3,6 +3,7 @@ arrival-trace scheduler, multi-tenant model pool, the replicated fleet
 tier with chaos-tested failover, and the elastic training supervisor."""
 
 from .arena import ArenaConfig, DeviceArena, partition_pages
+from .dma import DmaChannel, WeightStream
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
                      HybridBackend, LatentBackend, PagedTransformerBackend,
                      PoolEngineConfig, PooledEngine, PooledReport,
@@ -33,6 +34,7 @@ __all__ = ["ArenaConfig", "DeviceArena",
            "partition_pages", "PrefixIndex",
            "ModelPool", "ModelEntry", "PoolConfig", "PoolError", "PoolPlan",
            "model_weight_bytes", "calibrated_reload_bytes_per_step",
+           "DmaChannel", "WeightStream",
            "Request", "Scheduler", "MultiQueueScheduler",
            "poisson_trace", "multi_tenant_trace", "shifting_mix_trace",
            "diurnal_trace", "shared_prefix_trace",

@@ -1689,7 +1689,7 @@ class PooledEngine:
                 head = pool.stream_head
                 rep.stall_steps += 1
                 rep.stall_steps_by_model[head] += 1
-            pool.stream_tick(pool.pcfg.reload_bytes_per_step)
+            pool.stream_tick()      # one step of the DMA channel's clock
 
         # -- arena bookkeeping: watermarks + epoch repartition -------
         # Shrink floor: an ADMITTED request was judged feasible against

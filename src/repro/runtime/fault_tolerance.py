@@ -41,6 +41,7 @@ from collections.abc import Callable
 from typing import Any
 
 from ..checkpoint import CheckpointManager
+from .dma import DmaChannel
 
 
 class StepTimeout(RuntimeError):
@@ -285,12 +286,18 @@ class TrainingSupervisor:
                  cfg: ElasticConfig | None = None, *,
                  on_shrink: Callable[[int], Any] | None = None,
                  clock: Callable[[], float] = time.monotonic,
-                 faults: FaultSchedule | None = None):
+                 faults: FaultSchedule | None = None,
+                 dma: DmaChannel | None = None):
         self.mgr = manager
         self.cfg = cfg or ElasticConfig()
         self.on_shrink = on_shrink
         self.clock = clock
         self.faults = faults or FaultSchedule()
+        #: optional weight-streaming channel: injected ``dma`` chaos
+        #: events degrade its clock for their window (the same DmaChannel
+        #: object the serving fleet's replicas mutate), restoring to full
+        #: bandwidth when no event is live
+        self.dma = dma
         self._detector = StragglerDetector(self.cfg.straggler_factor,
                                            self.cfg.straggler_window)
         self._fired: set[FaultEvent] = set()
@@ -318,6 +325,9 @@ class TrainingSupervisor:
         while step < start_step + num_steps:
             t0 = self.clock()
             try:
+                if self.dma is not None:
+                    self.dma.degrade(
+                        max(1.0, self.faults.factor("dma", "train", step)))
                 for ev in self.faults.events_at(step, "train"):
                     if ev.kind == "kill" and ev not in self._fired:
                         self._fired.add(ev)

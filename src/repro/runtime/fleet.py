@@ -256,16 +256,18 @@ class _Replica:
         self.flagged = False
         self.credit = 1.0              # speed credit (straggle divides it)
         self.dma_factor = 1.0
-        self._base_clock = pcfg.reload_bytes_per_step
         self._last_advance: int | None = None
         self.ticks_alive = 0
         self.idle_ticks = 0
 
     def apply_dma(self, factor: float) -> None:
+        # chaos and recovery go through the pool's DmaChannel — the same
+        # object the supervisor's degraded-link path drives — so the
+        # effective clock composes with any re-calibration instead of
+        # overwriting it
         if factor != self.dma_factor:
             self.dma_factor = factor
-            self.pool.set_reload_clock(
-                max(1, int(self._base_clock // factor)))
+            self.pool.dma.degrade(max(1.0, float(factor)))
 
     def tick(self, t: int, speed_factor: float) -> bool:
         """Advance up to one engine step, rate-limited by the straggle

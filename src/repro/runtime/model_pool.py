@@ -32,8 +32,10 @@ import json
 import os
 import statistics
 
-from ..planner.residency import (double_buffer_bytes, layer_schedule,
+from ..planner.residency import (QUANT_MODES, double_buffer_bytes,
+                                 layer_schedule, quant_bytes,
                                  weight_inventory)
+from .dma import DmaChannel
 
 KiB = 1 << 10
 
@@ -120,6 +122,13 @@ class PoolConfig:
     (re-streaming is never free, so the trade is only paid where it buys
     servability). Bounded mode requires layer-granular streaming (the
     double buffer IS the layer prefetch buffer).
+
+    ``quant`` streams weight slices quantized (per-channel-scaled int8 /
+    int4, or the planner's per-layer ``auto`` policy) and dequantizes in
+    the kernel epilogue (``kernels.dequant``): pinned tensors stay bf16
+    in HBM, but every RELOAD byte — the slab working set, the double
+    buffer, the restream traffic — shrinks by the encoding's ratio
+    (~1.97x int8, ~3.9x int4).
     """
     hbm_budget_bytes: int
     slab_frac: float = 0.35            # budget fraction reserved for swapping
@@ -127,6 +136,7 @@ class PoolConfig:
     hysteresis_steps: int = 32
     param_bytes: int = 2               # bf16 serving copies
     slab_mode: str = "full"            # | "bounded"
+    quant: str = "off"                 # | "int8" | "int4" | "auto"
 
     def __post_init__(self):
         assert self.hbm_budget_bytes >= 0
@@ -134,6 +144,7 @@ class PoolConfig:
         assert self.reload_bytes_per_step >= 1
         assert self.hysteresis_steps >= 0
         assert self.slab_mode in ("full", "bounded")
+        assert self.quant in QUANT_MODES
 
     @property
     def slab_bytes(self) -> int:
@@ -161,14 +172,20 @@ class ModelEntry:
     pinned_bytes: int
     value_per_byte: float
     fits_slab: bool                    # slab_need <= slab
-    layer_bytes: tuple[int, ...] = ()  # full forward-order slice schedule
-    pinned_layer_bytes: tuple[int, ...] = ()   # pinned share per slice
+    layer_bytes: tuple[int, ...] = ()  # full forward-order slice schedule (fp)
+    pinned_layer_bytes: tuple[int, ...] = ()   # pinned share per slice (fp)
     slab_need: int = 0                 # slab bytes RESERVED while hot
+    precisions: tuple[str, ...] = ()   # per-slice streaming precision
+    param_bytes: int = 2
 
     @property
     def reload_bytes(self) -> int:
-        """Bytes fetched over the DMA on each cold activation."""
-        return self.weight_bytes - self.pinned_bytes
+        """Bytes fetched over the DMA on each cold activation — the sum
+        of the (precision-encoded) reload schedule. Equal to
+        ``weight_bytes - pinned_bytes`` when streaming fp."""
+        if not self.layer_bytes:
+            return self.weight_bytes - self.pinned_bytes
+        return sum(self.reload_schedule)
 
     @property
     def restream_bytes(self) -> int:
@@ -180,9 +197,15 @@ class ModelEntry:
     @property
     def reload_schedule(self) -> tuple[int, ...]:
         """Per-slice reload bytes in forward order — what a layer-granular
-        activation streams, slice by slice, behind compute."""
-        return tuple(f - p for f, p in zip(self.layer_bytes,
-                                           self.pinned_layer_bytes))
+        activation actually moves over the DMA, slice by slice, behind
+        compute. Each slice's un-pinned fp bytes are re-encoded at its
+        streaming precision (``quant_bytes``): this is the quantity the
+        2-slice double buffer and the FIFO see, so compression shrinks
+        both without touching the fp packing ledgers."""
+        precs = self.precisions or ("fp",) * len(self.layer_bytes)
+        return tuple(quant_bytes(f - p, prec, self.param_bytes)
+                     for f, p, prec in zip(self.layer_bytes,
+                                           self.pinned_layer_bytes, precs))
 
     def hideable_bytes(self, reload_bytes_per_step: int) -> int:
         """Reload bytes the double-buffered prefetch can hide inside this
@@ -260,16 +283,28 @@ class ModelPool:
         self.pcfg = pcfg
         self._specs: dict[str, tuple[object, float]] = {}
         self.plan: PoolPlan | None = None
-        # runtime state
+        # runtime state; the serial DMA (FIFO, clock, reload accounting)
+        # lives in one DmaChannel — the streaming methods below are thin
+        # delegates kept as the stable WeightStream surface
+        self.dma = DmaChannel(pcfg.reload_bytes_per_step)
         self._hot_since: dict[str, int] = {}   # non-resident hot models
-        self._stream_q: list[str] = []         # serial DMA: FIFO of streams
-        self._stream_left: dict[str, int] = {}
         self.slab_used = 0
-        self.reload_bytes_total = 0
-        self.restream_bytes_total = 0
-        self.reload_events = 0
         self.deferred_activations = 0
         self.evictions = 0
+
+    # DmaChannel owns the byte counters; these views keep the historical
+    # report surface (engine finish_run, bench rows) unchanged.
+    @property
+    def reload_bytes_total(self) -> int:
+        return self.dma.reload_bytes_total
+
+    @property
+    def restream_bytes_total(self) -> int:
+        return self.dma.restream_bytes_total
+
+    @property
+    def reload_events(self) -> int:
+        return self.dma.reload_events
 
     # -- registration / packing --------------------------------------------
 
@@ -318,14 +353,21 @@ class ModelPool:
         entries = []
         for mid in self.model_ids:
             cfg, demand = self._specs[mid]
-            reload = totals[mid] - pinned[mid]
-            full_sched = tuple(s.nbytes for s in layer_schedule(cfg, pb))
+            full_slices = layer_schedule(cfg, pb, quant=self.pcfg.quant)
+            full_sched = tuple(s.nbytes for s in full_slices)
             pin_sched = tuple(s.nbytes for s in layer_schedule(
                 cfg, pb, include=pinned_names[mid]))
+            # packing ledgers stay in fp space: pinned tensors live in
+            # HBM as bf16 regardless of streaming precision
             assert sum(full_sched) == totals[mid]
             assert sum(pin_sched) == pinned[mid]
-            reload_sched = tuple(f - p for f, p in zip(full_sched,
-                                                       pin_sched))
+            precisions = tuple(s.precision for s in full_slices)
+            # ...but everything that MOVES is precision-encoded: the
+            # reload schedule, and through it the slab working set
+            reload_sched = tuple(
+                quant_bytes(f - p, prec, pb)
+                for f, p, prec in zip(full_sched, pin_sched, precisions))
+            reload = sum(reload_sched)
             # what being hot costs the slab: the whole reload set when it
             # fits (re-streaming is never free, so bounded mode only pays
             # the DMA trade where it buys servability); a tenant whose
@@ -341,7 +383,7 @@ class ModelPool:
                 value_per_byte=values[mid],
                 fits_slab=need <= self.pcfg.slab_bytes,
                 layer_bytes=full_sched, pinned_layer_bytes=pin_sched,
-                slab_need=need))
+                slab_need=need, precisions=precisions, param_bytes=pb))
         self.plan = PoolPlan(tuple(entries), self.pcfg)
         return self.plan
 
@@ -350,12 +392,8 @@ class ModelPool:
     def reset_runtime(self) -> None:
         """Forget the hot set and reload accounting (fresh serving run)."""
         self._hot_since.clear()
-        self._stream_q.clear()
-        self._stream_left.clear()
+        self.dma.reset()
         self.slab_used = 0
-        self.reload_bytes_total = 0
-        self.restream_bytes_total = 0
-        self.reload_events = 0
         self.deferred_activations = 0
         self.evictions = 0
 
@@ -376,17 +414,19 @@ class ModelPool:
         return out
 
     def reload_stall_steps(self, reload_bytes: int) -> int:
-        return -(-reload_bytes // self.pcfg.reload_bytes_per_step)
+        return -(-reload_bytes // self.dma.bytes_per_step)
 
     def set_reload_clock(self, bytes_per_step: int) -> None:
-        """Chaos/health hook: change the modeled DMA bandwidth MID-RUN
-        (a degraded-link fault cuts it k-fold; recovery restores it).
-        Every consumer reads ``pcfg.reload_bytes_per_step`` at use time
-        — stall charging, stream ticks, decode-readiness — so the new
-        clock takes effect on the next engine step without re-packing;
-        the residency plan itself is left alone (placement is a
-        fleet-level decision, pacing is a step-level one)."""
-        assert bytes_per_step >= 1
+        """Deprecation shim over ``dma.set_clock``: re-base the modeled
+        DMA bandwidth MID-RUN. Every consumer reads the channel's
+        effective clock at use time — stall charging, stream ticks,
+        decode-readiness — so the new clock takes effect on the next
+        engine step without re-packing; the residency plan itself is
+        left alone (placement is a fleet-level decision, pacing is a
+        step-level one). Chaos faults should prefer ``dma.degrade``,
+        which composes with re-calibration instead of overwriting it;
+        ``pcfg`` is kept in sync for legacy readers."""
+        self.dma.set_clock(bytes_per_step)
         self.pcfg = dataclasses.replace(
             self.pcfg, reload_bytes_per_step=int(bytes_per_step))
 
@@ -399,7 +439,7 @@ class ModelPool:
         value-per-byte first (the paper's spill order, demand-weighted)."""
         out = []
         for mid, since in self._hot_since.items():
-            if mid in protected or mid in self._stream_left:
+            if mid in protected or self.dma.in_flight(mid):
                 continue               # never evict a mid-stream reload
             if step - since < self.pcfg.hysteresis_steps:
                 continue
@@ -412,9 +452,7 @@ class ModelPool:
         if since is not None:
             self.slab_used -= self._entry(model_id).slab_need
             self.evictions += 1
-        if model_id in self._stream_left:
-            self._stream_q.remove(model_id)
-            del self._stream_left[model_id]
+        self.finish_stream(model_id)
 
     def _admit(self, e: ModelEntry, step: int, protected: frozenset[str],
                ) -> list[str] | None:
@@ -441,9 +479,7 @@ class ModelPool:
                 self.evict(v)
         self._hot_since[e.model_id] = step
         self.slab_used += e.slab_need
-        if e.reload_bytes:
-            self.reload_bytes_total += e.reload_bytes
-            self.reload_events += 1
+        self.dma.charge_reload(e.reload_bytes)
         return evicted
 
     def try_activate(self, model_id: str, step: int,
@@ -463,7 +499,13 @@ class ModelPool:
             return None
         return self.reload_stall_steps(e.reload_bytes), evicted
 
-    # -- layer-granular streaming -------------------------------------------
+    # -- layer-granular streaming (WeightStream surface) ---------------------
+    #
+    # These six methods are thin delegates over ``self.dma`` — the pool
+    # contributes only what the channel cannot know: residency entries,
+    # slab admission, and the hideable-tail window. They are kept (rather
+    # than exposing the channel raw) as the stable WeightStream protocol
+    # the engines program against.
 
     def begin_stream(self, model_id: str, step: int,
                      protected: frozenset[str] = frozenset(),
@@ -484,37 +526,35 @@ class ModelPool:
         if evicted is None:
             return None
         if e.reload_bytes:
-            self._stream_q.append(model_id)
-            self._stream_left[model_id] = e.reload_bytes
+            self.dma.enqueue(model_id, e.reload_bytes)
         return evicted
 
     @property
     def streaming(self) -> tuple[str, ...]:
         """In-flight layer streams, FIFO order (the DMA is serial)."""
-        return tuple(self._stream_q)
+        return self.dma.queue
 
     @property
     def stream_head(self) -> str | None:
-        return self._stream_q[0] if self._stream_q else None
+        return self.dma.head
 
     def stream_remaining(self, model_id: str) -> int:
-        return self._stream_left.get(model_id, 0)
+        return self.dma.remaining(model_id)
 
-    def stream_tick(self, nbytes: int) -> int:
-        """Advance the serial DMA by ``nbytes`` (one engine step's worth
-        of reload bandwidth), head-of-queue first; finished streams are
-        retired. Returns the bytes actually consumed."""
-        used = 0
-        while self._stream_q and nbytes > 0:
-            m = self._stream_q[0]
-            take = min(self._stream_left[m], nbytes)
-            self._stream_left[m] -= take
-            nbytes -= take
-            used += take
-            if self._stream_left[m] == 0:
-                self._stream_q.pop(0)
-                del self._stream_left[m]
-        return used
+    def stream_tick(self, nbytes: int | None = None) -> int:
+        """Advance the serial DMA by ``nbytes`` (default: one engine
+        step of the channel's EFFECTIVE clock, chaos degradation and
+        all), head-of-queue first; finished streams are retired.
+        Returns the bytes actually consumed."""
+        return self.dma.tick(nbytes)
+
+    def finish_stream(self, model_id: str) -> int:
+        """Retire ``model_id``'s in-flight stream without completing it
+        (eviction mid-reload, tenant drain). Returns the abandoned
+        bytes — already charged as reload traffic when the stream was
+        admitted, so dropping them models wasted DMA work, not a
+        refund."""
+        return self.dma.cancel(model_id)
 
     def note_decode_burst(self, model_id: str) -> None:
         """Bounded-slab decode burst: the slices beyond the 2-slice double
@@ -525,16 +565,11 @@ class ModelPool:
         traffic — the DMA-bytes-for-slab-headroom trade made explicit."""
         if self.pcfg.slab_mode != "bounded":
             return
-        e = self._entry(model_id)
-        refetch = e.restream_bytes
+        refetch = self._entry(model_id).restream_bytes
         if refetch <= 0:
             return
-        if model_id not in self._stream_left:
-            self._stream_q.append(model_id)
-            self._stream_left[model_id] = 0
-        self._stream_left[model_id] += refetch
-        self.reload_bytes_total += refetch
-        self.restream_bytes_total += refetch
+        self.dma.enqueue(model_id, refetch)
+        self.dma.charge_restream(refetch)
 
     def decode_ready(self, model_id: str) -> bool:
         """Hot AND either fully streamed, or at the HEAD of the serial
@@ -547,13 +582,9 @@ class ModelPool:
         byte accounting strictly one DMA quantum per engine step."""
         if not self.is_hot(model_id):
             return False
-        left = self._stream_left.get(model_id, 0)
-        if left == 0:
-            return True
-        if self._stream_q[0] != model_id:
-            return False
         e = self._entry(model_id)
-        return left <= e.hideable_bytes(self.pcfg.reload_bytes_per_step)
+        return self.dma.ready(
+            model_id, e.hideable_bytes(self.dma.bytes_per_step))
 
     def summary(self) -> dict:
         return {
@@ -564,5 +595,5 @@ class ModelPool:
             "deferred_activations": self.deferred_activations,
             "slab_used_KiB": round(self.slab_used / KiB, 1),
             "hot": self.hot_models(),
-            "streaming": {m: self._stream_left[m] for m in self._stream_q},
+            "streaming": {m: self.dma.remaining(m) for m in self.dma.queue},
         }

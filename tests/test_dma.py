@@ -1,0 +1,160 @@
+"""DmaChannel: the serial weight-streaming FIFO + clock + ledgers.
+
+Every public mutator is exercised against ``check()`` (RA302), plus the
+two consumers that share the channel beyond the pool itself: the
+training supervisor's degraded-link fault path and the ModelPool's
+WeightStream-protocol delegate surface.
+"""
+
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.runtime import (DmaChannel, ElasticConfig, FaultSchedule,
+                           ModelPool, PoolConfig, TrainingSupervisor,
+                           WeightStream)
+
+KiB = 1 << 10
+
+
+# --- FIFO + clock ----------------------------------------------------------------
+
+
+def test_enqueue_tick_drains_head_first():
+    ch = DmaChannel(100)
+    ch.enqueue("a", 150)
+    ch.enqueue("b", 80)
+    ch.check()
+    assert ch.queue == ("a", "b") and ch.head == "a"
+    assert ch.tick() == 100                    # default: one clock step
+    ch.check()
+    assert ch.remaining("a") == 50 and ch.remaining("b") == 80
+    # the serial channel spills the head's tail into b within one tick
+    assert ch.tick() == 100
+    ch.check()
+    assert not ch.in_flight("a")               # retired from the ledger
+    assert ch.queue == ("b",) and ch.remaining("b") == 30
+    assert ch.tick(30) == 30                   # explicit byte override
+    ch.check()
+    assert ch.queue == () and ch.tick() == 0   # idle channel moves nothing
+
+
+def test_enqueue_reenter_accumulates_without_requeueing():
+    ch = DmaChannel(10)
+    ch.enqueue("a", 5)
+    ch.enqueue("b", 5)
+    ch.enqueue("a", 7)                         # restream burst joins the
+    ch.check()                                 # existing in-flight stream
+    assert ch.queue == ("a", "b")              # no duplicate FIFO entry
+    assert ch.remaining("a") == 12
+
+
+def test_cancel_mid_flight_returns_abandoned_bytes():
+    ch = DmaChannel(10)
+    ch.enqueue("a", 25)
+    ch.enqueue("b", 5)
+    ch.tick()
+    assert ch.cancel("a") == 15                # evicted mid-reload
+    ch.check()
+    assert ch.queue == ("b",) and not ch.in_flight("a")
+    assert ch.cancel("ghost") == 0             # absent owner is a no-op
+    ch.check()
+
+
+def test_ready_gating_is_head_of_queue_only():
+    ch = DmaChannel(10)
+    ch.enqueue("a", 30)
+    ch.enqueue("b", 10)
+    assert ch.ready("c", 0)                    # nothing in flight: ready
+    assert not ch.ready("a", 29)               # tail too big to hide
+    assert ch.ready("a", 30)                   # head + hideable tail
+    assert not ch.ready("b", 10**9)            # queued behind a: the
+    ch.check()                                 # serial channel is busy
+
+
+# --- ledgers ---------------------------------------------------------------------
+
+
+def test_charge_reload_counts_events_restream_does_not():
+    ch = DmaChannel(10)
+    ch.charge_reload(100)
+    ch.charge_reload(0)                        # zero-byte: no event
+    ch.check()
+    assert ch.reload_bytes_total == 100 and ch.reload_events == 1
+    ch.charge_restream(40)                     # a restream byte is a
+    ch.check()                                 # reload byte, not an event
+    assert ch.reload_bytes_total == 140
+    assert ch.restream_bytes_total == 40 and ch.reload_events == 1
+
+
+def test_reset_clears_state_but_keeps_clock():
+    ch = DmaChannel(100)
+    ch.degrade(4.0)
+    ch.enqueue("a", 50)
+    ch.charge_reload(50)
+    ch.reset()
+    ch.check()
+    assert ch.queue == () and ch.reload_bytes_total == 0
+    assert ch.reload_events == 0 and ch.restream_bytes_total == 0
+    assert ch.bytes_per_step == 25             # degrade survives a reset
+
+
+# --- clock: set_clock x degrade composition --------------------------------------
+
+
+def test_degrade_composes_with_set_clock():
+    ch = DmaChannel(400)
+    ch.degrade(4.0)
+    ch.check()
+    assert ch.bytes_per_step == 100
+    ch.set_clock(800)                          # re-calibration mid-chaos:
+    ch.check()                                 # the live fault re-applies
+    assert ch.bytes_per_step == 200 and ch.base_bytes_per_step == 800
+    ch.degrade(1.0)                            # fault window closes
+    ch.check()
+    assert ch.bytes_per_step == 800
+    ch.degrade(10_000.0)                       # floored at 1 byte/step
+    ch.check()
+    assert ch.bytes_per_step == 1
+
+
+# --- consumers of the shared channel ---------------------------------------------
+
+
+def test_pool_satisfies_weightstream_protocol():
+    # 400 KiB budget vs rwkv6's ~352 KiB working set: mostly streamed
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=400 * KiB,
+                                slab_frac=0.9))
+    pool.register("rwkv6-7b", get_config("rwkv6-7b").reduced())
+    pool.pack()
+    assert isinstance(pool, WeightStream)
+    (e,) = pool.plan.entries
+    assert e.residency == "streamed" and e.reload_bytes > 0
+    # the delegates and the channel are one state: a stream begun through
+    # the pool surface is visible on the channel and vice versa
+    assert pool.begin_stream("rwkv6-7b", 0) == []
+    assert pool.dma.in_flight("rwkv6-7b") and "rwkv6-7b" in pool.streaming
+    pool.dma.check()
+    assert pool.finish_stream("rwkv6-7b") == e.reload_bytes
+    pool.dma.check()
+
+
+def test_supervisor_degrades_shared_channel_during_fault_window(tmp_path):
+    ch = DmaChannel(400)
+    seen = []
+
+    def step_fn(state, batch):
+        seen.append(ch.bytes_per_step)
+        return {"x": state["x"] + 1}, {"loss": 0.0}
+
+    sup = TrainingSupervisor(
+        CheckpointManager(str(tmp_path), keep=2),
+        ElasticConfig(checkpoint_every=100),
+        faults=FaultSchedule.parse("dma@2:trainx4/3"),
+        dma=ch)
+    state, _ = sup.run({"x": jnp.array(0)}, step_fn, lambda s: None,
+                       start_step=0, num_steps=8)
+    assert int(state["x"]) == 8
+    # full clock outside the window, base//4 during steps [2, 5)
+    assert seen == [400, 400, 100, 100, 100, 400, 400, 400]
+    ch.check()

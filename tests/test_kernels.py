@@ -365,3 +365,10 @@ def test_build_block_meta_memoized():
     m1, o1 = build_block_meta(blocks)
     m2, o2 = build_block_meta(np.array(blocks))     # distinct array, same key
     assert m1 is m2 and o1 is o2
+    # id() fast path: the SAME array skips even the tobytes() hashing;
+    # the cache pins a strong ref so a recycled id can never alias
+    m3, o3 = build_block_meta(blocks)
+    assert m3 is m1 and o3 is o1
+    from repro.kernels.packed_canvas import _META_ID_CACHE
+    kept, out = _META_ID_CACHE[id(blocks)]
+    assert kept is blocks and out == (m1, o1)

@@ -10,7 +10,7 @@ import pytest
 from repro.configs import get_config
 from repro.models import get_model
 from repro.planner.residency import (double_buffer_bytes, layer_schedule,
-                                     weight_inventory)
+                                     quant_bytes, weight_inventory)
 from repro.runtime import (ModelPool, MultiQueueScheduler, PoolConfig,
                            PoolEngineConfig, PoolError, PooledEngine,
                            Request, multi_tenant_trace, partition_pages,
@@ -151,6 +151,77 @@ def test_pack_builds_aligned_reload_schedules():
         bw = pool.pcfg.reload_bytes_per_step
         assert e.hideable_bytes(bw) <= max(
             e.reload_bytes - e.reload_schedule[0], 0)
+
+
+# --- compressed weight streaming (quant) ----------------------------------------
+
+
+def test_quant_bytes_model():
+    fp = 128 * 1024
+    assert quant_bytes(fp, "fp") == fp
+    assert quant_bytes(0, "int8") == 0
+    # int8: half payload + one bf16 scale per 128 params (1/128 of fp)
+    assert quant_bytes(fp, "int8") == fp // 2 + fp // 128
+    assert quant_bytes(fp, "int4") == fp // 4 + fp // 128
+    # ceil-rounded, never zero, never bigger than fp for real slices
+    assert 0 < quant_bytes(3, "int4") <= 3
+
+
+def test_layer_schedule_auto_precisions_follow_sensitivity():
+    # MoE: boundary decode layers + embed/head stay int8; the routed
+    # expert slices (lowest reuse per byte) drop to int4 even when they
+    # hang off a boundary layer
+    sched = layer_schedule(get_config("deepseek-v2-lite-16b").reduced(),
+                           quant="auto")
+    by_name = {s.name: s.precision for s in sched}
+    assert by_name["embed"] == by_name["head"] == "int8"
+    assert all(p == "int4" for n, p in by_name.items() if "/exp" in n)
+    assert all(p == "int8" for n, p in by_name.items() if "/" not in n
+               and n.startswith("layer"))
+    # off keeps everything fp; uniform modes are uniform
+    assert all(s.precision == "fp" for s in layer_schedule(
+        get_config("rwkv6-7b").reduced()))
+    assert all(s.precision == "int4" for s in layer_schedule(
+        get_config("rwkv6-7b").reduced(), quant="int4"))
+
+
+def test_pack_quant_shrinks_reload_but_not_fp_ledgers():
+    """int8 streaming halves the reload schedule and the double-buffer
+    pair while the fp packing ledgers (pinned bytes, layer bytes, HBM
+    budget accounting) stay byte-identical to the off plan."""
+    pcfg = PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5)
+    off = _pool(pcfg)
+    i8 = _pool(PoolConfig(hbm_budget_bytes=960 * KiB, slab_frac=0.5,
+                          quant="int8"))
+    assert off.plan.pinned_bytes == i8.plan.pinned_bytes
+    for eo, eq in zip(off.plan.entries, i8.plan.entries):
+        assert eo.layer_bytes == eq.layer_bytes          # fp schedule
+        assert eo.pinned_layer_bytes == eq.pinned_layer_bytes
+        assert sum(eq.layer_bytes) == eq.weight_bytes    # conservation
+        # the DMA-visible quantities shrink by the encoding ratio
+        if eo.reload_bytes:
+            ratio = eo.reload_bytes / eq.reload_bytes
+            assert 1.9 <= ratio <= 2.0, (eq.model_id, ratio)
+            dbr = double_buffer_bytes(eo.reload_schedule) \
+                / double_buffer_bytes(eq.reload_schedule)
+            assert 1.9 <= dbr <= 2.0, (eq.model_id, dbr)
+        # per-slice: each quantized slice re-encodes its fp remainder
+        assert eq.reload_schedule == tuple(
+            quant_bytes(f - p, prec)
+            for f, p, prec in zip(eq.layer_bytes, eq.pinned_layer_bytes,
+                                  eq.precisions))
+
+
+def test_pack_quant_flips_servability_at_tight_slab():
+    """The PR-5 flip: a slab too small for a tenant's fp reload working
+    set but big enough for its int8 encoding makes the tenant servable
+    under quant — the whole point of compressed streaming."""
+    mk = lambda q: _pool(PoolConfig(  # noqa: E731
+        hbm_budget_bytes=500 * KiB, slab_frac=0.4, quant=q))
+    off, i8 = mk("off"), mk("int8")
+    off_srv = {e.model_id for e in off.plan.entries if e.fits_slab}
+    i8_srv = {e.model_id for e in i8.plan.entries if e.fits_slab}
+    assert off_srv < i8_srv, (off_srv, i8_srv)
 
 
 # --- activation / eviction / hysteresis -----------------------------------------
