@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import ast
 import re
+from pathlib import Path
 
 from . import astutil
 from .core import Finding, Module, Project, Rule, register
@@ -314,4 +315,119 @@ class JitTracedBranch(Rule):
             hit = cls._traced_load(child, traced)
             if hit:
                 return hit
+        return None
+
+
+# host-materializing operations: each forces a blocking device->host
+# sync on a still-in-flight jit result
+SYNC_FUNCS = {"int", "float", "bool"}
+SYNC_DOTTED = {"asarray", "array"}       # np.asarray / np.array / jnp.*
+SYNC_METHODS = {"item", "tolist", "block_until_ready"}
+
+
+@register
+class PerTokenHostSync(Rule):
+    id = "RA105"
+    doc = ("per-token host sync in the serving loop: the async result of "
+           "a jitted dispatch is materialized (int()/np.asarray()/.item()) "
+           "inside a loop the dispatch is outside of — one blocking device "
+           "sync per slot/token instead of one per dispatch")
+
+    def analyze(self, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for mod in project.modules:
+            if "runtime" not in Path(mod.display).parts:
+                continue        # the serving hot loop lives under runtime/
+            parents = astutil.build_parents(mod.tree)
+            bound = {site.bound_to
+                     for site in astutil.collect_jit_sites(mod, parents)
+                     if site.kind == "jit" and site.bound_to}
+            if not bound:
+                continue
+            taints = self._taints(mod, parents, bound)
+            if not taints:
+                continue
+            seen: set[tuple[int, str]] = set()
+            for node in ast.walk(mod.tree):
+                if not isinstance(node, ast.Call) \
+                        or not self._materializes(node):
+                    continue
+                fn = astutil.enclosing(
+                    node, parents,
+                    (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+                local = taints.get(id(fn), {})
+                names = {n.id for n in ast.walk(node)
+                         if isinstance(n, ast.Name) and n.id in local}
+                for name in sorted(names):
+                    loop = self._loop_outside(node, local[name], parents)
+                    if loop is None or (id(loop), name) in seen:
+                        continue
+                    seen.add((id(loop), name))
+                    out.append(mod.finding(
+                        self, node,
+                        f"{name!r} holds the async result of a jitted "
+                        f"dispatch but is materialized inside a loop the "
+                        f"dispatch is outside of: one blocking host sync "
+                        f"per iteration — materialize the whole batch "
+                        f"once (np.asarray before the loop) instead"))
+        return out
+
+    @staticmethod
+    def _taints(mod: Module, parents,
+                bound: set[tuple[str, str]]) -> dict[int, dict[str, ast.AST]]:
+        """id(enclosing function) -> {name: assignment} for plain names
+        assigned from a call to a module-local jit-bound callable."""
+        call_ids: set[int] = set()
+        for b in bound:
+            call_ids |= {id(c)
+                         for c in astutil.call_sites_of(mod, b, parents)}
+        by_fn: dict[int, dict[str, ast.AST]] = {}
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Assign) \
+                    or id(node.value) not in call_ids:
+                continue
+            fn = astutil.enclosing(
+                node, parents,
+                (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda))
+            local = by_fn.setdefault(id(fn), {})
+            for t in node.targets:
+                for s in astutil.assigned_symbols(t):
+                    if "." not in s:    # attributes escape local analysis
+                        local[s] = node
+        return by_fn
+
+    @staticmethod
+    def _materializes(call: ast.Call) -> bool:
+        f = call.func
+        if isinstance(f, ast.Name):
+            return f.id in SYNC_FUNCS
+        if isinstance(f, ast.Attribute):
+            if f.attr in SYNC_METHODS:
+                return True
+            d = astutil.dotted(f)
+            return d is not None and d[1] in SYNC_DOTTED
+        return False
+
+    @staticmethod
+    def _loop_outside(call: ast.AST, assign: ast.AST,
+                      parents) -> ast.AST | None:
+        """Innermost for/while around ``call`` that does NOT also enclose
+        the tainting assignment. Dispatch-inside-the-loop (the per-step
+        baseline: one dispatch, one sync per iteration) is the best a
+        non-fused loop can do and is exempt; only re-materializing a
+        single dispatch per slot/token is flagged."""
+        anc: set[int] = set()
+        cur: ast.AST | None = assign
+        while cur is not None:
+            anc.add(id(cur))
+            cur = parents.get(cur)
+        cur = parents.get(call)
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.AsyncFor, ast.While)) \
+                    and id(cur) not in anc:
+                return cur
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return None     # taint is function-local
+            cur = parents.get(cur)
         return None

@@ -636,3 +636,16 @@ def paged_decode_step(cfg, params, state: GriffinPagedState, tokens,
         .astype(jnp.float32)[:, 0]
     return logits, GriffinPagedState(conv=conv_new, h=h_new,
                                      k_pages=kp_new, v_pages=vp_new)
+
+
+def paged_decode_multi(cfg, params, state: GriffinPagedState, pending,
+                       lengths, remaining, page_table, mask, h, *,
+                       hmax: int, teacher=None):
+    """Up to ``h`` fused ``paged_decode_step``s (layers.multi_step_decode)
+    with on-device sampling. The engine clamps ``h`` at page boundaries —
+    for the window ring that is exactly the wrap point, so the ring never
+    recycles a page mid-horizon and the table stays constant."""
+    def step(s, toks, pt, lens, act):
+        return paged_decode_step(cfg, params, s, toks, pt, lens, act)
+    return L.multi_step_decode(step, hmax, state, pending, lengths,
+                               remaining, page_table, mask, h, teacher)

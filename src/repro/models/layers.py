@@ -611,6 +611,61 @@ def init_moe_params(key, cfg, d_model):
     return p
 
 
+# --- multi-step decode fusion ----------------------------------------------------
+
+def multi_step_decode(step_fn, hmax: int, state, pending, lengths,
+                      remaining, page_table, mask, h, teacher=None):
+    """Run up to ``h`` decode steps of ``step_fn`` inside one traced loop.
+
+    ``step_fn(state, tokens, page_table, lengths, active) -> (logits,
+    state)`` is a single-token decode body (every paged/recurrent model
+    in this package shares that shape). The loop keeps the whole
+    token-feedback cycle on device: greedy argmax sampling, the pending-
+    token carry, length/remaining advancement and end-of-budget masking
+    all happen inside the scanned step, so the host syncs once per
+    horizon instead of once per token.
+
+    ``h`` is a traced scalar (one compile serves every horizon length);
+    ``hmax`` is the static height of the token out-buffer, so the jit
+    cache is keyed on ``hmax`` alone. ``mask`` (B,) bool selects the
+    slots this call advances; a slot additionally drops out of the live
+    set when its ``remaining`` token budget hits zero (EOS-by-budget —
+    the engines clamp ``h`` so this never fires mid-horizon, but the
+    kernel stays correct under looser horizons). Inactive slots feed
+    token 0 and write to the trash page (row 0), matching the per-step
+    engines' conventions exactly.
+
+    ``teacher`` ((hmax, B) int32 or None) forces the fed-back token per
+    step instead of the argmax — the teacher-forced replay path.
+    Returns ``(tokens (hmax, B) int32, state, pending, lengths,
+    remaining)``; rows of ``tokens`` past ``h`` (or past a slot's
+    budget) are 0.
+    """
+    B = pending.shape[0]
+    # page 0 is the trash page (kv_pager.TRASH_PAGE): masked-out slots
+    # gather/scatter there and attention lengths gate it out
+    pt = jnp.where(mask[:, None], page_table, 0)
+
+    def body(i, carry):
+        state, pending, lengths, remaining, out = carry
+        live = mask & (remaining > 0)
+        toks = jnp.where(live, pending, 0)
+        lens = jnp.where(live, lengths, 0)
+        logits, state = step_fn(state, toks, pt, lens, live)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if teacher is not None:
+            nxt = teacher[i]
+        pending = jnp.where(live, nxt, pending)
+        out = out.at[i].set(jnp.where(live, nxt, 0))
+        took = live.astype(jnp.int32)
+        return state, pending, lengths + took, remaining - took, out
+
+    out0 = jnp.zeros((hmax, B), jnp.int32)
+    state, pending, lengths, remaining, out = lax.fori_loop(
+        0, h, body, (state, pending, lengths, remaining, out0))
+    return out, state, pending, lengths, remaining
+
+
 # --- losses ----------------------------------------------------------------------
 
 def softmax_xent(logits, labels, *, z_loss=1e-4):

@@ -487,3 +487,16 @@ def paged_decode_step(cfg, params, state: MoEPagedState, tokens,
     x, kv_new = lax.scan(body, x, (params["blocks"], state.kv_pages))
     logits = _head(cfg, params, x)[:, 0]
     return logits, MoEPagedState(kv_pages=kv_new)
+
+
+def paged_decode_multi(cfg, params, state: MoEPagedState, pending,
+                       lengths, remaining, page_table, mask, h, *,
+                       hmax: int, teacher=None):
+    """Up to ``h`` fused ``paged_decode_step``s against the latent pages
+    (layers.multi_step_decode) with on-device sampling. Decode routing
+    is dropless, so the fused steps need no route trace — only prefill
+    records/replays expert drops."""
+    def step(s, toks, pt, lens, act):
+        return paged_decode_step(cfg, params, s, toks, pt, lens, act)
+    return L.multi_step_decode(step, hmax, state, pending, lengths,
+                               remaining, page_table, mask, h, teacher)

@@ -330,3 +330,17 @@ def decode_step(cfg, params, state: RwkvState, tokens, *, constrain=None):
     logits, state = _run(cfg, params, tokens[:, None], state,
                          constrain=constrain)
     return logits[:, 0], state
+
+
+def decode_multi(cfg, params, state: RwkvState, pending, lengths,
+                 remaining, mask, h, *, hmax: int, teacher=None):
+    """Up to ``h`` fused ``decode_step``s (layers.multi_step_decode) with
+    on-device sampling. The recurrence has no pages, so the shared
+    driver gets a dummy one-column table; masked-out slots consume token
+    0 per step, exactly what the per-step engine path feeds them."""
+    def step(s, toks, pt, lens, act):
+        del pt, lens, act
+        return decode_step(cfg, params, s, toks)
+    dummy_pt = jnp.zeros((pending.shape[0], 1), jnp.int32)
+    return L.multi_step_decode(step, hmax, state, pending, lengths,
+                               remaining, dummy_pt, mask, h, teacher)

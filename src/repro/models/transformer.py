@@ -440,3 +440,16 @@ def paged_decode_step(cfg, params, state: PagedDecodeState, tokens,
         body, x, (params["blocks"], state.k_pages, state.v_pages))
     logits = _head(cfg, params, x)[:, 0]
     return logits, PagedDecodeState(k_pages=k_pages, v_pages=v_pages)
+
+
+def paged_decode_multi(cfg, params, state: PagedDecodeState, pending,
+                       lengths, remaining, page_table, mask, h, *,
+                       hmax: int, teacher=None):
+    """Up to ``h`` fused ``paged_decode_step``s with on-device sampling
+    (layers.multi_step_decode): one dispatch and one host sync per
+    horizon. The engine clamps ``h`` at page boundaries, so the page
+    table is constant for the whole fused run."""
+    def step(s, toks, pt, lens, act):
+        return paged_decode_step(cfg, params, s, toks, pt, lens, act)
+    return L.multi_step_decode(step, hmax, state, pending, lengths,
+                               remaining, page_table, mask, h, teacher)

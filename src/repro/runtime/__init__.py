@@ -3,12 +3,14 @@ arrival-trace scheduler, multi-tenant model pool, the replicated fleet
 tier with chaos-tested failover, and the elastic training supervisor."""
 
 from .arena import ArenaConfig, DeviceArena, partition_pages
-from .dma import DmaChannel, WeightStream
+from .device_state import DeviceLoopState
+from .dma import DeviceDmaChannel, DmaChannel, WeightStream
 from .engine import (ENGINE_FAMILIES, Engine, EngineConfig, EngineReport,
                      HybridBackend, LatentBackend, PagedTransformerBackend,
                      PoolEngineConfig, PooledEngine, PooledReport,
-                     RecurrentBackend, engine_backend, make_sampler,
-                     resolve_backend, run_static, vlm_extras_fn)
+                     RecurrentBackend, engine_backend, make_batch_sampler,
+                     make_sampler, resolve_backend, run_static,
+                     vlm_extras_fn)
 from .fault_tolerance import (TRANSIENT_DEFAULT, Backoff, ElasticConfig,
                               FaultEvent, FaultSchedule, RunReport,
                               StepTimeout, StragglerDetector,
@@ -29,12 +31,13 @@ __all__ = ["ArenaConfig", "DeviceArena",
            "PagedTransformerBackend", "RecurrentBackend", "HybridBackend",
            "LatentBackend", "engine_backend", "resolve_backend",
            "PooledEngine", "PoolEngineConfig", "PooledReport",
-           "run_static", "make_sampler", "vlm_extras_fn",
+           "run_static", "make_sampler", "make_batch_sampler",
+           "vlm_extras_fn", "DeviceLoopState",
            "PageAllocator", "PagerConfig", "TRASH_PAGE", "NEUTRAL_OWNER",
            "partition_pages", "PrefixIndex",
            "ModelPool", "ModelEntry", "PoolConfig", "PoolError", "PoolPlan",
            "model_weight_bytes", "calibrated_reload_bytes_per_step",
-           "DmaChannel", "WeightStream",
+           "DmaChannel", "DeviceDmaChannel", "WeightStream",
            "Request", "Scheduler", "MultiQueueScheduler",
            "poisson_trace", "multi_tenant_trace", "shifting_mix_trace",
            "diurnal_trace", "shared_prefix_trace",

@@ -262,6 +262,15 @@ class DeviceArena:
             lease.watermark = max(lease.watermark,
                                   lease.allocator.live_count)
 
+    def next_epoch_step(self) -> int | None:
+        """Step at which ``maybe_repartition`` would next fire, or None
+        when repartitioning is off. The fused-decode engine clamps its
+        horizon so the epoch boundary lands on an engine step exactly as
+        it does under per-step dispatch."""
+        if self.acfg.repartition != "epoch":
+            return None
+        return self._last_epoch + self.acfg.epoch_steps
+
     def maybe_repartition(self, step: int) -> list[dict] | None:
         """At an epoch boundary, move free pages from under-watermark
         tenants to page-starved ones. Returns the move records (possibly

@@ -18,6 +18,7 @@ streaming needed no new channel state — fewer bytes in, same FIFO.
 
 from __future__ import annotations
 
+import time
 from typing import Protocol, runtime_checkable
 
 
@@ -192,3 +193,81 @@ class DmaChannel:
         assert self.bytes_per_step >= 1 and self.base_bytes_per_step >= 1
         assert self.degrade_factor >= 1.0
         assert self.bytes_per_step <= self.base_bytes_per_step
+
+
+class DeviceDmaChannel(DmaChannel):
+    """DmaChannel whose ticks also move REAL bytes on the device.
+
+    The modeled ledger (FIFO, byte clock, reload counters) is inherited
+    unchanged — every policy decision still runs off it, so swapping
+    this channel in changes no scheduling. On top of it, each ``tick``
+    that moves bytes issues one asynchronous jitted write into a staging
+    slab, double-buffered across two slabs so the write issued at tick
+    ``t`` may still be in flight while tick ``t+1`` stages into the
+    other slab and the engine's decode dispatches run in between. That
+    makes overlap MEASURED instead of modeled: at each tick the channel
+    checks whether the previous tick's write has actually completed
+    (``jax.Array.is_ready``); if not, it blocks and records a measured
+    stall. An engine with decode work between ticks gives the copy wall
+    time to finish (overlap hides it); an engine that ticks back-to-back
+    on a prefetch miss does not — so measured stalls line up with, and
+    are bounded by, the steps the modeled ledger charges as stalls.
+
+    Lazily imports jax so the modeled channel stays import-light.
+    """
+
+    def __init__(self, bytes_per_step: int, slab_bytes: int | None = None):
+        super().__init__(bytes_per_step)
+        import jax.numpy as jnp
+
+        self._jnp = jnp
+        n = max(1, int(slab_bytes if slab_bytes is not None
+                       else bytes_per_step))
+        self.slab_bytes = n
+        self._slabs = [jnp.zeros((n,), jnp.uint8),
+                       jnp.zeros((n,), jnp.uint8)]
+        self._cursor = 0
+        self._inflight = None          # previous tick's device write
+        import jax
+
+        # donation makes the staged write an in-place device mutation;
+        # the add touches every byte so the copy cannot be elided
+        self._copy = jax.jit(lambda slab, val: slab + val,
+                             donate_argnums=(0,))
+        self.copies_issued = 0
+        self.measured_stall_steps = 0
+        self.measured_wait_s = 0.0
+
+    def tick(self, nbytes: int | None = None) -> int:
+        used = super().tick(nbytes)
+        if used <= 0:
+            return used
+        prev = self._inflight
+        if prev is not None and not prev.is_ready():
+            # the previous async write outlived its step: a REAL stall,
+            # measured at the same granularity the ledger models
+            t0 = time.perf_counter()
+            prev.block_until_ready()
+            self.measured_wait_s += time.perf_counter() - t0
+            self.measured_stall_steps += 1
+        self._cursor ^= 1
+        self.copies_issued += 1
+        val = self._jnp.uint8(self.copies_issued % 251)
+        self._slabs[self._cursor] = self._copy(self._slabs[self._cursor],
+                                               val)
+        self._inflight = self._slabs[self._cursor]
+        return used
+
+    def reset(self) -> None:
+        super().reset()
+        self._inflight = None
+        self.copies_issued = 0
+        self.measured_stall_steps = 0
+        self.measured_wait_s = 0.0
+
+    def check(self) -> None:
+        super().check()
+        assert 0 <= self.measured_stall_steps <= self.copies_issued
+        assert self.measured_wait_s >= 0.0
+        assert self.slab_bytes >= 1
+        assert all(s.shape == (self.slab_bytes,) for s in self._slabs)

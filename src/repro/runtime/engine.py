@@ -40,6 +40,7 @@ import numpy as np
 
 from ..models import get_model
 from .arena import ArenaConfig, DeviceArena, partition_pages  # noqa: F401
+from .device_state import DeviceLoopState
 from .kv_pager import PagerConfig, TRASH_PAGE
 from .model_pool import ModelPool
 from .prefix_index import PrefixIndex
@@ -63,10 +64,18 @@ class EngineConfig:
     # suffix; a decode write into a still-shared page copies-on-write
     # exactly that page. Backends opt in via their prefix_sharing flag.
     prefix_sharing: bool = False
+    # horizon-fused decode: cap on the number of decode steps one device
+    # dispatch may advance (the engine shrinks it per step so no
+    # schedulable event — page boundary, ring wrap, token budget,
+    # arrival, stream gate — can land mid-horizon). 1 disables fusion
+    # and keeps the legacy per-step dispatch; non-greedy sampling always
+    # runs per-step (the host RNG draws between tokens).
+    horizon: int = 32
 
     def __post_init__(self):
         assert self.prefill_bucket % self.page_size == 0, \
             "prefill bucket must be a page multiple"
+        assert self.horizon >= 1
 
     @property
     def pager(self) -> PagerConfig:
@@ -77,17 +86,52 @@ class EngineConfig:
 # --- reports -------------------------------------------------------------------
 
 
+def make_batch_sampler(rng: np.random.Generator, greedy: bool,
+                       temperature: float):
+    """Shared host-side batch sampler (engine, pooled engine and static
+    baseline all draw through this one helper). Greedy argmaxes the
+    whole (N, V) block at once; the temperature path draws ONE uniform
+    per row and inverts the softmax CDF, so a seeded run is
+    deterministic and the per-slot Python sampling loop is gone from
+    every path."""
+    def sample_batch(rows: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows)
+        if rows.ndim == 1:
+            rows = rows[None]
+        if rows.shape[0] == 0:
+            return np.zeros((0,), np.int64)
+        if greedy:
+            return np.argmax(rows, axis=-1)
+        z = rows.astype(np.float64) / temperature
+        z -= z.max(axis=-1, keepdims=True)
+        p = np.exp(z)
+        cdf = np.cumsum(p, axis=-1)
+        u = rng.random(rows.shape[0]) * cdf[:, -1]
+        return np.minimum((cdf < u[:, None]).sum(axis=-1),
+                          rows.shape[-1] - 1)
+    return sample_batch
+
+
 def make_sampler(rng: np.random.Generator, greedy: bool,
                  temperature: float):
-    """Shared host-side sampler (engine and static baseline must match)."""
+    """Single-row view of make_batch_sampler (prefill samples one row)."""
+    sample_batch = make_batch_sampler(rng, greedy, temperature)
+
     def sample(logits_row: np.ndarray) -> int:
-        if greedy:
-            return int(np.argmax(logits_row))
-        z = logits_row.astype(np.float64) / temperature
-        z -= z.max()
-        p = np.exp(z)
-        return int(rng.choice(p.size, p=p / p.sum()))
+        return int(sample_batch(logits_row[None])[0])
     return sample
+
+
+def _charge_wall(rep, seen: set, key, dt: float) -> None:
+    """Charge ``dt`` for one decode dispatch: the first dispatch of each
+    jit signature pays trace+compile, so it lands in ``compile_wall_s``
+    and every later one in ``decode_wall_s`` — wall-clock throughput
+    comparisons then measure steady state, not compiler time."""
+    if key in seen:
+        rep.decode_wall_s += dt
+    else:
+        seen.add(key)
+        rep.compile_wall_s += dt
 
 
 def vlm_extras_fn(cfg, num_patches: int = 4):
@@ -119,7 +163,16 @@ class EngineReport:
     slot_state_bytes: int = 0          # per-slot non-paged state (hybrid)
     cache_bytes_alloc: int = 0         # full backing allocation
     wall_s: float = 0.0
-    decode_wall_s: float = 0.0
+    decode_wall_s: float = 0.0         # steady-state only (see below)
+    # first dispatch of each decode jit signature is charged here, not
+    # to decode_wall_s, so wall-clock comparisons measure steady state
+    compile_wall_s: float = 0.0
+    # decode-loop host<->device traffic (prefill excluded — identical on
+    # every path): decode dispatches + state-sync uploads, host syncs
+    # that block on a device result, and page-table bytes shipped
+    device_dispatches: int = 0
+    host_syncs: int = 0
+    page_table_upload_bytes: int = 0
 
     @property
     def new_tokens(self) -> int:
@@ -201,6 +254,11 @@ class EngineReport:
             **{k: round(v, 1)
                for k, v in self.latency_percentiles().items()},
             "wall_s": round(self.wall_s, 3),
+            "decode_wall_s": round(self.decode_wall_s, 4),
+            "compile_wall_s": round(self.compile_wall_s, 4),
+            "device_dispatches": self.device_dispatches,
+            "host_syncs": self.host_syncs,
+            "page_table_upload_bytes": self.page_table_upload_bytes,
             "tokens_per_s": round(self.new_tokens / self.decode_wall_s, 1)
             if self.decode_wall_s > 0 else 0.0,
         }
@@ -249,7 +307,28 @@ def _routed_prefill(backend, req, ctx, slot, pages) -> np.ndarray:
     return logits
 
 
-class _PagedBackendBase:
+class _FusedDecode:
+    """Host wrapper around a backend's jitted multi-step decode.
+
+    ``decode_fused`` takes the engine's persistent device arrays
+    (DeviceLoopState), advances up to ``h`` decode steps in ONE dispatch
+    with greedy sampling on device, and returns the (hmax, B) token
+    buffer plus the rebound donated loop arrays — the caller adopts them
+    without a download. ``teacher`` (hmax, B) int32 forces the sampled
+    tokens (fused replay of a recorded sequence; used by the
+    differential tests to drive state through the fused path)."""
+
+    def decode_fused(self, pending, lengths, remaining, page_table, mask,
+                     h: int, teacher=None):
+        out, self.state, pending, lengths, remaining = self._decode_multi(
+            self.params, self.state, pending, lengths, remaining,
+            page_table, jnp.asarray(mask),
+            jnp.asarray(h, jnp.int32),
+            None if teacher is None else jnp.asarray(teacher, jnp.int32))
+        return out, pending, lengths, remaining
+
+
+class _PagedBackendBase(_FusedDecode):
     """Shared jit-dispatch plumbing for every paged backend: the decode
     wrapper marshals host arrays into the jitted step and the pages are
     owned by the allocator, so release_slot is a no-op."""
@@ -322,11 +401,20 @@ class PagedTransformerBackend(_LinearPagedMixin):
             return T.paged_decode_step(cfg, params, state, tokens,
                                        page_table, lengths, active)
 
+        def decode_multi(params, state, pending, lengths, remaining,
+                         page_table, mask, h, teacher):
+            return T.paged_decode_multi(cfg, params, state, pending,
+                                        lengths, remaining, page_table,
+                                        mask, h, hmax=ecfg.horizon,
+                                        teacher=teacher)
+
         self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
         self._prefill_shared = jax.jit(prefill_shared_write,
                                        donate_argnums=(1,))
         self._copy_page = jax.jit(T.copy_kv_page, donate_argnums=(0,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._decode_multi = jax.jit(decode_multi,
+                                     donate_argnums=(1, 2, 3, 4))
 
     def prefill(self, ctx: np.ndarray, extras, slot: int,
                 page_ids: list[int]) -> np.ndarray:
@@ -368,7 +456,7 @@ class PagedTransformerBackend(_LinearPagedMixin):
                                      jnp.asarray(dst, jnp.int32))
 
 
-class RecurrentBackend:
+class RecurrentBackend(_FusedDecode):
     """ssm family (rwkv6): constant-size per-slot state, no paging.
 
     The recurrence consumes every token it sees, so prompts are prefilled
@@ -400,6 +488,17 @@ class RecurrentBackend:
             lambda params, state, tokens: self.api.decode_step(
                 cfg, params, state, tokens),
             donate_argnums=(1,))
+
+        def decode_multi(params, state, pending, lengths, remaining,
+                         page_table, mask, h, teacher):
+            del page_table              # recurrent state, nothing paged
+            from ..models import rwkv6 as R
+            return R.decode_multi(cfg, params, state, pending, lengths,
+                                  remaining, mask, h, hmax=ecfg.horizon,
+                                  teacher=teacher)
+
+        self._decode_multi = jax.jit(decode_multi,
+                                     donate_argnums=(1, 2, 3, 4))
         # slot is a traced scalar (``.at[:, slot]`` takes traced indices),
         # so admission compiles once total — not once per batch slot
         self._write = jax.jit(self._write_slot, donate_argnums=(0,))
@@ -486,11 +585,20 @@ class HybridBackend(_PagedBackendBase):
             return G.paged_decode_step(cfg, params, state, tokens,
                                        page_table, lengths, active)
 
+        def decode_multi(params, state, pending, lengths, remaining,
+                         page_table, mask, h, teacher):
+            return G.paged_decode_multi(cfg, params, state, pending,
+                                        lengths, remaining, page_table,
+                                        mask, h, hmax=ecfg.horizon,
+                                        teacher=teacher)
+
         # slot is a traced scalar (``.at[:, slot]`` takes traced indices),
         # so the compile cache is keyed on the prompt bucket alone — one
         # trace per bucket, not per (bucket, slot) pair
         self._prefill = jax.jit(prefill_write, donate_argnums=(1,))
         self._decode = jax.jit(decode, donate_argnums=(1,))
+        self._decode_multi = jax.jit(decode_multi,
+                                     donate_argnums=(1, 2, 3, 4))
 
     def can_ever_fit(self, pgr, prompt_len: int, max_new_tokens: int,
                      ctx_len: int) -> bool:
@@ -563,6 +671,15 @@ class LatentBackend(_LinearPagedMixin):
             return MoE.paged_decode_step(cfg, params, state, tokens,
                                          page_table, lengths, active)
 
+        def decode_multi(params, state, pending, lengths, remaining,
+                         page_table, mask, h, teacher):
+            return MoE.paged_decode_multi(cfg, params, state, pending,
+                                          lengths, remaining, page_table,
+                                          mask, h, hmax=ecfg.horizon,
+                                          teacher=teacher)
+
+        self._decode_multi = jax.jit(decode_multi,
+                                     donate_argnums=(1, 2, 3, 4))
         # route_capacity is static: the exact-length expert-capacity
         # ceiling is keyed into the jit cache, so a padded bucket traces
         # once per (bucket, capacity) pair — distinct lengths with the
@@ -706,8 +823,14 @@ class Engine:
         self.ecfg = ecfg or EngineConfig()
         self.backend = resolve_backend(cfg)(cfg, params, self.ecfg)
         self.rng = np.random.default_rng(self.ecfg.seed)
+        self._sample_batch = make_batch_sampler(
+            self.rng, self.ecfg.greedy, self.ecfg.temperature)
         self._sample = make_sampler(self.rng, self.ecfg.greedy,
                                     self.ecfg.temperature)
+        # greedy sampling is pure argmax, so it can run on device inside
+        # the fused horizon; the host RNG's temperature draw cannot
+        self._fused = self.ecfg.greedy and self.ecfg.horizon > 1
+        self._dispatched: set = set()  # jit signatures already compiled
 
     # -- main loop ---------------------------------------------------------
 
@@ -731,6 +854,10 @@ class Engine:
         page_table = np.zeros((B, M), np.int32)
         lengths = np.zeros((B,), np.int32)
         pending = np.zeros((B,), np.int32)      # next decode input token
+        remaining = np.zeros((B,), np.int32)    # token budget left
+        # device twins of the four loop arrays + the traffic ledger the
+        # per-step fallback shares (so both paths report comparably)
+        ds = DeviceLoopState(B, M)
 
         page_bytes = self.backend.page_bytes
         rep = EngineReport(
@@ -753,6 +880,8 @@ class Engine:
             page_table[s, :] = TRASH_PAGE
             lengths[s] = 0
             pending[s] = 0
+            remaining[s] = 0
+            ds.touch(s)
             if paged:
                 alloc.free_owner(req.rid)
             self.backend.release_slot(s)
@@ -847,11 +976,16 @@ class Engine:
                     lengths[s] = len(ctx)
                     if req.generated:   # re-admission after preemption
                         pending[s] = req.generated[-1]
+                        remaining[s] = (req.max_new_tokens
+                                        - len(req.generated))
+                        ds.touch(s)
                     else:
                         assert logits is not None
                         tok = self._sample(logits)
                         req.generated.append(tok)
                         pending[s] = tok
+                        remaining[s] = req.max_new_tokens - 1
+                        ds.touch(s)
                         if req.done:
                             finish(s)   # slot freed: while re-admits
 
@@ -902,6 +1036,7 @@ class Engine:
                         self.backend.copy_page(old, new[0])
                         alloc.free_page(slots[s].rid, old)
                         page_table[s, row_i] = new[0]
+                        ds.touch(s)
                         slots[s].cow_copies += 1
                         rep.cow_copies += 1
                         continue
@@ -917,26 +1052,72 @@ class Engine:
                         continue
                     new = alloc.alloc(slots[s].rid, 1)
                     page_table[s, row] = new[0]
+                    ds.touch(s)
 
-            # -- one batched decode step ---------------------------------
+            # -- decode: one fused horizon, or one per-step dispatch -----
             if active:
                 act = np.zeros((B,), bool)
                 act[active] = True
-                t0 = time.monotonic()
-                logits = self.backend.decode(pending, page_table, lengths,
-                                             act)
-                rep.decode_wall_s += time.monotonic() - t0
-                rep.decode_steps += 1
-                rep.slot_steps += B     # the batch always runs full width
-                rep.useful_slot_steps += len(active)
-                lengths[active] += 1
-                for s in active:
-                    req = slots[s]
-                    tok = self._sample(logits[s])
-                    req.generated.append(tok)
-                    pending[s] = tok
-                    if req.done:
-                        finish(s)
+                if self._fused:
+                    # safe horizon: no schedulable event may land inside
+                    # it, so running h steps device-side is step-for-step
+                    # identical to h per-step iterations of this loop
+                    h = e.horizon
+                    nxt = sched.next_arrival()
+                    if nxt is not None:
+                        h = min(h, nxt - step)     # arrival -> admission
+                    if sched.peek_ready() is not None and \
+                            any(slots[s] is None for s in range(B)):
+                        h = 1   # a free slot retries admission per step
+                    for s in active:
+                        h = min(h, int(remaining[s]))  # finish at bound
+                        if paged:                      # growth/ring wrap
+                            h = min(h, pgr.steps_to_boundary(
+                                int(lengths[s])))
+                    h = max(1, h)
+                    ds.sync(page_table, lengths, pending, remaining)
+                    t0 = time.monotonic()
+                    out, p_d, l_d, r_d = self.backend.decode_fused(
+                        ds.pending, ds.lengths, ds.remaining, ds.table,
+                        act, h)
+                    toks_h = np.asarray(out)   # ONE host sync per horizon
+                    _charge_wall(rep, self._dispatched, "fused",
+                                 time.monotonic() - t0)
+                    ds.adopt(p_d, l_d, r_d)
+                    ds.count(dispatches=1, syncs=1)
+                    rep.decode_steps += h
+                    rep.slot_steps += B * h
+                    rep.useful_slot_steps += len(active) * h
+                    step += h - 1   # bookkeeping lands at horizon end
+                    lengths[active] += h
+                    remaining[active] -= h
+                    for s in active:
+                        req = slots[s]
+                        req.generated.extend(int(t) for t in toks_h[:h, s])
+                        pending[s] = int(toks_h[h - 1, s])
+                        if req.done:
+                            finish(s)
+                else:
+                    t0 = time.monotonic()
+                    logits = self.backend.decode(pending, page_table,
+                                                 lengths, act)
+                    _charge_wall(rep, self._dispatched, "decode",
+                                 time.monotonic() - t0)
+                    ds.count(dispatches=1, syncs=1,
+                             upload_bytes=page_table.nbytes)
+                    rep.decode_steps += 1
+                    rep.slot_steps += B    # the batch always runs full
+                    rep.useful_slot_steps += len(active)
+                    lengths[active] += 1
+                    remaining[active] -= 1
+                    toks = self._sample_batch(logits[active])
+                    for i, s in enumerate(active):
+                        req = slots[s]
+                        tok = int(toks[i])
+                        req.generated.append(tok)
+                        pending[s] = tok
+                        if req.done:
+                            finish(s)
                 if paged:
                     rep.peak_live_pages = max(rep.peak_live_pages,
                                               alloc.live_count)
@@ -960,6 +1141,9 @@ class Engine:
             arena.check()
             assert alloc.live_count == 0, "pages leaked past completion"
         rep.preemptions = sched.preemptions
+        rep.device_dispatches = ds.device_dispatches
+        rep.host_syncs = ds.host_syncs
+        rep.page_table_upload_bytes = ds.page_table_upload_bytes
         rep.wall_s = time.monotonic() - t_run
         return rep
 
@@ -1191,8 +1375,12 @@ class PooledEngine:
                 <= self.ecfg.num_pages, \
                 "physical pages exceed the pool budget"
         self.rng = np.random.default_rng(self.ecfg.seed)
+        self._sample_batch = make_batch_sampler(
+            self.rng, self.ecfg.greedy, self.ecfg.temperature)
         self._sample = make_sampler(self.rng, self.ecfg.greedy,
                                     self.ecfg.temperature)
+        self._fused = self.ecfg.greedy and self.ecfg.horizon > 1
+        self._dispatched: set = set()  # jit signatures already compiled
 
     # -- main loop ---------------------------------------------------------
     # The loop is split into start / step_once / finish_run so a caller
@@ -1222,6 +1410,10 @@ class PooledEngine:
                                     np.int32)
         self._lengths = np.zeros((B,), np.int32)
         self._pending = np.zeros((B,), np.int32)
+        self._remaining = np.zeros((B,), np.int32)
+        # one device twin spans every tenant: the fused dispatches chain
+        # through it (model A's donated outputs feed model B's inputs)
+        self._ds = DeviceLoopState(B, e.pager.max_pages_per_seq)
         self._rep = PooledReport(
             name=f"pool/{e.policy}", num_slots=B, policy=e.policy,
             stream=e.stream,
@@ -1296,6 +1488,8 @@ class PooledEngine:
         self._page_table[s, :] = TRASH_PAGE
         self._lengths[s] = 0
         self._pending[s] = 0
+        self._remaining[s] = 0
+        self._ds.touch(s)
         if req.model_id in self._allocs:
             self._allocs[req.model_id].free_owner(req.rid)
         self.backends[req.model_id].release_slot(s)
@@ -1521,11 +1715,16 @@ class PooledEngine:
                 lengths[s] = len(ctx)
                 if req.generated:   # re-admission after preemption
                     pending[s] = req.generated[-1]
+                    self._remaining[s] = (req.max_new_tokens
+                                          - len(req.generated))
+                    self._ds.touch(s)
                 else:
                     assert logits is not None
                     tok = self._sample(logits)
                     req.generated.append(tok)
                     pending[s] = tok
+                    self._remaining[s] = req.max_new_tokens - 1
+                    self._ds.touch(s)
                     rep.model_tokens[req.model_id] += 1
                     if req.done:
                         self._finish(s)
@@ -1600,6 +1799,7 @@ class PooledEngine:
                     self.backends[mid].copy_page(old, new[0])
                     a.free_page(slots[s].rid, old)
                     page_table[s, row_i] = new[0]
+                    self._ds.touch(s)
                     slots[s].cow_copies += 1
                     rep.cow_copies += 1
                     continue
@@ -1615,6 +1815,46 @@ class PooledEngine:
                     continue
                 new = a.alloc(slots[s].rid, 1)
                 page_table[s, row] = new[0]
+                self._ds.touch(s)
+
+            # safe horizon: h > 1 only when no schedulable event —
+            # arrival, admission retry, cold activation, rr switch,
+            # stream/burst accounting, epoch boundary, page boundary,
+            # slot finish — can land mid-horizon, so h fused steps are
+            # step-for-step identical to h per-step iterations
+            h = 1
+            if self._fused:
+                h = e.horizon
+                if e.policy == "round_robin":
+                    h = min(h, max(1, self._rr_left))
+                if pool.pcfg.slab_mode == "bounded" or (
+                        e.stream == "layer" and pool.streaming):
+                    h = 1   # DMA ticks / decode bursts settle per step
+                ready = sched.ready_models()
+                if any(m not in serve for m in ready):
+                    h = 1   # cold tenant retries activation every step
+                if ready and any(r is None for r in slots):
+                    h = 1   # free slot retries admission every step
+                nxt = sched.next_arrival()
+                if nxt is not None:
+                    h = min(h, nxt - self.step)
+                ne = self.arena.next_epoch_step()
+                if ne is not None:      # boundary must land on a step
+                    h = min(h, ne - self.step + 1)
+                for s in range(B):
+                    if slots[s] is None:
+                        continue
+                    h = min(h, int(self._remaining[s]))
+                    if self.backends[slots[s].model_id].paged:
+                        h = min(h, self._pgr[slots[s].model_id]
+                                .steps_to_boundary(int(lengths[s])))
+                h = max(1, h)
+                self._ds.sync(page_table, lengths, pending,
+                              self._remaining)
+            # bookkeeping below (finish steps, arena epoch) sees the
+            # horizon's last step, exactly as the per-step loop would
+            self.step += h - 1
+            self._rr_left -= h - 1
 
             served = 0
             for m in self._active_models():
@@ -1631,31 +1871,64 @@ class PooledEngine:
                     continue
                 act = np.zeros((B,), bool)
                 act[m_slots] = True
-                toks = np.where(act, pending, 0).astype(np.int32)
-                # page ids are tenant-local: blank out other tenants'
-                # rows so this backend never gathers past its pool
-                pt_m = np.where(act[:, None], page_table, TRASH_PAGE)
-                len_m = np.where(act, lengths, 0).astype(np.int32)
-                t0 = time.monotonic()
-                logits = backend.decode(toks, pt_m, len_m, act)
-                rep.decode_wall_s += time.monotonic() - t0
-                lengths[m_slots] += 1
-                served += len(m_slots)
-                for s in m_slots:
-                    req = slots[s]
-                    tok = self._sample(logits[s])
-                    req.generated.append(tok)
-                    pending[s] = tok
-                    rep.model_tokens[m] += 1
-                    if req.done:
-                        self._finish(s)
+                if self._fused:
+                    # tenants chain through the shared device arrays:
+                    # each fused call masks to its own slots (and blanks
+                    # other tenants' table rows on device) and donates
+                    # the loop arrays to the next tenant's call
+                    ds = self._ds
+                    t0 = time.monotonic()
+                    out, p_d, l_d, r_d = backend.decode_fused(
+                        ds.pending, ds.lengths, ds.remaining, ds.table,
+                        act, h)
+                    toks_h = np.asarray(out)   # one host sync/tenant
+                    _charge_wall(rep, self._dispatched, ("fused", m),
+                                 time.monotonic() - t0)
+                    ds.adopt(p_d, l_d, r_d)
+                    ds.count(dispatches=1, syncs=1)
+                    lengths[m_slots] += h
+                    self._remaining[m_slots] -= h
+                    served += len(m_slots)
+                    for s in m_slots:
+                        req = slots[s]
+                        req.generated.extend(
+                            int(t) for t in toks_h[:h, s])
+                        pending[s] = int(toks_h[h - 1, s])
+                        rep.model_tokens[m] += h
+                        if req.done:
+                            self._finish(s)
+                else:
+                    toks = np.where(act, pending, 0).astype(np.int32)
+                    # page ids are tenant-local: blank out other
+                    # tenants' rows so this backend never gathers past
+                    # its pool
+                    pt_m = np.where(act[:, None], page_table, TRASH_PAGE)
+                    len_m = np.where(act, lengths, 0).astype(np.int32)
+                    t0 = time.monotonic()
+                    logits = backend.decode(toks, pt_m, len_m, act)
+                    _charge_wall(rep, self._dispatched, ("decode", m),
+                                 time.monotonic() - t0)
+                    self._ds.count(dispatches=1, syncs=1,
+                                   upload_bytes=page_table.nbytes)
+                    lengths[m_slots] += 1
+                    self._remaining[m_slots] -= 1
+                    served += len(m_slots)
+                    stoks = self._sample_batch(logits[m_slots])
+                    for i, s in enumerate(m_slots):
+                        req = slots[s]
+                        tok = int(stoks[i])
+                        req.generated.append(tok)
+                        pending[s] = tok
+                        rep.model_tokens[m] += 1
+                        if req.done:
+                            self._finish(s)
                 # bounded slab: queue this burst's re-stream bytes
                 pool.note_decode_burst(m)
             if served:
                 did_compute = True
-                rep.decode_steps += 1
-                rep.slot_steps += B
-                rep.useful_slot_steps += served
+                rep.decode_steps += h
+                rep.slot_steps += B * h
+                rep.useful_slot_steps += served * h
             rep.peak_live_pages = max(
                 rep.peak_live_pages,
                 sum(a.live_count for a in allocs.values()))
@@ -1737,6 +2010,9 @@ class PooledEngine:
         rep.deferred_activations = pool.deferred_activations
         rep.repartitions = self.arena.repartitions
         rep.pages_moved = self.arena.pages_moved
+        rep.device_dispatches = self._ds.device_dispatches
+        rep.host_syncs = self._ds.host_syncs
+        rep.page_table_upload_bytes = self._ds.page_table_upload_bytes
         rep.wall_s = time.monotonic() - self._t_run
         return rep
 
@@ -1772,7 +2048,9 @@ def run_static(cfg, params, requests: list[Request], *, num_slots: int = 8,
                           static_argnames=("cache_len",))
     decode_jit = jax.jit(partial(api.decode_step, cfg),
                          donate_argnums=(1,))
-    sample = make_sampler(np.random.default_rng(seed), greedy, temperature)
+    sample_batch = make_batch_sampler(np.random.default_rng(seed), greedy,
+                                      temperature)
+    dispatched: set = set()            # decode signatures already traced
 
     t_run = time.monotonic()
     step = 0
@@ -1797,10 +2075,10 @@ def run_static(cfg, params, requests: list[Request], *, num_slots: int = 8,
                 np.stack([r.extras[k] for r in group]))
                 for k in extra_keys})
         logits, state = prefill_jit(params, batch, cache_len=cache_len)
-        logits = np.asarray(logits)
+        toks0 = sample_batch(np.asarray(logits))
         for b, r in enumerate(group):
             r.admitted_step = step
-            r.generated.append(sample(logits[b]))
+            r.generated.append(int(toks0[b]))
         rep.prefill_calls += 1
         rep.prefill_tokens += plen * len(group)   # padded compute is paid
         rep.cache_bytes_alloc = max(rep.cache_bytes_alloc,
@@ -1811,13 +2089,16 @@ def run_static(cfg, params, requests: list[Request], *, num_slots: int = 8,
             t0 = time.monotonic()
             logits, state = decode_jit(params, state, tok)
             logits = np.asarray(logits)
-            rep.decode_wall_s += time.monotonic() - t0
+            _charge_wall(rep, dispatched,
+                         ("static", cache_len, len(group)),
+                         time.monotonic() - t0)
             rep.decode_steps += 1
             rep.slot_steps += len(group)
             step += 1
+            toks = sample_batch(logits)
             for b, r in enumerate(group):
                 if not r.done:
-                    r.generated.append(sample(logits[b]))
+                    r.generated.append(int(toks[b]))
                     rep.useful_slot_steps += 1
         del state
         for r in group:

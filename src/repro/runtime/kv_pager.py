@@ -58,6 +58,16 @@ class PagerConfig:
         """Pages needed to hold ``tokens`` cache entries."""
         return -(-tokens // self.page_size)
 
+    def steps_to_boundary(self, length: int) -> int:
+        """Decode steps a slot at context ``length`` can take before the
+        next write needs a page not yet in its table. Called after the
+        engine's growth pass, so a page-aligned length means a fresh
+        page was just mapped (a full page of headroom); this is the
+        per-slot term of the fused-decode horizon, and it covers the
+        ring backends too — a ring recycles rows exactly at page
+        boundaries, so wrap distance and growth distance coincide."""
+        return self.page_size - (length % self.page_size)
+
     def can_ever_fit(self, prompt_len: int, max_new_tokens: int,
                      context_len: int, num_pages: int) -> bool:
         """Admission feasibility shared by every engine: the cache at

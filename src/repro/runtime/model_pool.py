@@ -35,7 +35,7 @@ import statistics
 from ..planner.residency import (QUANT_MODES, double_buffer_bytes,
                                  layer_schedule, quant_bytes,
                                  weight_inventory)
-from .dma import DmaChannel
+from .dma import DeviceDmaChannel, DmaChannel
 
 KiB = 1 << 10
 
@@ -137,6 +137,10 @@ class PoolConfig:
     param_bytes: int = 2               # bf16 serving copies
     slab_mode: str = "full"            # | "bounded"
     quant: str = "off"                 # | "int8" | "int4" | "auto"
+    # route the stream clock through DeviceDmaChannel: every tick issues
+    # a real async double-buffered device write, so DMA/compute overlap
+    # is measured (is_ready at the next tick) instead of only modeled
+    device_dma: bool = False
 
     def __post_init__(self):
         assert self.hbm_budget_bytes >= 0
@@ -286,7 +290,9 @@ class ModelPool:
         # runtime state; the serial DMA (FIFO, clock, reload accounting)
         # lives in one DmaChannel — the streaming methods below are thin
         # delegates kept as the stable WeightStream surface
-        self.dma = DmaChannel(pcfg.reload_bytes_per_step)
+        self.dma = (DeviceDmaChannel(pcfg.reload_bytes_per_step)
+                    if pcfg.device_dma
+                    else DmaChannel(pcfg.reload_bytes_per_step))
         self._hot_since: dict[str, int] = {}   # non-resident hot models
         self.slab_used = 0
         self.deferred_activations = 0

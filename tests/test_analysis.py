@@ -266,6 +266,99 @@ def test_ra103_nested_shadowing_param_is_fine():
     assert "RA103" not in _rules(src)
 
 
+# --- RA105: per-token host sync in the serving loop ----------------------------
+
+# the pre-horizon-fusion engine idiom: one jitted decode dispatch, then a
+# Python loop over slots materializing the still-async result per slot
+RA105_BAD = """
+    import jax
+    import numpy as np
+
+    class Backend:
+        def __init__(self, decode):
+            self._decode = jax.jit(decode, donate_argnums=(1,))
+
+        def run(self, params, state, toks, slots):
+            logits, state = self._decode(params, state, toks)
+            outs = []
+            for s in slots:
+                outs.append(int(np.asarray(logits[s]).argmax()))
+            return outs, state
+"""
+
+# dispatch INSIDE the loop is the per-step baseline (one dispatch, one
+# sync per iteration) — the best a non-fused loop can do; exempt
+RA105_GOOD_DISPATCH_IN_LOOP = """
+    import jax
+    import numpy as np
+
+    class Backend:
+        def __init__(self, decode):
+            self._decode = jax.jit(decode, donate_argnums=(1,))
+
+        def run(self, params, state, toks):
+            outs = []
+            for t in toks:
+                logits, state = self._decode(params, state, t)
+                outs.append(int(np.asarray(logits).argmax()))
+            return outs, state
+"""
+
+# materialize the whole batch once, then loop over host rows — the fix
+RA105_GOOD_BATCHED = """
+    import jax
+    import numpy as np
+
+    class Backend:
+        def __init__(self, decode):
+            self._decode = jax.jit(decode, donate_argnums=(1,))
+
+        def run(self, params, state, toks, slots):
+            logits, state = self._decode(params, state, toks)
+            rows = np.asarray(logits)
+            outs = []
+            for s in slots:
+                outs.append(int(rows[s].argmax()))
+            return outs, state
+"""
+
+RUNTIME_PATH = "src/repro/runtime/legacy_engine.py"
+
+
+def test_ra105_fires_on_per_slot_materialization():
+    assert "RA105" in _rules(RA105_BAD, name=RUNTIME_PATH)
+
+
+def test_ra105_item_method_counts_as_sync():
+    src = RA105_BAD.replace("int(np.asarray(logits[s]).argmax())",
+                            "logits[s].item()")
+    assert "RA105" in _rules(src, name=RUNTIME_PATH)
+
+
+def test_ra105_scoped_to_runtime_modules():
+    assert "RA105" not in _rules(RA105_BAD,
+                                 name="src/repro/models/legacy.py")
+
+
+def test_ra105_dispatch_inside_loop_is_fine():
+    assert "RA105" not in _rules(RA105_GOOD_DISPATCH_IN_LOOP,
+                                 name=RUNTIME_PATH)
+
+
+def test_ra105_batched_materialization_is_fine():
+    assert "RA105" not in _rules(RA105_GOOD_BATCHED, name=RUNTIME_PATH)
+
+
+def test_ra105_one_finding_per_loop_and_name():
+    src = RA105_BAD.replace(
+        "outs.append(int(np.asarray(logits[s]).argmax()))",
+        "outs.append(int(np.asarray(logits[s]).argmax()))\n"
+        "                outs.append(float(logits[s].max()))")
+    found = [f for f in _findings(src, name=RUNTIME_PATH)
+             if f.rule == "RA105"]
+    assert len(found) == 1
+
+
 # --- RA201: donation after use -------------------------------------------------
 
 RA201_BAD = """

@@ -158,3 +158,75 @@ def test_supervisor_degrades_shared_channel_during_fault_window(tmp_path):
     # full clock outside the window, base//4 during steps [2, 5)
     assert seen == [400, 400, 100, 100, 100, 400, 400, 400]
     ch.check()
+
+
+# --- DeviceDmaChannel: real double-buffered copies --------------------------------
+
+
+def test_device_channel_ledger_matches_modeled_channel():
+    """The device channel inherits the modeled ledger unchanged: every
+    tick moves exactly the bytes the plain channel moves, and each
+    byte-moving tick issues one real staged device copy."""
+    from repro.runtime import DeviceDmaChannel
+    ch, dev = DmaChannel(100), DeviceDmaChannel(100)
+    for c in (ch, dev):
+        c.enqueue("a", 250)
+        c.check()
+    for _ in range(4):
+        assert ch.tick() == dev.tick()
+    ch.check()
+    dev.check()
+    assert dev.copies_issued == 3              # 100+100+50, then idle
+    assert dev.tick() == 0                     # idle tick stages nothing
+    assert dev.copies_issued == 3
+    assert dev.measured_stall_steps <= dev.copies_issued
+    assert dev.measured_wait_s >= 0.0
+    assert dev.queue == ch.queue == ()
+
+
+def test_device_channel_reset_clears_measured_state():
+    from repro.runtime import DeviceDmaChannel
+    dev = DeviceDmaChannel(64, slab_bytes=32)
+    dev.enqueue("a", 200)
+    dev.tick()
+    dev.tick()
+    assert dev.copies_issued == 2
+    dev.reset()
+    dev.check()
+    assert dev.copies_issued == 0
+    assert dev.measured_stall_steps == 0 and dev.measured_wait_s == 0.0
+    assert dev.queue == ()
+    dev.enqueue("b", 10)                       # usable after reset
+    assert dev.tick() == 10 and dev.copies_issued == 1
+    dev.check()
+
+
+def test_device_channel_inherits_mutator_surface():
+    """cancel/charge/degrade/set_clock behave exactly as on the modeled
+    channel — the device path adds measurement, never policy."""
+    from repro.runtime import DeviceDmaChannel
+    dev = DeviceDmaChannel(10)
+    dev.enqueue("a", 25)
+    dev.enqueue("b", 5)
+    dev.tick()
+    assert dev.cancel("a") == 15
+    dev.charge_reload(100)
+    dev.charge_restream(50)
+    dev.degrade(2.0)
+    assert dev.bytes_per_step == 5
+    dev.set_clock(20)
+    assert dev.bytes_per_step == 10
+    dev.degrade(1.0)
+    assert dev.bytes_per_step == 20
+    dev.check()
+
+
+def test_pool_device_dma_flag_swaps_channel():
+    from repro.runtime import DeviceDmaChannel
+    pool = ModelPool(PoolConfig(hbm_budget_bytes=700 * KiB,
+                                slab_frac=0.55,
+                                reload_bytes_per_step=32 * KiB,
+                                hysteresis_steps=8, device_dma=True))
+    assert isinstance(pool.dma, DeviceDmaChannel)
+    assert isinstance(pool, WeightStream)
+    pool.dma.check()
